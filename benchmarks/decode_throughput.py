@@ -1,0 +1,59 @@
+"""Parallel-decoding scaling (paper §IV-C): multi-stream LUT decoder
+throughput vs number of lanes, plus serial-baseline comparison.
+
+The paper's claim: segmentation makes Huffman decoding embarrassingly
+parallel, so wall-time scales with worker count.  Here the "workers" are
+vector lanes of the lock-step decoder; we sweep lane counts and measure
+symbols/s on this host, and verify the Pallas kernel (interpret mode) decodes
+identical output.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.bitstream import (decode_serial, decode_streams,
+                                  encode_symbols, pack_streams)
+from repro.core.entropy import HuffmanTable
+
+
+def run(n_symbols=200_000, verbose=True):
+    rng = np.random.default_rng(0)
+    syms = np.clip(rng.normal(128, 20, size=n_symbols), 0,
+                   255).astype(np.uint8)
+    table = HuffmanTable(np.bincount(syms, minlength=256), max_len=12)
+
+    rows = []
+    # serial baseline
+    stream, _ = encode_symbols(syms[:20_000], table.codes, table.lengths)
+    t0 = time.perf_counter()
+    out = decode_serial(stream, 20_000, table.lut_sym, table.lut_len, 12)
+    serial_rate = 20_000 / (time.perf_counter() - t0)
+    assert (out == syms[:20_000]).all()
+    rows.append(dict(lanes=1, mode="bit-serial", sym_per_s=serial_rate))
+
+    for lanes in (8, 32, 128, 512):
+        chunks = np.array_split(syms, lanes)
+        streams = [encode_symbols(c, table.codes, table.lengths)[0]
+                   for c in chunks]
+        mat, _ = pack_streams(streams)
+        counts = np.array([len(c) for c in chunks], np.int64)
+        t0 = time.perf_counter()
+        out = decode_streams(mat, counts, table.lut_sym, table.lut_len, 12)
+        dt = time.perf_counter() - t0
+        got = np.concatenate([out[i, :c] for i, c in enumerate(counts)])
+        assert (got == syms).all()
+        rows.append(dict(lanes=lanes, mode="multi-stream",
+                         sym_per_s=n_symbols / dt))
+    if verbose:
+        print(f"{'lanes':>6} {'mode':>12} {'Msym/s':>8} {'speedup':>8}")
+        base = rows[0]["sym_per_s"]
+        for r in rows:
+            print(f"{r['lanes']:>6} {r['mode']:>12} "
+                  f"{r['sym_per_s']/1e6:>8.2f} {r['sym_per_s']/base:>7.1f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,100 @@
+"""Inject the dry-run + roofline tables into EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m benchmarks.fill_experiments \
+        results/dryrun_baseline.json EXPERIMENTS.md
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+HBM_BUDGET = 16 * 1024**3
+
+
+def gib(x):
+    return x / 2**30
+
+
+def dryrun_table(cells):
+    lines = [
+        "| arch | shape | mesh | kind | args GiB | temp GiB | fits 16GiB | "
+        "lower+compile s |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for d in cells:
+        if "skipped" in d:
+            lines.append(f"| {d['arch']} | {d['shape']} | {d.get('mesh','-')} "
+                         f"| — | — | — | n/a (skip) | — |")
+            continue
+        if "error" in d:
+            lines.append(f"| {d['arch']} | {d['shape']} | {d['mesh']} | — | — "
+                         f"| — | ERROR | — |")
+            continue
+        ma = d["memory_analysis"]
+        args, temp = ma["argument_size"], ma["temp_size"]
+        fits = "yes" if args + temp <= HBM_BUDGET else "OVER*"
+        t = d.get("lower_s", 0) + d.get("compile_s", 0)
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+            f"{d.get('kind','?')} | {gib(args):.2f} | {gib(temp):.2f} | "
+            f"{fits} | {t:.0f} |")
+    return "\n".join(lines)
+
+
+def roofline_table(cells):
+    lines = [
+        "| arch | shape | compute ms | memory ms | collective ms | dominant |"
+        " model/HLO flops | roofline frac | what would move the dominant term"
+        " |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    notes = {
+        ("train", "collective"): "less wire: bf16 cotangent ARs, fewer FSDP"
+        " re-gathers (larger microbatch), SP reduce-scatter",
+        ("train", "compute"): "remat policy (save attn outs), bf16 scores",
+        ("train", "memory"): "larger microbatches / carry offload",
+        ("decode", "collective"): "weight-stationary serving (move KiB"
+        " activations, not GB weights) — hillclimb H1",
+        ("decode", "memory"): "int4 weights (QT4) halve the weight stream —"
+        " hillclimb H3; KV cache quantization next",
+        ("decode", "compute"): "n/a at these sizes",
+        ("prefill", "collective"): "bf16 collectives; sequence-parallel"
+        " boundaries",
+        ("prefill", "compute"): "q_block tuning; fused attention kernel",
+        ("prefill", "memory"): "KV write combining",
+    }
+    for d in cells:
+        if "skipped" in d or "error" in d or d.get("compile_only"):
+            continue
+        if d.get("mesh") != "16x16":
+            continue
+        frac = d["model_flops"] / max(d["chips"], 1) / 197e12 \
+            / max(d["step_s"], 1e-30)
+        note = notes.get((d["kind"], d["dominant"]), "")
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['compute_s']*1e3:.1f} | "
+            f"{d['memory_s']*1e3:.2f} | {d['collective_s']*1e3:.1f} | "
+            f"{d['dominant']} | {d['flops_ratio']:.2f} | "
+            f"{min(frac,1.0):.3f} | {note} |")
+    return "\n".join(lines)
+
+
+def main(json_path, md_path):
+    with open(json_path) as f:
+        cells = json.load(f)
+    with open(md_path) as f:
+        md = f.read()
+    md = md.replace("<!-- DRYRUN_TABLE -->",
+                    dryrun_table(cells) +
+                    "\n\n`*` OVER cells are analyzed in the per-cell notes — "
+                    "the dominant component is XLA-CPU's f32 materialization "
+                    "of bf16 dot operands (absent on TPU); see §Methodology.")
+    md = md.replace("<!-- ROOFLINE_TABLE -->", roofline_table(cells))
+    with open(md_path, "w") as f:
+        f.write(md)
+    print(f"updated {md_path} from {json_path} ({len(cells)} cells)")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_baseline.json",
+         sys.argv[2] if len(sys.argv) > 2 else "EXPERIMENTS.md")

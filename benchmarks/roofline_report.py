@@ -1,0 +1,49 @@
+"""Render the §Roofline table from dry-run JSON results.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report results/dryrun_baseline.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_row(d):
+    if "skipped" in d:
+        return (f"| {d['arch']} | {d['shape']} | {d.get('mesh','—')} | — | — "
+                f"| — | — | — | skip: sub-quadratic only |")
+    if "error" in d:
+        return (f"| {d['arch']} | {d['shape']} | {d.get('mesh','?')} | — | — "
+                f"| — | — | — | ERROR |")
+    if d.get("compile_only"):
+        ma = d["memory_analysis"]
+        return (f"| {d['arch']} | {d['shape']} | {d['mesh']} | — | — | — | "
+                f"compile+memory OK ({(ma['argument_size']+ma['temp_size'])/2**30:.1f} GiB) "
+                f"| — | — |")
+    frac = d["model_flops"] / max(d["chips"], 1) / 197e12 / max(d["step_s"], 1e-30)
+    return ("| {arch} | {shape} | {mesh} | {c:.1f} | {m:.2f} | {w:.1f} | "
+            "{dom} | {ratio:.2f} | {frac:.3f} |").format(
+        arch=d["arch"], shape=d["shape"], mesh=d["mesh"],
+        c=d["compute_s"] * 1e3, m=d["memory_s"] * 1e3,
+        w=d["collective_s"] * 1e3, dom=d["dominant"],
+        ratio=d["flops_ratio"], frac=min(frac, 1.0))
+
+
+def run(path="results/dryrun_baseline.json", verbose=True):
+    with open(path) as f:
+        cells = json.load(f)
+    lines = [
+        "| arch | shape | mesh | compute ms | memory ms | collective ms | "
+        "dominant | model/HLO flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for d in cells:
+        lines.append(fmt_row(d))
+    table = "\n".join(lines)
+    if verbose:
+        print(table)
+    return table
+
+
+if __name__ == "__main__":
+    run(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_baseline.json")

@@ -1,0 +1,46 @@
+"""Benchmark entry point: one harness per paper table/figure.
+
+  table1  — storage / effective bits (paper Table I)
+  table2  — latency breakdown with/without Huffman (paper Table II)
+  decode  — parallel-decoding scaling (paper §IV-C / Fig. 3)
+  roofline — render §Roofline from dry-run JSON (if present)
+
+``python -m benchmarks.run [name ...]`` runs all by default.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    which = (argv or sys.argv[1:]) or ["table1", "table2", "decode",
+                                       "roofline"]
+    from . import decode_throughput, table1_storage, table2_latency
+
+    if "table1" in which:
+        print("== Table I analogue: storage & effective bits ==")
+        table1_storage.run()
+        print()
+    if "table2" in which:
+        print("== Table II analogue: latency breakdown w/ and w/o Huffman ==")
+        table2_latency.run()
+        print()
+    if "decode" in which:
+        print("== Parallel decode scaling (paper §IV-C) ==")
+        decode_throughput.run()
+        print()
+    if "roofline" in which:
+        path = "results/dryrun_baseline.json"
+        if os.path.exists(path):
+            print("== Roofline (from dry-run) ==")
+            from . import roofline_report
+            roofline_report.run(path)
+        else:
+            print(f"(skip roofline: {path} not found — run "
+                  f"`python -m repro.launch.dryrun --all --out {path}`)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,69 @@
+"""Paper Table I analogue: effective bits + storage reduction per model.
+
+The paper reports fp16 / uint8 / uint4 effective bits for three edge LLMs
+whose TRAINED weights have peaky (low-entropy) distributions.  Random-init
+Gaussian weights are nearly max-entropy on the quantized grid, so to
+reproduce the paper's regime we synthesize trained-LLM-like weights
+(Student-t heavy tails, layer-dependent scale — matching the paper's Fig. 4
+histograms) for each REDUCED assigned architecture, then run the real
+pipeline: mixed quantization -> global Huffman table -> encoded container.
+
+Reported per (model x bits): entropy bound, effective bits, % below the
+quantized size, % below fp16 — the same columns as Table I.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.configs import registry
+from repro.core.quant import Granularity
+from repro.core.store import CompressedModel
+from repro.models import api
+
+
+def trained_like_params(cfg, seed: int = 0) -> Dict[str, np.ndarray]:
+    """Synthesize weights with trained-LLM statistics: heavy-tailed, mostly
+    near zero (Fig. 4 of the paper), per-layer scale variation."""
+    rng = np.random.default_rng(seed)
+    sch = api.build(cfg).schema(cfg)
+    out = {}
+    for i, (name, spec) in enumerate(sorted(sch.items())):
+        scale = 0.02 * (0.5 + rng.random())
+        w = rng.standard_t(df=2.2, size=spec.shape) * scale
+        out[name] = w.astype(np.float32)
+    return out
+
+
+def run(models=("qwen3-1.7b", "glm4-9b", "mamba2-370m"), verbose=True):
+    rows = []
+    for name in models:
+        cfg = registry.reduced(registry.get(name))
+        params = trained_like_params(cfg)
+        n_params = sum(int(np.prod(v.shape)) for v in params.values())
+        for bits in (8, 4):
+            t0 = time.perf_counter()
+            cm = CompressedModel.compress(params, bits=bits,
+                                          granularity=Granularity.PER_CHANNEL)
+            st = cm.stats()
+            rows.append(dict(
+                model=name, bits=bits, params=n_params,
+                entropy=st.entropy_bits, effective_bits=st.effective_bits,
+                vs_quant=st.reduction_vs_quant * 100,
+                vs_fp16=st.reduction_vs_fp16 * 100,
+                encode_s=time.perf_counter() - t0,
+            ))
+    if verbose:
+        print(f"{'model':22s} {'bits':>4} {'entropy':>8} {'eff.bits':>9} "
+              f"{'-vs-quant%':>10} {'-vs-fp16%':>9}")
+        for r in rows:
+            print(f"{r['model']:22s} {r['bits']:>4} {r['entropy']:>8.2f} "
+                  f"{r['effective_bits']:>9.2f} {r['vs_quant']:>10.1f} "
+                  f"{r['vs_fp16']:>9.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

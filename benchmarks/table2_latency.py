@@ -1,0 +1,87 @@
+"""Paper Table II analogue: latency breakdown with / without Huffman.
+
+The paper measures (on a Jetson): pre-fill, per-token generation, one-time
+parallel decode, first-token latency — for uint8 and uint4, with and without
+Huffman.  This harness measures the same decomposition on THIS host for a
+reduced model, and additionally derives the TPU-roofline projection of the
+decode-phase speedup (the paper's 1.43x potential / 1.32x measured for
+uint8), using the bytes-per-parameter ratio, which is hardware-independent.
+
+Stages measured:
+  parallel_decode_s — one-time Huffman decode of all weights (amortized)
+  prefill_s         — prompt pass
+  per_token_s       — steady-state decode step
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core.quant import Granularity
+from repro.core.store import CompressedModel
+from repro.models import api
+from repro.serving import engine
+from .table1_storage import trained_like_params
+
+
+def _measure(cfg, serve_params, B=2, prompt_len=32, gen=8):
+    sc = engine.ServeConfig(max_len=prompt_len + gen)
+    eng = engine.Engine(cfg, serve_params, sc)
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (B, prompt_len)), jnp.int32)
+    # warmup (compile)
+    out, m0 = eng.generate(prompt, gen, echo_metrics=True)
+    out, m = eng.generate(prompt, gen, echo_metrics=True)
+    return {"prefill_s": m["prefill_s"],
+            "per_token_s": m["decode_s"] / max(gen - 1, 1),
+            "tok_per_s": m["tok_per_s"]}
+
+
+def run(model="qwen3-1.7b", verbose=True):
+    cfg = registry.reduced(registry.get(model))
+    params = trained_like_params(cfg)
+    rows = []
+    for bits in (8, 4):
+        cm = CompressedModel.compress(params, bits=bits,
+                                      granularity=Granularity.PER_CHANNEL)
+        st = cm.stats()
+
+        t0 = time.perf_counter()
+        qt_params = engine.load_params_from_compressed(cm, quantized=True)
+        jax.block_until_ready(jax.tree.leaves(qt_params))
+        decode_s = time.perf_counter() - t0
+
+        with_h = _measure(cfg, qt_params)
+        dense = engine.load_params_from_compressed(cm, quantized=False)
+        without_h = _measure(cfg, dense)
+
+        # TPU-roofline projection for the memory-bound decode phase:
+        # bytes/param ratio fp16 -> int{8,4} residency
+        bytes_ratio = {8: 1.0 / 2.0, 4: 0.5 / 2.0}[bits]
+        rows.append(dict(
+            model=model, bits=bits, effective_bits=st.effective_bits,
+            parallel_decode_s=decode_s,
+            prefill_wo=without_h["prefill_s"], prefill_w=with_h["prefill_s"],
+            tok_wo=without_h["per_token_s"], tok_w=with_h["per_token_s"],
+            first_token_wo=without_h["prefill_s"],
+            first_token_w=with_h["prefill_s"] + decode_s,
+            tpu_decode_speedup_bound=1.0 / bytes_ratio,
+        ))
+    if verbose:
+        print(f"{'bits':>4} {'eff.bits':>8} {'decode(1x)':>10} "
+              f"{'prefill w/o':>11} {'prefill w/':>10} {'tok w/o':>9} "
+              f"{'tok w/':>9} {'TPU bound':>9}")
+        for r in rows:
+            print(f"{r['bits']:>4} {r['effective_bits']:>8.2f} "
+                  f"{r['parallel_decode_s']:>10.2f} {r['prefill_wo']:>11.3f} "
+                  f"{r['prefill_w']:>10.3f} {r['tok_wo']:>9.4f} "
+                  f"{r['tok_w']:>9.4f} {r['tpu_decode_speedup_bound']:>8.1f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Batched-request serving with EntroLLM weights — uint8 vs uint4 vs dense.
+
+The paper's deployment story end-to-end: one compressed container on "disk",
+one parallel decode at engine start, then batched generation with integer
+weights resident in memory and dequantization fused into every matmul.
+Compares greedy outputs across weight formats (they should mostly agree with
+the dense-served quantized model — identical math, different residency) and
+prints the bandwidth-roofline projection for a TPU v5e.
+
+    PYTHONPATH=src python examples/compress_serve.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core.quant import Granularity
+from repro.core.store import CompressedModel
+from repro.models import api
+from repro.serving import engine
+
+ARCH = "qwen3-1.7b"
+BATCH, PROMPT_LEN, GEN = 4, 24, 12
+
+cfg = registry.reduced(registry.get(ARCH))
+rng = np.random.default_rng(0)
+sch = api.build(cfg).schema(cfg)
+params = {n: (rng.standard_t(2.5, size=s.shape) * 0.02).astype(np.float32)
+          for n, s in sch.items()}
+
+prompts = jnp.asarray(rng.integers(0, cfg.vocab, (BATCH, PROMPT_LEN)),
+                      jnp.int32)
+
+for bits in (8, 4):
+    cm = CompressedModel.compress(params, bits=bits,
+                                  granularity=Granularity.PER_CHANNEL)
+    st = cm.stats()
+
+    t0 = time.perf_counter()
+    qt = engine.load_params_from_compressed(cm, quantized=True)
+    t_decode = time.perf_counter() - t0
+    dense = engine.load_params_from_compressed(cm, quantized=False)
+
+    sc = engine.ServeConfig(max_len=PROMPT_LEN + GEN)
+    out_q, mq = engine.Engine(cfg, qt, sc).generate(prompts, GEN,
+                                                    echo_metrics=True)
+    out_d, md = engine.Engine(cfg, dense, sc).generate(prompts, GEN,
+                                                       echo_metrics=True)
+    agree = float((np.asarray(out_q) == np.asarray(out_d)).mean())
+
+    hbm_ratio = {8: 2.0, 4: 4.0}[bits]     # fp16 bytes / int bytes
+    print(f"== uint{bits} ==")
+    print(f"  effective bits {st.effective_bits:.2f} "
+          f"(storage -{st.reduction_vs_fp16*100:.0f}% vs fp16); "
+          f"one-time parallel decode {t_decode:.2f}s")
+    print(f"  int-resident serving: {mq['tok_per_s']:.1f} tok/s | "
+          f"dense serving: {md['tok_per_s']:.1f} tok/s (CPU has no "
+          f"low-precision bandwidth win; TPU decode-phase bound: "
+          f"{hbm_ratio:.0f}x fewer weight bytes)")
+    print(f"  greedy-token agreement int vs dense: {agree*100:.0f}%")
+    print(f"  sample: {np.asarray(out_q[0])[:8]}")

@@ -1,0 +1,72 @@
+"""Fault-tolerance drill: crash mid-run, restore, verify bit-exact resume.
+
+Simulates the failure model of a 1000-node run on one host:
+  1. train N steps with async checkpointing;
+  2. "crash" (drop all state);
+  3. restore the latest committed checkpoint onto a (potentially different)
+     device layout;
+  4. continue — final weights must equal an uninterrupted run bit-for-bit,
+     because the data pipeline is a pure function of the step index;
+  5. inject a NaN loss and watch the watchdog roll back.
+
+    PYTHONPATH=src python examples/fault_tolerant_train.py
+"""
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer, CheckpointConfig
+from repro.configs import registry
+from repro.data.pipeline import DataConfig, SyntheticSource
+from repro.distributed.fault_tolerance import NanWatchdog
+from repro.models import api
+from repro.training import optimizer as opt, train_loop
+
+cfg = registry.reduced(registry.get("stablelm-12b"))
+mod = api.build(cfg)
+tc = train_loop.TrainConfig(opt=opt.AdamWConfig(
+    schedule=opt.Schedule(base_lr=1e-3, warmup_steps=2, total_steps=24)))
+src = SyntheticSource(DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8,
+                                 seed=0))
+step_fn = jax.jit(train_loop.make_train_step(cfg, tc))
+
+# --- reference: uninterrupted 12-step run --------------------------------
+p = mod.init(cfg, jax.random.PRNGKey(0))
+s = opt.init_state(tc.opt, p)
+for i in range(12):
+    p, s, m = step_fn(p, s, src.batch(i))
+ref = {k: np.asarray(v, np.float32) for k, v in p.items()}
+print(f"reference run: 12 steps, final loss {float(m['loss']):.4f}")
+
+# --- crash at step 7, restore, resume ------------------------------------
+with tempfile.TemporaryDirectory() as d:
+    ck = Checkpointer(CheckpointConfig(root=d, keep=2))
+    p1 = mod.init(cfg, jax.random.PRNGKey(0))
+    s1 = opt.init_state(tc.opt, p1)
+    for i in range(7):
+        p1, s1, _ = step_fn(p1, s1, src.batch(i))
+        if (i + 1) % 3 == 0:
+            ck.save_async(i + 1, (p1, s1))
+    ck.wait()
+    print(f"crash at step 7; latest committed checkpoint: step "
+          f"{ck.latest_step()}")
+    del p1, s1                                     # the crash
+
+    template = (mod.init(cfg, jax.random.PRNGKey(0)),
+                opt.init_state(tc.opt, mod.init(cfg, jax.random.PRNGKey(0))))
+    start, (p2, s2) = ck.restore(like=template)
+    print(f"restored at step {start}; replaying the data stream from there")
+    for i in range(start, 12):
+        p2, s2, m = step_fn(p2, s2, src.batch(i))
+
+    drift = max(float(np.abs(ref[k] - np.asarray(p2[k], np.float32)).max())
+                for k in ref)
+    print(f"resume drift vs uninterrupted run: {drift:.2e} "
+          f"({'BIT-EXACT' if drift == 0 else 'nonzero'})")
+
+    # --- NaN watchdog drill ----------------------------------------------
+    wd = NanWatchdog(ck, template)
+    rolled = wd(99, p2, s2, {"loss": float("nan"), "grad_norm": 1.0})
+    print(f"NaN injected at step 99 -> watchdog rollback to step "
+          f"{ck.latest_step()}: {'OK' if rolled is not None else 'FAILED'}")

@@ -1,0 +1,11 @@
+"""EntroLLM core: mixed quantization + global Huffman coding + parallel decoding."""
+from . import bitstream, decode_jax, entropy, quant, segmentation, store
+from .entropy import HuffmanTable
+from .quant import Granularity, QuantizedTensor, Scheme, dequantize, quantize
+from .store import CompressedModel, CompressionStats
+
+__all__ = [
+    "bitstream", "decode_jax", "entropy", "quant", "segmentation", "store",
+    "HuffmanTable", "Granularity", "QuantizedTensor", "Scheme",
+    "dequantize", "quantize", "CompressedModel", "CompressionStats",
+]

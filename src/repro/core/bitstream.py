@@ -1,0 +1,103 @@
+"""Bit-level encode / decode of Huffman symbol streams.
+
+Layout: MSB-first bit order inside a byte stream (matches ``np.packbits``), each
+segment's stream byte-aligned and padded with >= 4 guard bytes so a decoder can always
+load a 32-bit window.
+
+Decoding is **multi-stream**: N independent segments advance in lock-step, one symbol
+per iteration, via a single gather into the canonical-code LUT.  This is the TPU-native
+re-interpretation of the paper's thread-parallel decoding (§III-C): the paper gives each
+CPU thread one segment; we give each *vector lane* one segment (numpy / jnp / Pallas all
+share this structure).  Because segments hold a fixed number of SYMBOLS (not bits), every
+lane finishes in exactly the same number of iterations — the LUT decoder is perfectly
+load-balanced by construction, which subsumes the paper's shuffling heuristic (that
+heuristic targets bit-serial decoders whose per-segment time varies with encoded bits).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+GUARD_BYTES = 4
+
+
+def encode_symbols(symbols: np.ndarray, codes: np.ndarray, lengths: np.ndarray
+                   ) -> Tuple[np.ndarray, int]:
+    """Vectorized Huffman encode of a flat uint8 symbol array.
+
+    Returns (packed uint8 stream with guard padding, total bits).
+    """
+    symbols = symbols.reshape(-1)
+    if symbols.size == 0:
+        return np.zeros(GUARD_BYTES, dtype=np.uint8), 0
+    lens = lengths[symbols].astype(np.int64)
+    offs = np.concatenate([[0], np.cumsum(lens)])
+    total = int(offs[-1])
+    # bit i belongs to symbol reps[i], at position bitpos[i] within its code (MSB first)
+    reps = np.repeat(np.arange(symbols.size), lens)
+    bitpos = np.arange(total, dtype=np.int64) - offs[reps]
+    syms_r = symbols[reps]
+    bits = (codes[syms_r].astype(np.uint32) >> (lens[reps] - 1 - bitpos).astype(np.uint32)) & 1
+    packed = np.packbits(bits.astype(np.uint8))
+    packed = np.concatenate([packed, np.zeros(GUARD_BYTES, dtype=np.uint8)])
+    return packed, total
+
+
+def decode_serial(stream: np.ndarray, count: int, lut_sym: np.ndarray, lut_len: np.ndarray,
+                  max_len: int) -> np.ndarray:
+    """Bit-serial reference decoder (oracle for the vectorized paths)."""
+    out = np.zeros(count, dtype=np.int32)
+    bitpos = 0
+    mask = (1 << max_len) - 1
+    s = stream.astype(np.uint32)
+    for k in range(count):
+        byte = bitpos >> 3
+        window = (int(s[byte]) << 24) | (int(s[byte + 1]) << 16) \
+            | (int(s[byte + 2]) << 8) | int(s[byte + 3])
+        peek = (window >> (32 - max_len - (bitpos & 7))) & mask
+        out[k] = lut_sym[peek]
+        bitpos += int(lut_len[peek])
+    return out
+
+
+def pack_streams(streams: Sequence[np.ndarray]) -> Tuple[np.ndarray, np.ndarray]:
+    """Stack variable-length byte streams into a (S, max_bytes) matrix + byte lengths."""
+    lens = np.array([len(s) for s in streams], dtype=np.int64)
+    width = int(lens.max(initial=GUARD_BYTES))
+    mat = np.zeros((len(streams), width), dtype=np.uint8)
+    for i, s in enumerate(streams):
+        mat[i, : len(s)] = s
+    return mat, lens
+
+
+def decode_streams(mat: np.ndarray, counts: np.ndarray, lut_sym: np.ndarray,
+                   lut_len: np.ndarray, max_len: int) -> np.ndarray:
+    """Lock-step multi-stream LUT decode (numpy host path).
+
+    mat: (S, B) uint8, each row an independent segment stream (guard-padded).
+    counts: (S,) symbols per segment.  Returns (S, max(counts)) int32, rows
+    zero-padded past their count.
+    """
+    S = mat.shape[0]
+    d = np.concatenate([mat, np.zeros((S, GUARD_BYTES), np.uint8)], axis=1).astype(np.uint32)
+    max_n = int(counts.max(initial=0))
+    out = np.zeros((S, max_n), dtype=np.int32)
+    bitpos = np.zeros(S, dtype=np.int64)
+    rows = np.arange(S)
+    mask = (1 << max_len) - 1
+    for k in range(max_n):
+        active = k < counts
+        byte = bitpos >> 3
+        window = (
+            (d[rows, byte] << 24)
+            | (d[rows, byte + 1] << 16)
+            | (d[rows, byte + 2] << 8)
+            | d[rows, byte + 3]
+        )
+        shift = (32 - max_len - (bitpos & 7)).astype(np.uint32)
+        peek = (window >> shift) & mask
+        sym = lut_sym[peek]
+        out[active, k] = sym[active]
+        bitpos = np.where(active, bitpos + lut_len[peek], bitpos)
+    return out

@@ -1,0 +1,52 @@
+"""Jittable multi-stream Huffman decoder (device path).
+
+Identical structure to :func:`repro.core.bitstream.decode_streams` but expressed with
+``lax.fori_loop`` + vectorized gathers so it can run under ``jit`` / inside
+``shard_map`` (each device decodes only its local segments — the pod-scale version of
+the paper's thread-parallel decode).  The Pallas kernel in
+``repro.kernels.huffman_decode`` implements the same loop with the LUT pinned in VMEM.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("max_len", "max_count"))
+def decode_streams_jax(mat: jnp.ndarray, counts: jnp.ndarray, lut_sym: jnp.ndarray,
+                       lut_len: jnp.ndarray, *, max_len: int, max_count: int) -> jnp.ndarray:
+    """mat: (S, B) uint8 guard-padded streams; counts: (S,) int32.
+
+    Returns (S, max_count) int32 decoded symbols (zero past counts).
+    ``max_count`` must be a static upper bound on counts (segments are built with a
+    fixed symbol budget, so this is exact in practice).
+    """
+    S = mat.shape[0]
+    d = mat.astype(jnp.uint32)
+    rows = jnp.arange(S)
+    mask = jnp.uint32((1 << max_len) - 1)
+
+    def step(k, carry):
+        bitpos, out = carry
+        byte = (bitpos >> 3).astype(jnp.int32)
+        w = (
+            (d[rows, byte] << 24)
+            | (d[rows, byte + 1] << 16)
+            | (d[rows, byte + 2] << 8)
+            | d[rows, byte + 3]
+        )
+        shift = (32 - max_len - (bitpos & 7)).astype(jnp.uint32)
+        peek = (w >> shift) & mask
+        sym = lut_sym[peek]
+        ln = lut_len[peek]
+        active = k < counts
+        out = out.at[:, k].set(jnp.where(active, sym, 0))
+        bitpos = jnp.where(active, bitpos + ln, bitpos)
+        return bitpos, out
+
+    bitpos0 = jnp.zeros((S,), jnp.int32)
+    out0 = jnp.zeros((S, max_count), jnp.int32)
+    _, out = jax.lax.fori_loop(0, max_count, step, (bitpos0, out0))
+    return out

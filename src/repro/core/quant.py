@@ -1,0 +1,158 @@
+"""EntroLLM mixed quantization scheme (paper Alg. 1, lines 4-10).
+
+Per tensor (or per channel / per group as a beyond-paper extension) we choose between
+
+* symmetric **unsigned** quantization, used when ``max(W) * min(W) >= 0`` — the whole
+  tensor shares one sign, so ``W / s`` with a signed scale lands in ``[0, 2^b - 1]``;
+* asymmetric quantization ``round((W - z) / s)`` with ``z = min(W)`` otherwise.
+
+Both branches emit *unsigned* symbols in ``[0, 2^b)`` — this is what makes the
+model-global symbol histogram a single low-entropy Gaussian-shaped distribution, the
+property the paper's Huffman stage exploits.
+
+Host-side (numpy) and device-side (jnp) implementations share the same math; the numpy
+path is used by the compression pipeline / checkpointer, the jnp path by fused
+dequantization inside compute steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class Scheme(enum.Enum):
+    """Quantization grid selection (paper Fig. 2)."""
+
+    SYMMETRIC_UNSIGNED = "symmetric_unsigned"
+    ASYMMETRIC = "asymmetric"
+
+
+class Granularity(enum.Enum):
+    PER_TENSOR = "per_tensor"    # the paper's setting
+    PER_CHANNEL = "per_channel"  # beyond-paper: one (s, z) per output channel (axis 0)
+    PER_GROUP = "per_group"      # beyond-paper: one (s, z) per contiguous group on axis -1
+
+
+@dataclasses.dataclass
+class QuantizedTensor:
+    """A quantized weight tensor plus everything needed to dequantize it.
+
+    ``q`` always stores unsigned symbols as uint8 (uint4 values occupy the low nibble;
+    bit-packing happens at the bitstream/storage layer, not here).
+    """
+
+    q: np.ndarray                  # uint8 symbols in [0, 2^bits)
+    scale: np.ndarray              # f32, broadcastable against q
+    zero: np.ndarray               # f32, broadcastable against q (0.0 for symmetric)
+    bits: int
+    scheme: Scheme
+    granularity: Granularity
+    shape: Tuple[int, ...]
+
+    @property
+    def num_symbols(self) -> int:
+        return 1 << self.bits
+
+    def __post_init__(self) -> None:
+        assert self.q.dtype == np.uint8, self.q.dtype
+        assert 1 <= self.bits <= 8
+
+
+def _minmax(w: np.ndarray, granularity: Granularity, group: int) -> Tuple[np.ndarray, np.ndarray]:
+    if granularity is Granularity.PER_TENSOR:
+        return w.min(keepdims=True), w.max(keepdims=True)
+    if granularity is Granularity.PER_CHANNEL:
+        red = tuple(range(1, w.ndim))
+        return w.min(axis=red, keepdims=True), w.max(axis=red, keepdims=True)
+    if granularity is Granularity.PER_GROUP:
+        assert w.shape[-1] % group == 0, (w.shape, group)
+        wg = w.reshape(w.shape[:-1] + (w.shape[-1] // group, group))
+        return wg.min(axis=-1, keepdims=True), wg.max(axis=-1, keepdims=True)
+    raise ValueError(granularity)
+
+
+def choose_scheme(w: np.ndarray) -> Scheme:
+    """Paper Alg. 1 line 5: symmetric-unsigned iff the tensor is single-signed."""
+    return (
+        Scheme.SYMMETRIC_UNSIGNED
+        if float(w.max()) * float(w.min()) >= 0.0
+        else Scheme.ASYMMETRIC
+    )
+
+
+def quantize(
+    w: np.ndarray,
+    bits: int,
+    granularity: Granularity = Granularity.PER_TENSOR,
+    group: int = 128,
+    scheme: Optional[Scheme] = None,
+) -> QuantizedTensor:
+    """Quantize ``w`` with the EntroLLM mixed scheme.
+
+    ``scheme=None`` (default) applies the paper's per-tensor rule; pass a scheme to
+    force one branch (used by tests and by the policy layer).
+    """
+    w = np.asarray(w, dtype=np.float32)
+    if scheme is None:
+        scheme = choose_scheme(w)
+    qmax = float((1 << bits) - 1)
+    lo, hi = _minmax(w, granularity, group)
+
+    if scheme is Scheme.SYMMETRIC_UNSIGNED:
+        # Single-signed tensor: signed scale keeps symbols unsigned.  absmax with sign.
+        absmax = np.where(np.abs(hi) >= np.abs(lo), hi, lo)
+        scale = np.where(absmax == 0.0, 1.0, absmax / qmax).astype(np.float32)
+        zero = np.zeros_like(scale)
+    else:
+        scale = ((hi - lo) / qmax).astype(np.float32)
+        scale = np.where(scale == 0.0, 1.0, scale)
+        zero = lo.astype(np.float32)
+
+    if granularity is Granularity.PER_GROUP:
+        wq = w.reshape(w.shape[:-1] + (w.shape[-1] // group, group))
+        q = np.rint((wq - zero) / scale)
+        q = np.clip(q, 0.0, qmax).astype(np.uint8).reshape(w.shape)
+    else:
+        q = np.rint((w - zero) / scale)
+        q = np.clip(q, 0.0, qmax).astype(np.uint8)
+
+    return QuantizedTensor(
+        q=q, scale=scale, zero=zero, bits=bits, scheme=scheme,
+        granularity=granularity, shape=tuple(w.shape),
+    )
+
+
+def dequantize(qt: QuantizedTensor) -> np.ndarray:
+    q = qt.q.astype(np.float32)
+    if qt.granularity is Granularity.PER_GROUP:
+        group = qt.shape[-1] // qt.scale.shape[-2]
+        qg = q.reshape(qt.shape[:-1] + (qt.shape[-1] // group, group))
+        return (qg * qt.scale + qt.zero).reshape(qt.shape).astype(np.float32)
+    return (q * qt.scale + qt.zero).astype(np.float32)
+
+
+# --- jnp twins (used inside jitted compute; weights stay integer in HBM) ------------
+
+def dequantize_jnp(q: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray,
+                   dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Fusable dequant: XLA folds the convert+scale into the consuming dot."""
+    return (q.astype(dtype) * scale.astype(dtype) + zero.astype(dtype))
+
+
+def quantize_jnp(w: jnp.ndarray, bits: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-tensor mixed-scheme quantization under jit (used by gradient compression
+    and by the on-device checkpoint path). Returns (q_uint8, scale, zero)."""
+    qmax = float((1 << bits) - 1)
+    lo, hi = w.min(), w.max()
+    single_signed = lo * hi >= 0.0
+    absmax = jnp.where(jnp.abs(hi) >= jnp.abs(lo), hi, lo)
+    s_sym = jnp.where(absmax == 0.0, 1.0, absmax / qmax)
+    s_asym = jnp.where(hi == lo, 1.0, (hi - lo) / qmax)
+    scale = jnp.where(single_signed, s_sym, s_asym)
+    zero = jnp.where(single_signed, 0.0, lo)
+    q = jnp.clip(jnp.round((w - zero) / scale), 0.0, qmax).astype(jnp.uint8)
+    return q, scale.astype(jnp.float32), zero.astype(jnp.float32)

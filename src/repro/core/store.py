@@ -1,0 +1,261 @@
+"""EntroLLM compressed model container (paper Alg. 1 lines 11-16 + §III-C layout).
+
+On-disk layout (a single ``.npz``):
+  * the global frequency table (reconstructs the Huffman table deterministically),
+  * per-tensor metadata: shape, bits, scheme, granularity, scale/zero arrays,
+    segment offsets / byte sizes / symbol counts,
+  * one contiguous uint8 payload holding every segment stream (byte aligned).
+
+Decode path mirrors Alg. 1's EDGE DEVICE OPERATIONS: load table + streams, then
+multi-stream parallel decode (numpy lanes, jnp, or the Pallas kernel — selectable),
+then either dequantize to the compute dtype or hand the still-quantized weights to the
+fused dequant-matmul serving path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from . import quant
+from .bitstream import GUARD_BYTES, decode_streams, pack_streams
+from .entropy import HuffmanTable
+from .segmentation import (DEFAULT_SEGMENT_SYMBOLS, SegmentedTensor,
+                           balanced_assignment, segment_and_encode)
+
+
+@dataclasses.dataclass
+class CompressionStats:
+    """The numbers reported in the paper's Table I, per model."""
+
+    param_count: int
+    bits: int
+    entropy_bits: float        # Shannon bound for the global histogram
+    effective_bits: float      # achieved average code length
+    raw_bytes: int             # fp16 baseline (2 bytes/param)
+    quant_bytes: int           # bits/8 per param
+    encoded_bytes: int         # Huffman payload (+ metadata excluded, reported separately)
+    metadata_bytes: int
+
+    @property
+    def reduction_vs_quant(self) -> float:
+        return 1.0 - self.encoded_bytes / max(self.quant_bytes, 1)
+
+    @property
+    def reduction_vs_fp16(self) -> float:
+        return 1.0 - self.encoded_bytes / max(self.raw_bytes, 1)
+
+
+class CompressedModel:
+    """In-memory compressed representation of a pytree of weights."""
+
+    def __init__(self, table: HuffmanTable, tensors: Dict[str, SegmentedTensor],
+                 qmeta: Dict[str, dict], payload: np.ndarray,
+                 unquantized: Dict[str, np.ndarray]):
+        self.table = table
+        self.tensors = tensors
+        self.qmeta = qmeta          # name -> {bits, scheme, granularity, scale, zero}
+        self.payload = payload
+        self.unquantized = unquantized  # small / sensitive tensors kept in fp32
+
+    # ---------------------------------------------------------------- compression
+    @classmethod
+    def compress(
+        cls,
+        params: Dict[str, np.ndarray],
+        bits: int = 8,
+        granularity: quant.Granularity = quant.Granularity.PER_TENSOR,
+        should_quantize: Optional[Callable[[str, np.ndarray], bool]] = None,
+        segment_symbols: int = DEFAULT_SEGMENT_SYMBOLS,
+        max_code_len: int = 12,
+    ) -> "CompressedModel":
+        should_quantize = should_quantize or default_quantize_predicate
+        qts: Dict[str, quant.QuantizedTensor] = {}
+        unquantized: Dict[str, np.ndarray] = {}
+        for name, w in params.items():
+            if should_quantize(name, w):
+                qts[name] = quant.quantize(np.asarray(w), bits, granularity)
+            else:
+                unquantized[name] = np.asarray(w, dtype=np.float32)
+
+        # Alg.1 line 11: ONE frequency table across the model.
+        from .entropy import global_frequencies
+        freqs = global_frequencies((qt.q for qt in qts.values()), 1 << bits)
+        table = HuffmanTable(freqs, max_len=max_code_len)
+
+        tensors: Dict[str, SegmentedTensor] = {}
+        qmeta: Dict[str, dict] = {}
+        chunks: List[np.ndarray] = []
+        offset = 0
+        for name, qt in qts.items():
+            meta, streams = segment_and_encode(name, qt.q, table, segment_symbols)
+            offs = []
+            for s in streams:
+                offs.append(offset)
+                chunks.append(s)
+                offset += len(s)
+            meta.seg_offsets = np.array(offs, dtype=np.int64)
+            tensors[name] = meta
+            qmeta[name] = dict(
+                bits=qt.bits, scheme=qt.scheme.value, granularity=qt.granularity.value,
+                scale=qt.scale, zero=qt.zero,
+            )
+        payload = (np.concatenate(chunks) if chunks else np.zeros(0, np.uint8))
+        return cls(table, tensors, qmeta, payload, unquantized)
+
+    # --------------------------------------------------------------- decompression
+    def decode_tensor(self, name: str) -> np.ndarray:
+        """Parallel-decode one tensor back to its uint8 symbols."""
+        meta = self.tensors[name]
+        streams = [
+            self.payload[o: o + n]
+            for o, n in zip(meta.seg_offsets, meta.seg_nbytes)
+        ]
+        mat, _ = pack_streams(streams)
+        out = decode_streams(mat, meta.seg_counts, self.table.lut_sym,
+                             self.table.lut_len, self.table.max_len)
+        flat = np.concatenate([out[i, : int(c)] for i, c in enumerate(meta.seg_counts)]) \
+            if len(streams) > 1 else out[0, : int(meta.seg_counts[0])]
+        return flat.astype(np.uint8).reshape(meta.shape)
+
+    def decode_all(self, workers: int = 1) -> Dict[str, np.ndarray]:
+        """Alg. 1 EDGE DEVICE OPERATIONS: decode every tensor.
+
+        ALL segments of ALL tensors are batched into ONE lock-step
+        multi-stream decode — the paper's "assign segments across threads"
+        with lanes playing the threads; batching keeps every lane busy
+        regardless of per-tensor segment counts (per-tensor decoding is
+        lane-starved for small tensors — measured ~6x slower in
+        benchmarks/table2).
+        """
+        names = list(self.tensors)
+        if not names:
+            return {}
+        streams, counts, owners = [], [], []
+        for name in names:
+            meta = self.tensors[name]
+            for o, nb, c in zip(meta.seg_offsets, meta.seg_nbytes,
+                                meta.seg_counts):
+                streams.append(self.payload[o: o + nb])
+                counts.append(int(c))
+                owners.append(name)
+        mat, _ = pack_streams(streams)
+        counts_arr = np.array(counts, dtype=np.int64)
+        dec = decode_streams(mat, counts_arr, self.table.lut_sym,
+                             self.table.lut_len, self.table.max_len)
+        out: Dict[str, np.ndarray] = {}
+        pieces: Dict[str, List[np.ndarray]] = {}
+        for i, name in enumerate(owners):
+            pieces.setdefault(name, []).append(dec[i, : counts[i]])
+        for name in names:
+            meta = self.tensors[name]
+            flat = np.concatenate(pieces[name]) if len(pieces[name]) > 1 \
+                else pieces[name][0]
+            out[name] = flat.astype(np.uint8).reshape(meta.shape)
+        return out
+
+    def dequantize_all(self) -> Dict[str, np.ndarray]:
+        symbols = self.decode_all()
+        out: Dict[str, np.ndarray] = dict(self.unquantized)
+        for name, q in symbols.items():
+            m = self.qmeta[name]
+            qt = quant.QuantizedTensor(
+                q=q, scale=m["scale"], zero=m["zero"], bits=m["bits"],
+                scheme=quant.Scheme(m["scheme"]),
+                granularity=quant.Granularity(m["granularity"]),
+                shape=self.tensors[name].shape,
+            )
+            out[name] = quant.dequantize(qt)
+        return out
+
+    def quantized_weights(self) -> Dict[str, Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+        """Decode to (q, scale, zero) triples for the fused dequant serving path —
+        weights stay integer in HBM, dequant fuses into the matmul."""
+        symbols = self.decode_all()
+        return {
+            name: (q, self.qmeta[name]["scale"], self.qmeta[name]["zero"])
+            for name, q in symbols.items()
+        }
+
+    # ------------------------------------------------------------------- statistics
+    def stats(self) -> CompressionStats:
+        n_q = sum(t.n_symbols for t in self.tensors.values())
+        n_u = sum(int(np.prod(w.shape)) for w in self.unquantized.values())
+        bits = next(iter(self.qmeta.values()))["bits"] if self.qmeta else 8
+        payload_bits = int(sum(int(t.seg_bits.sum()) for t in self.tensors.values()))
+        meta_bytes = sum(
+            m["scale"].size * 4 + m["zero"].size * 4 for m in self.qmeta.values()
+        ) + self.table.freqs.size * 8
+        return CompressionStats(
+            param_count=n_q + n_u,
+            bits=bits,
+            entropy_bits=self.table.entropy,
+            effective_bits=self.table.effective_bits,
+            raw_bytes=2 * (n_q + n_u),
+            quant_bytes=(n_q * bits) // 8 + n_u * 2,
+            encoded_bytes=(payload_bits + 7) // 8 + n_u * 2,
+            metadata_bytes=int(meta_bytes),
+        )
+
+    # ------------------------------------------------------------------ persistence
+    def save(self, path: str) -> None:
+        arrays: Dict[str, np.ndarray] = {
+            "__payload__": self.payload,
+            "__freqs__": self.table.freqs,
+            "__max_len__": np.array([self.table.max_len], dtype=np.int64),
+        }
+        manifest: Dict[str, dict] = {"tensors": {}, "qmeta": {}, "unquantized": []}
+        for name, t in self.tensors.items():
+            key = f"t::{name}"
+            manifest["tensors"][name] = dict(shape=list(t.shape), n_symbols=t.n_symbols)
+            arrays[key + "::seg_offsets"] = t.seg_offsets
+            arrays[key + "::seg_nbytes"] = t.seg_nbytes
+            arrays[key + "::seg_counts"] = t.seg_counts
+            arrays[key + "::seg_bits"] = t.seg_bits
+        for name, m in self.qmeta.items():
+            manifest["qmeta"][name] = dict(
+                bits=m["bits"], scheme=m["scheme"], granularity=m["granularity"])
+            arrays[f"q::{name}::scale"] = m["scale"]
+            arrays[f"q::{name}::zero"] = m["zero"]
+        for name, w in self.unquantized.items():
+            manifest["unquantized"].append(name)
+            arrays[f"u::{name}"] = w
+        arrays["__manifest__"] = np.frombuffer(
+            json.dumps(manifest).encode(), dtype=np.uint8)
+        np.savez(path, **arrays)
+
+    @classmethod
+    def load(cls, path: str) -> "CompressedModel":
+        z = np.load(path if path.endswith(".npz") else path + ".npz")
+        manifest = json.loads(bytes(z["__manifest__"]).decode())
+        table = HuffmanTable(z["__freqs__"], max_len=int(z["__max_len__"][0]))
+        tensors, qmeta, unquantized = {}, {}, {}
+        for name, tm in manifest["tensors"].items():
+            key = f"t::{name}"
+            tensors[name] = SegmentedTensor(
+                name=name, shape=tuple(tm["shape"]), n_symbols=int(tm["n_symbols"]),
+                seg_offsets=z[key + "::seg_offsets"], seg_nbytes=z[key + "::seg_nbytes"],
+                seg_counts=z[key + "::seg_counts"], seg_bits=z[key + "::seg_bits"],
+            )
+        for name, qm in manifest["qmeta"].items():
+            qmeta[name] = dict(
+                bits=int(qm["bits"]), scheme=qm["scheme"], granularity=qm["granularity"],
+                scale=z[f"q::{name}::scale"], zero=z[f"q::{name}::zero"],
+            )
+        for name in manifest["unquantized"]:
+            unquantized[name] = z[f"u::{name}"]
+        return cls(table, tensors, qmeta, z["__payload__"], unquantized)
+
+
+def default_quantize_predicate(name: str, w: np.ndarray) -> bool:
+    """Quantize matrix-shaped weights; keep norms / biases / tiny or sensitive params
+    (e.g. SSM ``A_log``/``dt``) in full precision, per DESIGN.md §5."""
+    if w.ndim < 2:
+        return False
+    lname = name.lower()
+    if any(k in lname for k in ("norm", "scale", "bias", "a_log", "dt_", "conv_")):
+        return False
+    return int(np.prod(w.shape)) >= 4096

@@ -1,0 +1,115 @@
+"""Process-wide sharding-hints context.
+
+Models are mesh-agnostic; the launch layer installs hints so memory-critical
+*activation* tensors (attention q/k/v and scores at 32k+) receive explicit
+``with_sharding_constraint``s instead of relying on GSPMD propagation alone.
+Attention uses ONE merged head axis (see ``layers.gqa_attention``), so every
+constraint here is expressible as a plain PartitionSpec:
+
+* q/k/v (B, T, H, hd): batch axes on B, model axis on H; for decode the
+  KV-time dim T instead carries the cache's sequence sharding
+  (``kv_seq_axes`` — "model" when the arch's KV head count cannot cover the
+  model axis, the data axes for single-request long-context).
+* scores (B, H, Sq, T): batch on B, model on H when free, cache sharding on T
+  (GSPMD emits the partial-softmax psum — flash-decoding's combine).
+
+Install with :func:`set_hints` before tracing; smoke tests leave it unset and
+models run constraint-free on one device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingHints:
+    mesh: object
+    batch_axes: Tuple[str, ...] = ("data",)   # () when batch is unsharded
+    model_axis: Optional[str] = "model"
+    kv_seq_axes: Tuple[str, ...] = ()         # cache T-dim sharding (decode)
+    seq_sp: bool = True                       # sequence-parallel layer carries
+    feature_axes: Tuple[str, ...] = ()        # weight-stationary decode: the
+    #   FSDP axes ride the activation FEATURE dim, forcing partial-dot + tiny
+    #   psum instead of weight all-gathers (EXPERIMENTS.md §Perf H1)
+
+
+_HINTS: list = [None]
+
+
+def set_hints(h: Optional[ShardingHints]) -> None:
+    _HINTS[0] = h
+
+
+def get_hints() -> Optional[ShardingHints]:
+    return _HINTS[0]
+
+
+def _fits(dim: int, mesh, axes: Tuple[str, ...]) -> bool:
+    if not axes:
+        return False
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return dim % n == 0
+
+
+def constrain_heads(x: jax.Array, *, is_cache_side: bool = False) -> jax.Array:
+    """Constrain (B, T, H, hd): batch/B, model/H, cache sharding on T."""
+    h = get_hints()
+    if h is None:
+        return x
+    B, T, H, _ = x.shape
+    batch = h.batch_axes if _fits(B, h.mesh, h.batch_axes) else None
+    seq = h.kv_seq_axes if (is_cache_side
+                            and _fits(T, h.mesh, h.kv_seq_axes)) else None
+    heads = None
+    m = h.model_axis
+    if m and _fits(H, h.mesh, (m,)) and (seq is None or m not in seq):
+        heads = m
+    return jax.lax.with_sharding_constraint(x, P(batch, seq, heads, None))
+
+
+def constrain_scores(s: jax.Array) -> jax.Array:
+    """Constrain (B, H, Sq, T) attention scores."""
+    h = get_hints()
+    if h is None:
+        return s
+    B, H, Sq, T = s.shape
+    batch = h.batch_axes if _fits(B, h.mesh, h.batch_axes) else None
+    seq = h.kv_seq_axes if _fits(T, h.mesh, h.kv_seq_axes) else None
+    heads = None
+    m = h.model_axis
+    if m and _fits(H, h.mesh, (m,)) and (seq is None or m not in seq):
+        heads = m
+    return jax.lax.with_sharding_constraint(s, P(batch, heads, None, seq))
+
+
+def constrain_activation(x: jax.Array) -> jax.Array:
+    """Constrain a (B, S, D) activation at a layer boundary.
+
+    Batch shards over the batch axes; the SEQUENCE dim additionally shards
+    over the model axis (sequence parallelism, Korthikanti et al.): the saved
+    scan carry — the dominant remat-memory term — shrinks by |model|, and the
+    TP all-reduce after each row-parallel matmul becomes an equal-byte
+    reduce-scatter + all-gather pair.  Skipped automatically when S doesn't
+    divide (decode steps).
+    """
+    h = get_hints()
+    if h is None or x.ndim < 3:
+        return x
+    if h.feature_axes:
+        if not _fits(x.shape[-1], h.mesh, h.feature_axes):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, P(*([None] * (x.ndim - 1)), h.feature_axes))
+    batch = h.batch_axes if _fits(x.shape[0], h.mesh, h.batch_axes) else None
+    m = h.model_axis
+    seq = m if (h.seq_sp and m and _fits(x.shape[1], h.mesh, (m,))) else None
+    if batch is None and seq is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, P(batch, seq, *([None] * (x.ndim - 2))))

@@ -1,0 +1,161 @@
+"""Logical-axis sharding rules → concrete NamedShardings.
+
+Models annotate every parameter/cache/batch dimension with a *logical* axis
+name ("embed", "heads", "expert", "batch", ...).  This module maps logical
+axes onto mesh axes per a :class:`Rules` profile, with two safety valves:
+
+* **divisibility** — a logical axis only binds to a mesh-axis tuple whose size
+  divides the dimension; otherwise the tuple is shortened (prefix) until it
+  divides, possibly to unsharded.  E.g. glm4's 2 KV heads silently stay
+  replicated on a 16-way model axis instead of erroring.
+* **no-duplicate mesh axes** — a mesh axis may appear once per spec; later
+  logical axes skip mesh axes already claimed by earlier dims.
+
+Profiles (DESIGN.md §6):
+
+* ``train_rules``  — FSDP over data (+ ZeRO over pod×data for optimizer
+  state), TP over model for heads/mlp/vocab, EP over model for experts.
+  Parameters are replicated across pods (hierarchical DP: only the gradient
+  all-reduce crosses the pod axis, matching ICI-rich/DCI-poor topology).
+* ``serve_rules`` — weights TP over model + FSDP over data (weights are
+  all-gathered per layer; for decode they stream from HBM), KV cache batch
+  over data, or sequence over data for the single-request long-context cell
+  (flash-decoding combine).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxesSpec = Union[None, str, Tuple[str, ...]]
+
+
+def _as_tuple(a: AxesSpec) -> Tuple[str, ...]:
+    if a is None:
+        return ()
+    if isinstance(a, str):
+        return (a,)
+    return tuple(a)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Mapping logical axis name -> preferred mesh axes (in priority order)."""
+
+    table: Dict[str, AxesSpec]
+
+    def lookup(self, logical: Optional[str]) -> Tuple[str, ...]:
+        if logical is None:
+            return ()
+        return _as_tuple(self.table.get(logical))
+
+
+def resolve_spec(axes: Sequence[Optional[str]], shape: Sequence[int],
+                 rules: Rules, mesh: Mesh) -> P:
+    """Build a PartitionSpec for one tensor, honoring divisibility + uniqueness."""
+    assert len(axes) == len(shape), (axes, shape)
+    used: set = set()
+    entries = []
+    for logical, dim in zip(axes, shape):
+        cand = [a for a in rules.lookup(logical)
+                if a not in used and a in mesh.shape]
+        # shorten from the right until the product divides the dim
+        while cand and (dim % int(np.prod([mesh.shape[a] for a in cand])) != 0):
+            cand.pop()
+        if cand:
+            used.update(cand)
+            entries.append(tuple(cand) if len(cand) > 1 else cand[0])
+        else:
+            entries.append(None)
+    # trim trailing Nones (canonical form)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def tree_shardings(schema_axes: Dict[str, Sequence[Optional[str]]],
+                   schema_shapes: Dict[str, Sequence[int]],
+                   rules: Rules, mesh: Mesh) -> Dict[str, NamedSharding]:
+    return {
+        name: NamedSharding(mesh, resolve_spec(schema_axes[name],
+                                               schema_shapes[name], rules, mesh))
+        for name in schema_axes
+    }
+
+
+# ------------------------------------------------------------------- profiles
+
+def _axes(mesh: Mesh, *names: str) -> Tuple[str, ...]:
+    return tuple(n for n in names if n in mesh.shape)
+
+
+def train_rules(mesh: Mesh) -> Rules:
+    """FSDP(data) x TP(model) x EP(model); batch over (pod, data)."""
+    return Rules({
+        "vocab": "model",
+        "embed": "data",                      # FSDP: gathered per layer under scan
+        "heads": "model",
+        "kv": "model",
+        "mlp": "model",
+        "expert": "model",
+        "expert_embed": "data",               # FSDP over the expert D rows
+        "expert_mlp": None,
+        "layers": None,
+        "batch": _axes(mesh, "pod", "data"),
+        "seq": None,
+    })
+
+
+def opt_state_rules(mesh: Mesh) -> Rules:
+    """ZeRO: optimizer moments shard over pod x data on top of the TP axes."""
+    r = dict(train_rules(mesh).table)
+    r["embed"] = _axes(mesh, "pod", "data")
+    r["expert_embed"] = _axes(mesh, "pod", "data")
+    return Rules(r)
+
+
+def serve_rules(mesh: Mesh, *, long_context: bool = False) -> Rules:
+    """Weights like training; KV cache batch-sharded, or sequence-sharded for
+    the single-request long-context cell (flash-decoding combine over data)."""
+    return Rules({
+        "vocab": "model",
+        "embed": "data",
+        "heads": "model",
+        "kv": "model",
+        "mlp": "model",
+        "expert": "model",
+        "expert_embed": "data",
+        "expert_mlp": None,
+        "layers": None,
+        "batch": () if long_context else _axes(mesh, "pod", "data"),
+        "kv_seq": _axes(mesh, "pod", "data") if long_context else (),
+        "seq": None,
+    })
+
+
+# ------------------------------------------------------------- tensor helpers
+
+def param_shardings(cfg, mesh: Mesh, rules: Rules) -> Dict[str, NamedSharding]:
+    from repro.models import api
+    sch = api.build(cfg).schema(cfg)
+    return tree_shardings({n: s.axes for n, s in sch.items()},
+                          {n: s.shape for n, s in sch.items()}, rules, mesh)
+
+
+def cache_shardings(cfg, mesh: Mesh, rules: Rules, batch: int, max_len: int
+                    ) -> Dict[str, NamedSharding]:
+    from repro.models import api
+    mod = api.build(cfg)
+    specs = mod.cache_specs(cfg)
+    shapes = jax.eval_shape(lambda: mod.init_cache(cfg, batch, max_len))
+    return tree_shardings(specs, {k: shapes[k].shape for k in specs}, rules, mesh)
+
+
+def batch_sharding(mesh: Mesh, rules: Rules, shape: Sequence[int]) -> NamedSharding:
+    """Shard dim 0 (batch) of a (B, ...) input, honoring divisibility of B."""
+    axes = ["batch"] + [None] * (len(shape) - 1)
+    return NamedSharding(mesh, resolve_spec(axes, shape, rules, mesh))

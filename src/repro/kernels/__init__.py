@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for EntroLLM's two compute hot-spots:
+
+* ``huffman_decode`` — the paper's parallel entropy decoder (lane-parallel LUT
+  walk; the paper's own custom-kernel contribution);
+* ``dequant_matmul`` — fused int8/int4 dequantize-matmul for the serving path
+  (keeps the HBM stream at 1 or 0.5 bytes/param in the memory-bound decode
+  phase — the bandwidth saving Table II measures).
+
+``ops`` holds the jit'd public wrappers; ``ref`` the pure-jnp oracles used by
+the per-kernel allclose sweeps in tests/.
+"""
+from . import dequant_matmul, huffman_decode, ops, ref

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: fused dequantize-and-matmul for EntroLLM serving.
+
+The decode phase of LLM inference is memory-bandwidth bound: every step reads
+all weight bytes once.  Keeping weights as uint8 symbols (or packed uint4
+nibbles) in HBM and dequantizing *inside the matmul's VMEM tiles* halves (or
+quarters) the dominant HBM term; the MXU still sees bf16 operands.
+
+Tiling: grid (M/bm, N/bn, K/bk), K innermost ("arbitrary" = sequential) so an
+f32 VMEM scratch accumulates partial products — the standard TPU matmul
+skeleton.  Block shapes default to MXU-aligned (128, 128) with bk=512 for a
+weight tile of 512*128 = 64 KiB uint8 (32 KiB packed uint4) — comfortably
+inside the ~16 MiB VMEM with double buffering.
+
+Quantization grid matches ``core.quant`` (the paper's mixed scheme):
+``w = q * scale + zero``; scale/zero are per-tensor scalars or per-output-
+channel (N,) rows.  Both are resident in VMEM as (1, bn) tiles.
+
+int4 path: two nibbles per byte along K — ``wq_packed[k//2, n]`` holds
+k-even in the low nibble, k-odd in the high nibble (see ``ops.pack_nibbles``).
+The kernel unpacks a (bk//2, bn) byte tile into a (bk, bn) symbol tile with
+shifts and interleave — no gathers, VPU-friendly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(x_ref, wq_ref, scale_ref, zero_ref, o_ref, acc_ref, *,
+               n_k: int, int4: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                                 # (bm, bk) bf16
+    if int4:
+        packed = wq_ref[...]                       # (bk//2, bn) uint8
+        lo = (packed & 0x0F).astype(jnp.bfloat16)  # even k
+        hi = (packed >> 4).astype(jnp.bfloat16)    # odd k
+        half, bn = packed.shape
+        wsym = jnp.stack([lo, hi], axis=1).reshape(half * 2, bn)
+    else:
+        wsym = wq_ref[...].astype(jnp.bfloat16)    # (bk, bn)
+    scale = scale_ref[...].astype(jnp.bfloat16)    # (1, bn) or (1, 1)
+    zero = zero_ref[...].astype(jnp.bfloat16)
+    w = wsym * scale + zero                        # fused dequant in VMEM
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "int4", "interpret", "out_dtype"))
+def dequant_matmul(x: jax.Array, wq: jax.Array, scale: jax.Array,
+                   zero: jax.Array, *, bm: int = 128, bn: int = 128,
+                   bk: int = 512, int4: bool = False, interpret: bool = True,
+                   out_dtype=jnp.bfloat16) -> jax.Array:
+    """x: (M, K) bf16; wq: (K, N) uint8 or (K//2, N) packed uint4.
+
+    scale/zero: scalars, (N,), or (1, N) — broadcast against output channels.
+    Returns (M, N) in ``out_dtype``.
+    """
+    M, K = x.shape
+    N = wq.shape[1]
+    K_w = wq.shape[0] * (2 if int4 else 1)
+    assert K == K_w, (x.shape, wq.shape, int4)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    n_k = K // bk
+
+    scale2 = jnp.broadcast_to(jnp.asarray(scale, jnp.float32).reshape(1, -1),
+                              (1, N) if jnp.size(scale) > 1 else (1, 1))
+    zero2 = jnp.broadcast_to(jnp.asarray(zero, jnp.float32).reshape(1, -1),
+                             (1, N) if jnp.size(zero) > 1 else (1, 1))
+    per_channel = scale2.shape[1] == N
+    sn = bn if per_channel else 1
+    s_index = (lambda i, j, k: (0, j)) if per_channel else (lambda i, j, k: (0, 0))
+
+    wq_rows = bk // 2 if int4 else bk
+
+    kernel = functools.partial(_mm_kernel, n_k=n_k, int4=int4)
+    return pl.pallas_call(
+        kernel,
+        grid=(M // bm, N // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((wq_rows, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, sn), s_index),
+            pl.BlockSpec((1, sn), s_index),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x.astype(jnp.bfloat16), wq, scale2, zero2)

@@ -1,0 +1,84 @@
+"""Jitted public wrappers around the Pallas kernels + packing utilities.
+
+``interpret`` defaults to True off-TPU (this container) and False on real TPU
+hardware; callers can force either.  All wrappers fall back to the jnp oracle
+when ``REPRO_DISABLE_PALLAS=1`` (escape hatch for debugging).
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .dequant_matmul import dequant_matmul as _dequant_matmul_pallas
+from .huffman_decode import decode_streams_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _use_pallas() -> bool:
+    return os.environ.get("REPRO_DISABLE_PALLAS", "0") != "1"
+
+
+def pack_nibbles(q: np.ndarray) -> np.ndarray:
+    """(K, N) uint8 symbols < 16 -> (K//2, N) packed bytes (even k low nibble)."""
+    assert q.shape[0] % 2 == 0, q.shape
+    lo = q[0::2]
+    hi = q[1::2]
+    return (lo | (hi << 4)).astype(np.uint8)
+
+
+def unpack_nibbles(p: np.ndarray) -> np.ndarray:
+    K2, N = p.shape
+    out = np.empty((K2 * 2, N), np.uint8)
+    out[0::2] = p & 0x0F
+    out[1::2] = p >> 4
+    return out
+
+
+def dequant_matmul(x: jax.Array, wq: jax.Array, scale, zero, *,
+                   int4: bool = False, interpret: Optional[bool] = None,
+                   block: Tuple[int, int, int] = (128, 128, 512)) -> jax.Array:
+    """Fused dequant matmul with automatic padding to block multiples."""
+    if not _use_pallas():
+        return ref.dequant_matmul_ref(x, wq, scale, zero, int4=int4)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    bm, bn, bk = block
+    M, K = x.shape
+    N = wq.shape[1]
+    Mp, Np, Kp = (-(-M // bm) * bm, -(-N // bn) * bn, -(-K // bk) * bk)
+    xpad = jnp.pad(x, ((0, Mp - M), (0, Kp - K))) if (Mp, Kp) != (M, K) else x
+    if int4:
+        # packed rows: K/2 bytes along axis 0; pad at the end keeps alignment
+        wpad = jnp.pad(wq, ((0, (Kp - K) // 2), (0, Np - N))) \
+            if (Kp, Np) != (K, N) else wq
+    else:
+        wpad = jnp.pad(wq, ((0, Kp - K), (0, Np - N))) if (Kp, Np) != (K, N) else wq
+    if jnp.size(scale) > 1:
+        scale = jnp.pad(jnp.asarray(scale, jnp.float32).reshape(-1), (0, Np - N))
+        zero = jnp.pad(jnp.asarray(zero, jnp.float32).reshape(-1), (0, Np - N))
+    out = _dequant_matmul_pallas(xpad, wpad, scale, zero, bm=bm, bn=bn, bk=bk,
+                                 int4=int4, interpret=interpret)
+    return out[:M, :N]
+
+
+def huffman_decode(mat: jax.Array, counts: jax.Array, lut_sym: jax.Array,
+                   lut_len: jax.Array, *, max_len: int, max_count: int,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """Multi-stream Huffman decode (see kernels.huffman_decode)."""
+    if not _use_pallas():
+        import numpy as _np
+        return jnp.asarray(ref.decode_streams_ref(
+            _np.asarray(mat), _np.asarray(counts), _np.asarray(lut_sym),
+            _np.asarray(lut_len), max_len))
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return decode_streams_pallas(mat, counts, lut_sym, lut_len,
+                                 max_len=max_len, max_count=max_count,
+                                 interpret=interpret)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dequant_matmul_ref(x: jax.Array, wq: jax.Array, scale, zero, *,
+                       int4: bool = False, out_dtype=jnp.bfloat16) -> jax.Array:
+    """Same math as kernels.dequant_matmul, straight-line jnp."""
+    if int4:
+        lo = (wq & 0x0F)
+        hi = (wq >> 4)
+        K2, N = wq.shape
+        wsym = jnp.stack([lo, hi], axis=1).reshape(K2 * 2, N)
+    else:
+        wsym = wq
+    scale = jnp.asarray(scale, jnp.float32).reshape(1, -1)
+    zero = jnp.asarray(zero, jnp.float32).reshape(1, -1)
+    w = wsym.astype(jnp.bfloat16) * scale.astype(jnp.bfloat16) \
+        + zero.astype(jnp.bfloat16)
+    return jnp.dot(x.astype(jnp.bfloat16), w,
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def decode_streams_ref(mat: np.ndarray, counts: np.ndarray, lut_sym: np.ndarray,
+                       lut_len: np.ndarray, max_len: int) -> np.ndarray:
+    """Host-side multi-stream oracle (shared with core.bitstream)."""
+    from repro.core.bitstream import decode_streams
+    return decode_streams(mat, counts, lut_sym, lut_len, max_len)

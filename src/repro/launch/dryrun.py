@@ -1,0 +1,225 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and extract the roofline terms.
+
+The two lines ABOVE this docstring must stay first: jax locks the device
+count at first init, and the dry-run needs 512 placeholder CPU devices for
+the 2x16x16 multi-pod mesh (smoke tests and benches keep the default 1).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.json
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --list
+
+Per cell it prints ``compiled.memory_analysis()`` (proof the program fits
+HBM) and ``compiled.cost_analysis()`` (FLOPs/bytes for §Roofline), plus the
+parsed per-collective wire bytes; ``--out`` appends machine-readable JSON
+consumed by benchmarks/ and EXPERIMENTS.md.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import registry
+from repro.configs.base import SHAPES
+from repro.launch import mesh as mesh_lib, roofline, specs
+
+
+def _smallest_divisor(n: int) -> int:
+    for d in (2, 3, 5, 7):
+        if n % d == 0:
+            return d
+    return n            # prime stack depth: full unroll (none assigned)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             weights: str = "int8", verbose: bool = True,
+             compile_only: bool = False, **kw):
+    """Multi-compile protocol (methodology in DESIGN.md §4):
+
+    1. *memory* compile — rolled scan (unroll=1), production microbatching:
+       realistic buffer reuse; ``memory_analysis`` proves the cell fits HBM.
+    2./3. *counting* compiles — unroll=1 and unroll=u2 with microbatches=1:
+       XLA-CPU cost_analysis counts every while body exactly ONCE (verified
+       by the linear f(u) series and its intercept == LM-head FLOPs), so the
+       full-program FLOPs/collective-bytes follow by linear extrapolation
+       ``full = f1 + (n_stack-1)·(f2-f1)/(u2-1)`` — exact for homogeneous
+       layer stacks, which all ten architectures are by construction.
+       For train cells the all-gather term is then scaled by the real
+       microbatch count (FSDP re-gathers parameters every microbatch).
+       For non-train cells the memory compile doubles as the unroll=1
+       counting compile (identical program).
+
+    ``compile_only`` (the multi-pod pass): only step 1 — proves lowering +
+    compilation + memory on the 2x16x16 mesh; the roofline table itself is
+    single-pod per the assignment.
+    """
+    cfg = registry.get(arch)
+    shape = SHAPES[shape_name]
+    if not shape.applicable(cfg):
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "skipped": "requires sub-quadratic attention (DESIGN.md §5)"}
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n_stack = cfg.n_layers // cfg.attn_period if cfg.family == "hybrid" \
+        else cfg.n_layers
+    u2 = _smallest_divisor(n_stack)
+    is_train = shape.kind == "train"
+
+    t0 = time.perf_counter()
+    try:
+        # -- memory compile (real microbatching, rolled) --
+        cell = specs.build_cell(cfg, shape, mesh, weights=weights, unroll=1,
+                                **kw)
+        compiled_mem = cell.lower().compile()
+        t_mem = time.perf_counter() - t0
+
+        if compile_only:
+            ma = compiled_mem.memory_analysis()
+            d = {
+                "arch": arch, "shape": shape_name,
+                "mesh": "x".join(str(s) for s in mesh.devices.shape),
+                "kind": cell.meta["kind"], "compile_only": True,
+                "memory_analysis": {
+                    "argument_size": ma.argument_size_in_bytes,
+                    "output_size": ma.output_size_in_bytes,
+                    "temp_size": ma.temp_size_in_bytes,
+                    "alias_size": ma.alias_size_in_bytes,
+                },
+                "lower_s": t_mem, "compile_s": 0.0,
+                "meta": {k: v for k, v in cell.meta.items()
+                         if isinstance(v, (str, int, float, bool))},
+            }
+            if verbose:
+                print(f"== {arch} x {shape_name} on {d['mesh']} "
+                      f"(compile-only) == args="
+                      f"{ma.argument_size_in_bytes/2**30:.2f}GiB "
+                      f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB "
+                      f"[{t_mem:.0f}s]")
+            return d
+
+        # -- counting compiles --
+        ckw = dict(kw)
+        if is_train:
+            ckw["microbatches"] = 1
+        t1 = time.perf_counter()
+        if is_train:
+            cell1 = specs.build_cell(cfg, shape, mesh, weights=weights,
+                                     unroll=1, **ckw)
+            c1 = cell1.lower().compile()
+        else:
+            c1 = compiled_mem        # identical program: reuse
+        cell2 = specs.build_cell(cfg, shape, mesh, weights=weights, unroll=u2,
+                                 **ckw)
+        c2 = cell2.lower().compile()
+        t_count = time.perf_counter() - t1
+    finally:
+        specs.clear_contexts()
+
+    r = roofline.analyze_extrapolated(
+        cell, compiled_mem, c1, c2, n_stack=n_stack, u2=u2,
+        gather_scale=(cell.meta.get("microbatches", 1) if is_train else 1))
+    d = r.to_dict()
+    d["lower_s"] = t_mem
+    d["compile_s"] = t_count
+    t_lower, t_compile = t_mem, t_count
+    if verbose:
+        ma = compiled_mem.memory_analysis()
+        print(f"== {arch} x {shape_name} on {d['mesh']} "
+              f"({d['kind']}, weights={cell.meta.get('weights')}) ==")
+        print(f"  memory_analysis: args={ma.argument_size_in_bytes/2**30:.2f}GiB "
+              f"out={ma.output_size_in_bytes/2**30:.2f}GiB "
+              f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB "
+              f"alias={ma.alias_size_in_bytes/2**30:.2f}GiB")
+        print(f"  cost_analysis: flops/chip={d['flops_per_chip']:.3e} "
+              f"raw_bytes/chip={d['raw_bytes_per_chip']:.3e}")
+        print(f"  analytic_bytes/chip={d['analytic_bytes_per_chip']:.3e} "
+              f"wire_bytes/chip={d['wire_bytes_per_chip']:.3e}")
+        cd = d["collective_detail"]
+        print("  collectives:", {k: f"{v:.2e}" for k, v in cd.items()
+                                 if k != "counts" and v},
+              "counts:", {k: v for k, v in cd["counts"].items() if v})
+        print(f"  terms: compute={d['compute_s']*1e3:.2f}ms "
+              f"memory={d['memory_s']*1e3:.2f}ms "
+              f"collective={d['collective_s']*1e3:.2f}ms "
+              f"-> dominant={d['dominant']}")
+        print(f"  model_flops_ratio={d['flops_ratio']:.3f} "
+              f"lower={t_lower:.1f}s compile={t_compile:.1f}s")
+    return d
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None, choices=list(SHAPES))
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--weights", default="int8",
+                   choices=["bf16", "int8", "int4"])
+    p.add_argument("--out", default=None)
+    p.add_argument("--list", action="store_true")
+    args = p.parse_args(argv)
+
+    if args.list:
+        for a, s, ok in specs.all_cells(registry.ARCHS):
+            print(f"{a:24s} {s:12s} {'ok' if ok else 'SKIP (full attention @500k)'}")
+        return 0
+
+    cells = []
+    if args.all:
+        for a, s, ok in specs.all_cells(registry.ARCHS):
+            cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    existing = []
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            existing = json.load(f)
+    done = {(d.get("arch"), d.get("shape"), d.get("mesh"))
+            for d in existing if "error" not in d}
+
+    results = list(existing)
+    failures = 0
+    n_run = 0
+    for mp in meshes:
+        mesh_name = "2x16x16" if mp else "16x16"
+        for a, s in cells:
+            if (a, s, mesh_name) in done:
+                continue
+            n_run += 1
+            try:
+                # multi-pod pass proves lower+compile; roofline table is
+                # single-pod (assignment), so skip the counting compiles
+                results.append(run_cell(a, s, multi_pod=mp,
+                                        weights=args.weights,
+                                        compile_only=mp))
+            except Exception as e:
+                failures += 1
+                traceback.print_exc()
+                results.append({"arch": a, "shape": s, "mesh": mesh_name,
+                                "error": str(e)})
+            if args.out:          # checkpoint the sweep after every cell
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {len(results)} cells ({n_run} new) -> {args.out}")
+    print(f"{n_run - failures}/{n_run} newly-run cells OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,44 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — device count is locked at first jax init, and only
+``dryrun.py`` sets the 512-device XLA flag.
+
+Mesh shapes (assignment):
+  * single-pod: (16, 16)     axes ("data", "model")   = 256 chips
+  * multi-pod:  (2, 16, 16)  axes ("pod", "data", "model") = 512 chips
+
+Axis roles (DESIGN.md §6): "model" = TP + EP; "data" = FSDP + batch DP;
+"pod" = hierarchical DP (gradient all-reduce over DCI; weights replicated
+per pod so only grads cross pods).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(*, model: int = 1):
+    """Whatever this host actually has (CPU smoke tests, examples)."""
+    n = len(jax.devices())
+    assert n % model == 0, (n, model)
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         axis_types=_auto(2))
+
+
+# TPU v5e hardware constants used by every roofline computation.
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW_PER_LINK = 50e9            # bytes/s per link
+ICI_LINKS = 4                     # 2D torus: 4 links/chip (x+/x-/y+/y-)
+DCI_BW = 25e9                     # inter-pod per-host effective (conservative)
+HBM_PER_CHIP = 16 * 1024**3

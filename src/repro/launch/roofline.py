@@ -1,0 +1,336 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms per (arch, shape, mesh), all in seconds/step per chip:
+
+  compute    = HLO_FLOPs_per_chip / 197e12          (bf16 MXU peak, v5e)
+  memory     = HBM_bytes_per_chip / 819e9
+  collective = wire_bytes_per_chip / (4 x 50e9)     (2D-torus ICI)
+
+FLOPs come from ``compiled.cost_analysis()['flops']`` (post-SPMD,
+per-device).  Collective bytes are parsed from the optimized HLO text with
+ring-cost formulas (AG/RS: (n-1)/n, AR: 2(n-1)/n, A2A: (n-1)/n, permute: 1x).
+
+HBM bytes: ``cost_analysis()['bytes accessed']`` is reported, but the CPU
+backend materializes f32 copies of bf16 dot operands and counts every fusion
+boundary, so we ALSO compute a dtype-aware analytic estimate (weights + KV +
+activation carries + optimizer traffic per step kind — formulas below) and
+use it as the roofline's memory term; both numbers are recorded.  This is the
+approach DESIGN.md §4 documents.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Tuple
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from . import mesh as hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[a-z0-9,\[\]{}]+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.IGNORECASE)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of 'bf16[2,3]' or a '(bf16[..], f32[..])' tuple string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return total_devices
+
+
+def collective_wire_bytes(hlo_text: str, total_devices: int) -> Dict[str, float]:
+    """Per-chip wire bytes by collective kind, ring-cost weighted."""
+    out: Dict[str, float] = {"all-gather": 0.0, "all-reduce": 0.0,
+                             "reduce-scatter": 0.0, "all-to-all": 0.0,
+                             "collective-permute": 0.0}
+    counts: Dict[str, int] = {k: 0 for k in out}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2).lower()
+        nbytes = _shape_bytes(shape_str)     # op OUTPUT shape
+        n = max(_group_size(line, total_devices), 1)
+        if n == 1:
+            continue
+        if kind == "all-gather":
+            wire = nbytes * (n - 1) / n          # output is the gathered size
+        elif kind == "all-reduce":
+            wire = nbytes * 2 * (n - 1) / n
+        elif kind == "reduce-scatter":
+            wire = nbytes * (n - 1)              # output is 1/n of the input
+        elif kind == "all-to-all":
+            wire = nbytes * (n - 1) / n
+        else:                                    # collective-permute
+            wire = nbytes
+        out[kind] += wire
+        counts[kind] += 1
+    out["counts"] = counts  # type: ignore
+    return out
+
+
+# ------------------------------------------------------------- analytic bytes
+
+def _param_bytes(cfg: ArchConfig, weights: str) -> float:
+    per = {"bf16": 2.0, "int8": 1.0, "int4": 0.5}[weights]
+    return cfg.param_count() * per
+
+
+def _active_param_bytes(cfg: ArchConfig, weights: str) -> float:
+    per = {"bf16": 2.0, "int8": 1.0, "int4": 0.5}[weights]
+    return cfg.active_param_count() * per
+
+
+def _cache_bytes(cfg: ArchConfig, B: int, S: int, kv_bytes: float = 2.0
+                 ) -> float:
+    """KV/state cache bytes (whole fleet)."""
+    if cfg.family == "ssm":
+        ssm = cfg.ssm
+        H = ssm.n_heads(cfg.d_model)
+        conv = cfg.n_layers * B * (ssm.d_conv - 1) \
+            * (ssm.d_inner(cfg.d_model) + 2 * ssm.d_state) * 2
+        state = cfg.n_layers * B * H * ssm.head_dim * ssm.d_state * 4
+        return conv + state
+    kv = 2 * cfg.n_kv_heads * cfg.hd * B * S * kv_bytes
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // cfg.attn_period
+        ssm = cfg.ssm
+        H = ssm.n_heads(cfg.d_model)
+        state = (cfg.n_layers - n_attn) * B * H * ssm.head_dim * ssm.d_state * 4
+        return kv * n_attn + state
+    if cfg.family == "encdec":
+        return kv * cfg.n_layers * 2          # self + cross caches
+    return kv * cfg.n_layers
+
+
+def analytic_hbm_bytes(cfg: ArchConfig, shape: ShapeConfig, meta: Dict,
+                       chips: int) -> float:
+    """Per-chip HBM bytes per step (documented formulas, DESIGN.md §4)."""
+    B, S = shape.global_batch, shape.seq_len
+    D = cfg.d_model
+    L = cfg.n_layers
+    weights = meta.get("weights", "bf16")
+    if meta["kind"] == "train":
+        mb = meta.get("microbatches", 1)
+        # fwd + bwd weight reads per microbatch (gathered shard traffic lands
+        # as HBM writes+reads on the receiving chip), grads rw, opt state rw
+        p = cfg.param_count()
+        wbytes = 2 * p * 2 * mb              # fwd+bwd reads, bf16
+        gbytes = 2 * p * 4                   # grad accumulate rw (f32)
+        q8 = meta.get("q8_opt", False)
+        obytes = p * (2 * 2 if q8 else 2 * 8) + p * 2      # m+v rw + param write
+        act = mb * L * (B // mb) * S * D * 2 * 2           # carry save + load
+        logits = (B * S * cfg.padded_vocab() * 2) * 2      # lm head out + grad
+        return (wbytes + gbytes + obytes + act + logits) / chips
+    if meta["kind"] == "prefill":
+        p = _param_bytes(cfg, weights)
+        act = L * B * S * D * 2 * 2
+        cache_w = _cache_bytes(cfg, B, S)
+        return (p + act + cache_w) / chips
+    # decode: weights once (active params only for MoE), cache read once
+    p = _active_param_bytes(cfg, weights)
+    kvb = 2.0 if meta.get("kv_bits", 16) == 16 else 1.0 + 2.0 / cfg.hd
+    cache_r = _cache_bytes(cfg, B, S, kv_bytes=kvb)
+    return (p + cache_r) / chips
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig, kind: str) -> float:
+    """6·N_active·tokens for train; 2·N_active·tokens for inference.
+
+    N_active excludes the input embedding table: a gather does no matmul
+    FLOPs (the LM head does and stays counted).
+    """
+    n = cfg.active_param_count() - cfg.padded_vocab() * cfg.d_model
+    if kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n * toks
+    if kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n * toks
+    return 2.0 * n * shape.global_batch          # decode: 1 token/request
+
+
+# ------------------------------------------------------------------- assembly
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str
+    chips: int
+    flops_per_chip: float
+    raw_bytes_per_chip: float
+    analytic_bytes_per_chip: float
+    wire_bytes_per_chip: float
+    collective_detail: Dict[str, float]
+    memory_analysis: Dict[str, float]
+    meta: Dict[str, Any]
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_chip / hw.PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.analytic_bytes_per_chip / hw.HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.wire_bytes_per_chip / (hw.ICI_LINKS * hw.ICI_BW_PER_LINK)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Perfect-overlap step-time estimate: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful_model_time / estimated_step_time.
+
+        For compute-bound cells this is MFU; for memory/collective-bound cells
+        it is the fraction of the step the bounding resource spends on model-
+        essential traffic.
+        """
+        from repro.configs.base import SHAPES
+        mf = model_flops_cached(self)
+        useful_compute = mf / self.chips / hw.PEAK_FLOPS_BF16
+        return min(1.0, useful_compute / max(self.step_s, 1e-30))
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "kind": self.kind, "chips": self.chips,
+            "flops_per_chip": self.flops_per_chip,
+            "raw_bytes_per_chip": self.raw_bytes_per_chip,
+            "analytic_bytes_per_chip": self.analytic_bytes_per_chip,
+            "wire_bytes_per_chip": self.wire_bytes_per_chip,
+            "collective_detail": self.collective_detail,
+            "memory_analysis": self.memory_analysis,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "step_s": self.step_s,
+            "model_flops": model_flops_cached(self),
+            "flops_ratio": model_flops_cached(self)
+            / max(self.flops_per_chip * self.chips, 1e-30),
+            "meta": {k: v for k, v in self.meta.items()
+                     if isinstance(v, (str, int, float, bool))},
+        }
+
+
+def model_flops_cached(r: Roofline) -> float:
+    from repro.configs import registry
+    from repro.configs.base import SHAPES
+    return model_flops(registry.get(r.arch), SHAPES[r.shape], r.kind)
+
+
+def analyze_extrapolated(cell, compiled_mem, c1, c2, *, n_stack: int, u2: int,
+                         gather_scale: int = 1) -> Roofline:
+    """Roofline from the three-compile protocol (see dryrun.run_cell).
+
+    ``compiled_mem`` supplies memory_analysis; ``c1``/``c2`` (unroll=1/u2,
+    single microbatch) supply the linear FLOP/wire extrapolation.
+    """
+    chips = cell.mesh.devices.size
+    f1 = float(c1.cost_analysis().get("flops", 0.0))
+    f2 = float(c2.cost_analysis().get("flops", 0.0))
+    flops = f1 + (n_stack - 1) * (f2 - f1) / max(u2 - 1, 1)
+    b1 = float(c1.cost_analysis().get("bytes accessed", 0.0))
+    b2 = float(c2.cost_analysis().get("bytes accessed", 0.0))
+    raw_bytes = b1 + (n_stack - 1) * (b2 - b1) / max(u2 - 1, 1)
+
+    w1 = collective_wire_bytes(c1.as_text(), chips)
+    w2 = collective_wire_bytes(c2.as_text(), chips)
+    counts1, counts2 = w1.pop("counts"), w2.pop("counts")
+
+    def _ext(a, b):
+        # if the u2 compile shows LESS of a kind (CSE merged copies), treat the
+        # kind as loop-invariant rather than extrapolating negative.
+        if b < a:
+            return max(a, b)
+        return a + (n_stack - 1) * (b - a) / max(u2 - 1, 1)
+
+    wire = {k: _ext(w1[k], w2[k]) for k in w1}
+    wire["all-gather"] *= gather_scale
+    counts = {k: int(_ext(counts1[k], counts2[k])) for k in counts1}
+    wire_total = sum(max(v, 0.0) for v in wire.values())
+
+    ma = compiled_mem.memory_analysis()
+    mem = {
+        "argument_size": ma.argument_size_in_bytes,
+        "output_size": ma.output_size_in_bytes,
+        "temp_size": ma.temp_size_in_bytes,
+        "alias_size": ma.alias_size_in_bytes,
+        "generated_code_size": ma.generated_code_size_in_bytes,
+    }
+    analytic = analytic_hbm_bytes(cell.cfg, cell.shape, cell.meta, chips)
+    return Roofline(
+        arch=cell.cfg.name, shape=cell.shape.name,
+        mesh="x".join(str(s) for s in cell.mesh.devices.shape),
+        kind=cell.meta["kind"], chips=chips,
+        flops_per_chip=flops, raw_bytes_per_chip=raw_bytes,
+        analytic_bytes_per_chip=analytic, wire_bytes_per_chip=wire_total,
+        collective_detail={**wire, "counts": counts},
+        memory_analysis=mem, meta=cell.meta,
+    )
+
+
+def analyze(cell, lowered, compiled) -> Roofline:
+    chips = cell.mesh.devices.size
+    cost = compiled.cost_analysis()
+    flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    wire = collective_wire_bytes(compiled.as_text(), chips)
+    counts = wire.pop("counts")
+    wire_total = sum(wire.values())
+    ma = compiled.memory_analysis()
+    mem = {
+        "argument_size": ma.argument_size_in_bytes,
+        "output_size": ma.output_size_in_bytes,
+        "temp_size": ma.temp_size_in_bytes,
+        "alias_size": ma.alias_size_in_bytes,
+        "generated_code_size": ma.generated_code_size_in_bytes,
+    }
+    analytic = analytic_hbm_bytes(cell.cfg, cell.shape, cell.meta, chips)
+    return Roofline(
+        arch=cell.cfg.name, shape=cell.shape.name,
+        mesh="x".join(str(s) for s in cell.mesh.devices.shape),
+        kind=cell.meta["kind"], chips=chips,
+        flops_per_chip=flops, raw_bytes_per_chip=raw_bytes,
+        analytic_bytes_per_chip=analytic, wire_bytes_per_chip=wire_total,
+        collective_detail={**wire, "counts": counts},
+        memory_analysis=mem, meta=cell.meta,
+    )

@@ -1,0 +1,395 @@
+"""Cell builders: (architecture x input-shape x mesh) -> lowerable program.
+
+``build_cell`` returns everything ``dryrun.py`` needs to
+``jit(...).lower(...).compile()`` one roofline cell:
+
+* the step function (train_step / prefill_step / serve_step per shape kind),
+* ShapeDtypeStruct stand-ins for every argument (no allocation),
+* in/out shardings derived from the logical-axis rules,
+* donation indices and napkin metadata (microbatches, weight format).
+
+Weight formats for serving cells: ``bf16`` (baseline), ``int8`` (EntroLLM
+QT triples — uint8 symbols resident in HBM, dequant fused into matmuls),
+``int4`` (QT4, nibbles packed along the last axis).  Training always uses the
+schema dtypes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES
+from repro.distributed import sharding as shd
+from repro.distributed.ctx import ShardingHints, set_hints
+from repro.models import api
+from repro.models.layers import QT, QT4
+from repro.models.moe import EPContext, set_ep_context
+from repro.serving import engine
+from repro.training import optimizer as opt, train_loop
+
+SDS = jax.ShapeDtypeStruct
+
+# Activation budget for choosing grad-accum microbatching (bytes per chip of
+# saved scan carries; remat recomputes everything else).
+ACT_BUDGET = 2 << 30
+# Optimizer-moment format switches to EntroLLM-uint8 above this param count
+# (AdamW fp32 moments for a 398B model cannot fit 256 x 16 GB HBM).
+Q8_OPT_THRESHOLD = 100e9
+
+
+@dataclasses.dataclass
+class Cell:
+    cfg: ArchConfig
+    shape: ShapeConfig
+    mesh: Mesh
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Any
+    out_shardings: Any
+    donate: Tuple[int, ...]
+    meta: Dict[str, Any]
+
+    def lower(self):
+        jfn = jax.jit(self.fn, in_shardings=self.in_shardings,
+                      out_shardings=self.out_shardings,
+                      donate_argnums=self.donate)
+        with jax.set_mesh(self.mesh):
+            return jfn.lower(*self.args)
+
+
+# ------------------------------------------------------------------ utilities
+
+def _batch_ways(mesh: Mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            n *= mesh.shape[a]
+    return n
+
+
+def _quantize_pred(name: str, shape: Tuple[int, ...]) -> bool:
+    """Shape-level twin of core.store.default_quantize_predicate."""
+    if len(shape) < 2:
+        return False
+    lname = name.lower()
+    if any(k in lname for k in ("norm", "scale", "bias", "a_log", "dt_", "conv_")):
+        return False
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n >= 4096
+
+
+def param_structs(cfg: ArchConfig, mesh: Mesh, rules: shd.Rules,
+                  weights: str = "bf16") -> Tuple[Dict, Dict]:
+    """(ShapeDtypeStructs, NamedShardings) for the parameter pytree."""
+    sch = api.build(cfg).schema(cfg)
+    rep = NamedSharding(mesh, P())
+    structs: Dict[str, Any] = {}
+    shards: Dict[str, Any] = {}
+    for name, spec in sch.items():
+        ns = NamedSharding(mesh, shd.resolve_spec(spec.axes, spec.shape, rules,
+                                                  mesh))
+        if weights == "bf16" or not _quantize_pred(name, spec.shape):
+            structs[name] = SDS(spec.shape, spec.dtype)
+            shards[name] = ns
+            continue
+        # per-layer (axis-0 channel) scales: broadcastable against q
+        sshape = (spec.shape[0],) + (1,) * (len(spec.shape) - 1)
+        if weights == "int8":
+            structs[name] = QT(SDS(spec.shape, jnp.uint8),
+                               SDS(sshape, jnp.float32),
+                               SDS(sshape, jnp.float32))
+            shards[name] = QT(ns, rep, rep)
+        elif weights == "int4":
+            pshape = spec.shape[:-1] + (spec.shape[-1] // 2,)
+            pns = NamedSharding(mesh, shd.resolve_spec(spec.axes, pshape,
+                                                       rules, mesh))
+            structs[name] = QT4(SDS(pshape, jnp.uint8),
+                                SDS(sshape, jnp.float32),
+                                SDS(sshape, jnp.float32))
+            shards[name] = QT4(pns, rep, rep)
+        else:
+            raise ValueError(weights)
+    return structs, shards
+
+
+def _install_contexts(cfg: ArchConfig, mesh: Mesh, *, batch_sharded: bool,
+                      kv_seq_axes: Tuple[str, ...] = (),
+                      feature_axes: Tuple[str, ...] = ()) -> None:
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if cfg.moe:
+        set_ep_context(EPContext(mesh=mesh, model_axis="model",
+                                 data_axes=data_axes,
+                                 batch_sharded=batch_sharded))
+    else:
+        set_ep_context(None)
+    set_hints(ShardingHints(
+        mesh=mesh,
+        batch_axes=data_axes if batch_sharded else (),
+        model_axis="model",
+        kv_seq_axes=kv_seq_axes,
+        feature_axes=feature_axes,
+        # SP carries help dense stacks (saved-carry bytes / |model|) but
+        # measurably inflate the hybrid family's backward transients on the
+        # CPU analysis backend (EXPERIMENTS.md §Perf) — gate per family.
+        seq_sp=cfg.family != "hybrid"))
+
+
+def _kv_divisible(cfg: ArchConfig, mesh: Mesh) -> bool:
+    m = mesh.shape.get("model", 1)
+    return bool(cfg.n_kv_heads) and cfg.n_kv_heads % m == 0
+
+
+def _arch_rules(cfg: ArchConfig, mesh: Mesh, base: shd.Rules) -> shd.Rules:
+    """KV weight columns shard over model only when whole KV heads divide the
+    axis; otherwise wk/wv stay replicated over model (Megatron GQA practice —
+    splitting inside a head produces degenerate reshape shardings)."""
+    table = dict(base.table)
+    table["kv"] = "model" if _kv_divisible(cfg, mesh) else None
+    return shd.Rules(table)
+
+
+def clear_contexts() -> None:
+    set_ep_context(None)
+    set_hints(None)
+
+
+def _serve_rules(cfg: ArchConfig, mesh: Mesh, *, long_context: bool
+                 ) -> Tuple[shd.Rules, Tuple[str, ...]]:
+    """Arch-aware serving rules: shard KV-cache heads over model when they
+    divide it, otherwise shard the cache sequence axis over model (the
+    flash-decoding layout; GSPMD emits the partial-softmax psum).
+
+    Returns (rules, kv_seq_axes hint for activation constraints).
+    """
+    table = dict(shd.serve_rules(mesh, long_context=long_context).table)
+    if long_context:
+        kv_seq = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        table["kv"] = "model" if _kv_divisible(cfg, mesh) else None
+        table["kv_seq"] = kv_seq
+        return shd.Rules(table), kv_seq
+    if _kv_divisible(cfg, mesh):
+        table["kv"] = "model"
+        table["kv_seq"] = ()
+        return shd.Rules(table), ()
+    table["kv"] = None
+    table["kv_seq"] = "model"
+    return shd.Rules(table), ("model",)
+
+
+def _batch_struct(cfg: ArchConfig, B: int, S: int, *, train: bool) -> Dict:
+    toks = SDS((B, S + 1 if train else S), jnp.int32)
+    if cfg.family == "encdec":
+        return {"tokens": toks, "src_embeds": SDS((B, S, cfg.d_model),
+                                                  jnp.bfloat16)}
+    return {"tokens": toks}
+
+
+def _batch_shardings(batch: Dict, mesh: Mesh, rules: shd.Rules) -> Dict:
+    return {k: shd.batch_sharding(mesh, rules, v.shape)
+            for k, v in batch.items()}
+
+
+def pick_microbatches(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh) -> int:
+    """Smallest grad-accum split whose saved scan carries fit ACT_BUDGET."""
+    ways = _batch_ways(mesh)
+    B_loc = max(1, shape.global_batch // ways)
+    D = cfg.d_model
+    L = cfg.n_layers
+    carry = L * shape.seq_len * D * 2            # bytes per local batch row
+    target = max(1, int(ACT_BUDGET // max(carry, 1)))
+    mb = 1
+    while B_loc // mb > target and mb < B_loc:
+        mb *= 2
+    # shard_map needs every microbatch to cover the batch mesh axes
+    return min(mb, max(shape.global_batch // ways, 1))
+
+
+# ---------------------------------------------------------------- cell builds
+
+def build_train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, *,
+                     unroll: Optional[int] = None,
+                     microbatches: Optional[int] = None,
+                     grad_compress: bool = False,
+                     q8_gather: int = 0) -> Cell:
+    rules = _arch_rules(cfg, mesh, shd.train_rules(mesh))
+    orules = _arch_rules(cfg, mesh, shd.opt_state_rules(mesh))
+    _install_contexts(cfg, mesh, batch_sharded=True)
+
+    q8 = cfg.param_count() >= Q8_OPT_THRESHOLD
+    mb = microbatches or pick_microbatches(cfg, shape, mesh)
+    n_stack = cfg.n_layers // cfg.attn_period if cfg.family == "hybrid" \
+        else cfg.n_layers
+    tc = train_loop.TrainConfig(
+        opt=opt.AdamWConfig(quantized_state=q8),
+        grad_accum_dtype="bf16" if q8 else "f32",
+        q8_gather=q8_gather,
+        microbatches=mb, remat=True,
+        unroll=(n_stack if unroll is None else unroll),
+        q_block=1024 if shape.seq_len > 8192 else 0,
+        grad_compress=grad_compress)
+
+    params, pshard = param_structs(cfg, mesh, rules, "bf16")
+    ostate = jax.eval_shape(partial(opt.init_state, tc.opt), params)
+    oshard_params = shd.param_shardings(cfg, mesh, orules)
+    oshard = opt.state_shardings(
+        tc.opt, {n: s.shape for n, s in params.items()}, oshard_params)
+    batch = _batch_struct(cfg, shape.global_batch, shape.seq_len, train=True)
+    bshard = _batch_shardings(batch, mesh, rules)
+
+    rep = NamedSharding(mesh, P())
+    fn = train_loop.make_train_step(cfg, tc)
+    return Cell(
+        cfg=cfg, shape=shape, mesh=mesh, fn=fn,
+        args=(params, ostate, batch),
+        in_shardings=(pshard, oshard, bshard),
+        out_shardings=(pshard, oshard,
+                       {"loss": rep, "grad_norm": rep, "lr": rep}),
+        donate=(0, 1),
+        meta={"kind": "train", "microbatches": mb, "q8_opt": q8,
+              "weights": "bf16"},
+    )
+
+
+def build_prefill_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, *,
+                       weights: str = "int8",
+                       unroll: Optional[int] = None) -> Cell:
+    rules, _ = _serve_rules(cfg, mesh, long_context=False)
+    rules = _arch_rules(cfg, mesh, rules)
+    _install_contexts(cfg, mesh, batch_sharded=True)
+    B, S = shape.global_batch, shape.seq_len
+    n_stack = cfg.n_layers // cfg.attn_period if cfg.family == "hybrid" \
+        else cfg.n_layers
+
+    sc = engine.ServeConfig(max_len=S, unroll=n_stack if unroll is None else unroll,
+                            q_block=1024 if S > 8192 else 0)
+    params, pshard = param_structs(cfg, mesh, rules, weights)
+
+    mod = api.build(cfg)
+    if cfg.family == "encdec":
+        prompt = _batch_struct(cfg, B, S, train=False)
+    else:
+        prompt = SDS((B, S), jnp.int32)
+
+    def prefill_step(p, prompt):
+        return mod.prefill(cfg, p, prompt, max_len=S, unroll=sc.unroll,
+                           q_block=sc.q_block)
+
+    cache_shapes = jax.eval_shape(lambda: mod.init_cache(cfg, B, S))
+    cshard = shd.tree_shardings(
+        mod.cache_specs(cfg), {k: v.shape for k, v in cache_shapes.items()},
+        rules, mesh)
+    logits_shard = NamedSharding(
+        mesh, shd.resolve_spec(("batch", None, "vocab"),
+                               (B, 1, cfg.padded_vocab()), rules, mesh))
+    pr_shard = (_batch_shardings(prompt, mesh, rules)
+                if isinstance(prompt, dict)
+                else shd.batch_sharding(mesh, rules, prompt.shape))
+    return Cell(
+        cfg=cfg, shape=shape, mesh=mesh, fn=prefill_step,
+        args=(params, prompt),
+        in_shardings=(pshard, pr_shard),
+        out_shardings=(logits_shard, cshard),
+        donate=(),
+        meta={"kind": "prefill", "weights": weights},
+    )
+
+
+def build_decode_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, *,
+                      weights: str = "int8", serve_mode: str = "fsdp",
+                      kv_bits: int = 16,
+                      unroll: Optional[int] = None) -> Cell:
+    """Decode-step cell.
+
+    ``serve_mode``:
+      * ``fsdp`` — baseline: activations batch-sharded over data; weights
+        (embed x model)-sharded are all-gathered per layer.  Faithful to the
+        training layout but moves WEIGHT bytes for a single token's compute.
+      * ``stationary`` — beyond-paper hillclimb: weights never move.  The
+        token activations replicate over the data axis (they are KiB-scale at
+        decode), projections contract against the 2-D-sharded weights with a
+        small psum, and only the KV cache stays batch-/sequence-sharded.
+        Moves ACTIVATION bytes instead of weight bytes — the classic
+        inference inversion of FSDP.
+    """
+    long_context = shape.name == "long_500k"
+    rules, kv_seq_axes = _serve_rules(cfg, mesh, long_context=long_context)
+    rules = _arch_rules(cfg, mesh, rules)
+    B, S = shape.global_batch, shape.seq_len
+    stationary = serve_mode == "stationary"
+    batch_sharded = (not stationary) and B % _batch_ways(mesh) == 0
+    if stationary:
+        # weight-stationary: expert FFN hidden dim carries the data axes (x
+        # is replicated there); dense weights keep embed -> data for the
+        # feature-sharded partial-dot path
+        data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        rules = shd.Rules({**rules.table, "expert_embed": None,
+                           "expert_mlp": data_axes})
+    # io rules: token/logits/x-path sharding (batch dropped when stationary)
+    io_rules = rules if not stationary else shd.Rules(
+        {**rules.table, "batch": ()})
+    _install_contexts(
+        cfg, mesh, batch_sharded=batch_sharded, kv_seq_axes=kv_seq_axes,
+        feature_axes=(tuple(a for a in ("pod", "data") if a in mesh.shape)
+                      if stationary else ()))
+    n_stack = cfg.n_layers // cfg.attn_period if cfg.family == "hybrid" \
+        else cfg.n_layers
+
+    sc = engine.ServeConfig(max_len=S,
+                            unroll=n_stack if unroll is None else unroll)
+    params, pshard = param_structs(cfg, mesh, rules, weights)
+    mod = api.build(cfg)
+
+    ckw = {"kv_bits": kv_bits} if (kv_bits != 16
+                                    and cfg.family == "dense") else {}
+    cache_shapes = jax.eval_shape(lambda: mod.init_cache(cfg, B, S, **ckw))
+    cache = jax.tree.map(lambda s: SDS(s.shape, s.dtype), cache_shapes)
+    cshard = shd.tree_shardings(
+        mod.cache_specs(cfg, **ckw),
+        {k: v.shape for k, v in cache_shapes.items()}, rules, mesh)
+
+    token = SDS((B, 1), jnp.int32)
+    pos = SDS((), jnp.int32)
+    rep = NamedSharding(mesh, P())
+    tok_shard = shd.batch_sharding(mesh, io_rules, (B, 1)) \
+        if batch_sharded else rep
+    logits_shard = NamedSharding(
+        mesh, shd.resolve_spec(("batch", None, "vocab"),
+                               (B, 1, cfg.padded_vocab()), io_rules, mesh))
+
+    fn = engine.make_serve_step(cfg, sc)
+    return Cell(
+        cfg=cfg, shape=shape, mesh=mesh, fn=fn,
+        args=(params, token, cache, pos),
+        in_shardings=(pshard, tok_shard, cshard, rep),
+        out_shardings=(logits_shard, cshard),
+        donate=(2,),
+        meta={"kind": "decode", "weights": weights, "kv_bits": kv_bits,
+              "serve_mode": serve_mode, "long_context": long_context},
+    )
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, *,
+               weights: str = "int8", **kw) -> Cell:
+    if shape.kind == "train":
+        kw.pop("weights", None)
+        return build_train_cell(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_cell(cfg, shape, mesh, weights=weights, **kw)
+    return build_decode_cell(cfg, shape, mesh, weights=weights, **kw)
+
+
+def all_cells(archs: Dict[str, ArchConfig]) -> list:
+    """The 40 assigned cells as (arch_name, shape_name, applicable)."""
+    out = []
+    for a, cfg in archs.items():
+        for s, sc in SHAPES.items():
+            out.append((a, s, sc.applicable(cfg)))
+    return out

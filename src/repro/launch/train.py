@@ -1,0 +1,93 @@
+"""Training launcher.
+
+Two modes:
+
+* default — run REAL steps on this host's devices with a reduced config
+  (CPU-friendly): full data pipeline, AdamW, checkpoints, watchdogs.
+* ``--production`` — build the production-mesh program for the full config
+  and ``.lower().compile()`` it (on real hardware the same code path runs;
+  on this container it is the dry-run proof).
+
+Examples::
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --steps 50
+    PYTHONPATH=src python -m repro.launch.train --arch dbrx-132b --production
+"""
+import argparse
+import os
+import sys
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", required=True)
+    p.add_argument("--shape", default="train_4k")
+    p.add_argument("--steps", type=int, default=20)
+    p.add_argument("--seq-len", type=int, default=128)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--lr", type=float, default=1e-3)
+    p.add_argument("--microbatches", type=int, default=1)
+    p.add_argument("--checkpoint-dir", default=None)
+    p.add_argument("--checkpoint-every", type=int, default=50)
+    p.add_argument("--grad-compress", action="store_true")
+    p.add_argument("--production", action="store_true",
+                   help="lower+compile the full config on the production mesh")
+    p.add_argument("--multi-pod", action="store_true")
+    args = p.parse_args(argv)
+
+    if args.production:
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+    import jax
+    from repro.configs import registry
+    from repro.configs.base import SHAPES
+
+    if args.production:
+        from repro.launch import dryrun
+        d = dryrun.run_cell(args.arch, args.shape, multi_pod=args.multi_pod)
+        return 0 if "error" not in d else 1
+
+    from repro.data.pipeline import DataConfig, SyntheticSource
+    from repro.models import api
+    from repro.training import optimizer as opt, train_loop
+    from repro.distributed.fault_tolerance import (CheckpointHook, NanWatchdog,
+                                                   StepTimeWatchdog)
+    from repro.checkpoint.checkpointer import Checkpointer, CheckpointConfig
+
+    cfg = registry.reduced(registry.get(args.arch))
+    mod = api.build(cfg)
+    params = mod.init(cfg, jax.random.PRNGKey(0))
+    tc = train_loop.TrainConfig(
+        opt=opt.AdamWConfig(schedule=opt.Schedule(
+            base_lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+            total_steps=args.steps)),
+        microbatches=args.microbatches,
+        grad_compress=args.grad_compress)
+    state = opt.init_state(tc.opt, params)
+    dc = DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                    global_batch=args.batch,
+                    src_embed_dim=cfg.d_model if cfg.family == "encdec" else 0)
+    src = SyntheticSource(dc)
+
+    hooks = []
+    watchdog = StepTimeWatchdog()
+    hooks.append(lambda i, p, s, m: watchdog.tick(i) and None)
+    if args.checkpoint_dir:
+        ck = Checkpointer(CheckpointConfig(root=args.checkpoint_dir))
+        hooks.append(CheckpointHook(ck, args.checkpoint_every))
+        hooks.append(NanWatchdog(ck, (params, state)))
+
+    params, state, info = train_loop.train(
+        cfg, tc, params, state, iter(src), args.steps, hooks=tuple(hooks))
+    h = info["history"]
+    print(f"arch={cfg.name} steps={args.steps} "
+          f"loss {h[0]['loss']:.4f} -> {h[-1]['loss']:.4f} "
+          f"({info['steps_per_s']:.2f} steps/s)")
+    if args.checkpoint_dir:
+        ck.save(args.steps, (params, state))
+        print(f"final checkpoint -> {args.checkpoint_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

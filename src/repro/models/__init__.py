@@ -1,0 +1,2 @@
+from . import api, layers
+from .layers import QT

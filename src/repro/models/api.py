@@ -1,0 +1,44 @@
+"""Uniform model API: ``build(cfg)`` returns the family module; every family exposes
+
+    schema(cfg) -> {name: Spec}
+    init(cfg, key) -> params
+    loss_fn(cfg, params, batch, *, unroll, ...) -> scalar
+    prefill(cfg, params, tokens_or_batch, *, max_len, ...) -> (logits, cache)
+    decode_step(cfg, params, token, cache, pos, *, ...) -> (logits, cache)
+    init_cache(cfg, batch, max_len) -> cache pytree
+    cache_specs(cfg) -> logical axes for cache leaves
+"""
+from __future__ import annotations
+
+import types
+from typing import Dict, Tuple
+
+import jax
+
+from repro.configs.base import ArchConfig
+
+
+def build(cfg: ArchConfig) -> types.ModuleType:
+    from . import dense, encdec, hybrid, mamba2, moe
+    return {
+        "dense": dense,
+        "moe": moe,
+        "ssm": mamba2,
+        "hybrid": hybrid,
+        "encdec": encdec,
+    }[cfg.family]
+
+
+def param_shapes(cfg: ArchConfig) -> Dict[str, Tuple[int, ...]]:
+    return {n: s.shape for n, s in build(cfg).schema(cfg).items()}
+
+
+def param_specs(cfg: ArchConfig) -> Dict[str, Tuple]:
+    return {n: s.axes for n, s in build(cfg).schema(cfg).items()}
+
+
+def param_shape_structs(cfg: ArchConfig, dtype=None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every parameter (dry-run: no allocation)."""
+    import jax.numpy as jnp
+    sch = build(cfg).schema(cfg)
+    return {n: jax.ShapeDtypeStruct(s.shape, dtype or s.dtype) for n, s in sch.items()}

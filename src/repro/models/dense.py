@@ -1,0 +1,212 @@
+"""Dense decoder-only transformer (chameleon / stablelm / command-r+ / glm4 / qwen3).
+
+Layers are stacked on a leading axis and iterated with ``lax.scan`` whose ``unroll``
+degree is a lowering knob: smoke tests keep it rolled (fast compile), the dry-run
+unrolls fully so ``cost_analysis`` counts every layer.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .layers import (QT, Schema, Spec, gqa_attention, init_params, matmul,
+                     rms_norm, rope, softmax_xent, swiglu, take_rows, update_kv_cache)
+
+
+def schema(cfg: ArchConfig) -> Schema:
+    L, D, H, KV, hd, F = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                          cfg.hd, cfg.d_ff)
+    Vp = cfg.padded_vocab()
+    resid = 0.02 / (2 * L) ** 0.5    # residual-branch init scaling
+    s: Schema = {
+        "embed": Spec((Vp, D), ("vocab", "embed"), 0.02),
+        "final_norm": Spec((D,), (None,), "ones", jnp.float32),
+        "layers/attn_norm": Spec((L, D), ("layers", None), "ones", jnp.float32),
+        "layers/wq": Spec((L, D, H * hd), ("layers", "embed", "heads")),
+        "layers/wk": Spec((L, D, KV * hd), ("layers", "embed", "kv")),
+        "layers/wv": Spec((L, D, KV * hd), ("layers", "embed", "kv")),
+        "layers/wo": Spec((L, H * hd, D), ("layers", "heads", "embed"), resid),
+        "layers/mlp_norm": Spec((L, D), ("layers", None), "ones", jnp.float32),
+        "layers/w_gate": Spec((L, D, F), ("layers", "embed", "mlp")),
+        "layers/w_up": Spec((L, D, F), ("layers", "embed", "mlp")),
+        "layers/w_down": Spec((L, F, D), ("layers", "mlp", "embed"), resid),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = Spec((D, Vp), ("embed", "vocab"), 0.02)
+    if cfg.qk_norm:
+        s["layers/q_norm"] = Spec((L, hd), ("layers", None), "ones", jnp.float32)
+        s["layers/k_norm"] = Spec((L, hd), ("layers", None), "ones", jnp.float32)
+    return s
+
+
+def init(cfg: ArchConfig, key: jax.Array) -> Dict[str, jax.Array]:
+    return init_params(schema(cfg), key)
+
+
+def _layer_stack(params: Dict[str, Any]) -> Dict[str, Any]:
+    return {k.split("/", 1)[1]: v for k, v in params.items() if k.startswith("layers/")}
+
+
+def quantize_kv(k: jax.Array):
+    """EntroLLM-grid int8 KV quantization: per (token, head) symmetric scale
+    over head_dim — the cache read is the decode-phase HBM bound at serving
+    batch sizes, so halving its bytes is the paper's bandwidth insight
+    applied to the cache (beyond-paper, EXPERIMENTS.md §Perf H3)."""
+    s = jnp.max(jnp.abs(k.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    s = jnp.maximum(s, 1e-8)
+    q = jnp.clip(jnp.round(k.astype(jnp.float32) / s), -127, 127
+                 ).astype(jnp.int8)
+    return q, s.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q: jax.Array, s: jax.Array) -> jax.Array:
+    return q.astype(jnp.bfloat16) * s.astype(jnp.bfloat16)
+
+
+def _attn(cfg: ArchConfig, lp: Dict[str, Any], x: jax.Array, *, positions,
+          cache: Optional[Tuple] = None, pos=None, q_block: int = 0, unroll: int = 1):
+    """Attention sub-block; returns (out, new_cache).
+
+    ``cache`` is (k, v) bf16 or (k, v, k_scale, v_scale) for the int8 cache.
+    """
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = rms_norm(x, lp["attn_norm"])
+    q = matmul(h, lp["wq"]).reshape(B, S, H, hd)
+    k = matmul(h, lp["wk"]).reshape(B, S, KV, hd)
+    v = matmul(h, lp["wv"]).reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"])
+        k = rms_norm(k, lp["k_norm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if cache is None:
+        attn = gqa_attention(q, k, v, causal=True, q_block=q_block, unroll=unroll)
+        new_cache = (k, v)
+    elif len(cache) == 4:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        ck, cv = update_kv_cache(cache[0], cache[1], kq, vq, pos)
+        cks, cvs = update_kv_cache(cache[2], cache[3], ks, vs, pos)
+        attn = gqa_attention(q, dequantize_kv(ck, cks), dequantize_kv(cv, cvs),
+                             causal=False, kv_len=pos + 1)
+        new_cache = (ck, cv, cks, cvs)
+    else:
+        ck, cv = update_kv_cache(cache[0], cache[1], k, v, pos)
+        attn = gqa_attention(q, ck, cv, causal=False, kv_len=pos + 1)
+        new_cache = (ck, cv)
+    out = matmul(attn.reshape(B, S, H * hd), lp["wo"])
+    return out, new_cache
+
+
+def _block(cfg: ArchConfig, lp, x, *, positions, cache=None, pos=None,
+           q_block=0, unroll=1):
+    attn_out, new_cache = _attn(cfg, lp, x, positions=positions, cache=cache, pos=pos,
+                                q_block=q_block, unroll=unroll)
+    x = x + attn_out
+    h = rms_norm(x, lp["mlp_norm"])
+    x = x + swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"])
+    return x, new_cache
+
+
+def forward(cfg: ArchConfig, params, tokens, *, unroll: int = 1, q_block: int = 0,
+            remat: bool = False, collect_cache: bool = False):
+    """Full-sequence forward.  Returns (hidden, cache|None)."""
+    from repro.distributed.ctx import constrain_activation
+    B, S = tokens.shape
+    x = constrain_activation(take_rows(params["embed"], tokens))
+    positions = jnp.arange(S)
+    stack = _layer_stack(params)
+
+    def body(x, lp):
+        x, kv = _block(cfg, lp, x, positions=positions, q_block=q_block, unroll=unroll)
+        return constrain_activation(x), kv if collect_cache else None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, caches = jax.lax.scan(fn, x, stack, unroll=unroll)
+    x = rms_norm(x, params["final_norm"])
+    return x, caches
+
+
+def logits_fn(cfg: ArchConfig, params, x: jax.Array) -> jax.Array:
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    if cfg.tie_embeddings:
+        from .layers import deq
+        return matmul(x, deq(head).T)
+    return matmul(x, head)
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, unroll: int = 1, q_block: int = 0,
+            remat: bool = True) -> jax.Array:
+    tokens = batch["tokens"]
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    x, _ = forward(cfg, params, inp, unroll=unroll, q_block=q_block, remat=remat)
+    return softmax_xent(logits_fn(cfg, params, x), labels, cfg.vocab)
+
+
+# ------------------------------------------------------------------------- serving
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               kv_bits: int = 16):
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    if kv_bits == 8:
+        return {
+            "k": jnp.zeros((L, batch, max_len, KV, hd), jnp.int8),
+            "v": jnp.zeros((L, batch, max_len, KV, hd), jnp.int8),
+            "k_scale": jnp.zeros((L, batch, max_len, KV, 1), jnp.bfloat16),
+            "v_scale": jnp.zeros((L, batch, max_len, KV, 1), jnp.bfloat16),
+        }
+    return {
+        "k": jnp.zeros((L, batch, max_len, KV, hd), dtype),
+        "v": jnp.zeros((L, batch, max_len, KV, hd), dtype),
+    }
+
+
+def cache_specs(cfg: ArchConfig, kv_bits: int = 16
+                ) -> Dict[str, Tuple[Optional[str], ...]]:
+    s = {
+        "k": ("layers", "batch", "kv_seq", "kv", None),
+        "v": ("layers", "batch", "kv_seq", "kv", None),
+    }
+    if kv_bits == 8:
+        s["k_scale"] = ("layers", "batch", "kv_seq", "kv", None)
+        s["v_scale"] = ("layers", "batch", "kv_seq", "kv", None)
+    return s
+
+
+def prefill(cfg: ArchConfig, params, tokens, *, max_len: Optional[int] = None,
+            unroll: int = 1, q_block: int = 0):
+    """Run the prompt; return (last-position logits, cache padded to max_len)."""
+    B, S = tokens.shape
+    max_len = max_len or S
+    x, caches = forward(cfg, params, tokens, unroll=unroll, q_block=q_block,
+                        collect_cache=True)
+    k, v = caches
+    pad = [(0, 0), (0, 0), (0, max_len - S), (0, 0), (0, 0)]
+    cache = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+    logits = logits_fn(cfg, params, x[:, -1:, :])
+    return logits, cache
+
+
+def decode_step(cfg: ArchConfig, params, token, cache, pos, *, unroll: int = 1):
+    """One generation step.  token: (B, 1) int32; pos: scalar current position."""
+    from repro.distributed.ctx import constrain_activation
+    B = token.shape[0]
+    x = constrain_activation(take_rows(params["embed"], token))
+    positions = pos + jnp.arange(1)
+    stack = _layer_stack(params)
+    q8 = "k_scale" in cache
+
+    def body(x, xs):
+        lp, *c = xs
+        x, c = _block(cfg, lp, x, positions=positions, cache=tuple(c), pos=pos)
+        return constrain_activation(x), c
+
+    keys = ("k", "v", "k_scale", "v_scale") if q8 else ("k", "v")
+    x, out = jax.lax.scan(body, x, (stack, *[cache[k] for k in keys]),
+                          unroll=unroll)
+    x = rms_norm(x, params["final_norm"])
+    return logits_fn(cfg, params, x), dict(zip(keys, out))

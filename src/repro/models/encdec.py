@@ -1,0 +1,250 @@
+"""Encoder-decoder transformer backbone (seamless-m4t-medium).
+
+The modality frontend is a STUB per the assignment: the batch carries
+precomputed frame embeddings ``src_embeds`` (B, S_src, D) instead of raw audio;
+``input_specs`` in the launch layer emits the matching ShapeDtypeStruct.
+
+Shape-cell semantics (documented in DESIGN.md): the assigned ``seq_len``
+applies to both the source frame count and the target token count for
+train/prefill cells; decode cells run one target token against a ``seq_len``
+self-attention KV cache plus the fixed ``seq_len`` cross-attention KV computed
+at prefill.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .layers import (Schema, Spec, gqa_attention, init_params, matmul, rms_norm,
+                     rope, softmax_xent, swiglu, take_rows, update_kv_cache)
+
+
+def _attn_schema(p: str, L: int, D: int, H: int, KV: int, hd: int, resid: float
+                 ) -> Schema:
+    return {
+        f"{p}/norm": Spec((L, D), ("layers", None), "ones", jnp.float32),
+        f"{p}/wq": Spec((L, D, H * hd), ("layers", "embed", "heads")),
+        f"{p}/wk": Spec((L, D, KV * hd), ("layers", "embed", "kv")),
+        f"{p}/wv": Spec((L, D, KV * hd), ("layers", "embed", "kv")),
+        f"{p}/wo": Spec((L, H * hd, D), ("layers", "heads", "embed"), resid),
+    }
+
+
+def _mlp_schema(p: str, L: int, D: int, F: int, resid: float) -> Schema:
+    return {
+        f"{p}/norm": Spec((L, D), ("layers", None), "ones", jnp.float32),
+        f"{p}/w_gate": Spec((L, D, F), ("layers", "embed", "mlp")),
+        f"{p}/w_up": Spec((L, D, F), ("layers", "embed", "mlp")),
+        f"{p}/w_down": Spec((L, F, D), ("layers", "mlp", "embed"), resid),
+    }
+
+
+def schema(cfg: ArchConfig) -> Schema:
+    D, H, KV, hd, F = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_ff
+    Le, Ld = cfg.enc_layers, cfg.n_layers
+    Vp = cfg.padded_vocab()
+    resid = 0.02 / (2 * (Le + Ld)) ** 0.5
+    s: Schema = {
+        "embed": Spec((Vp, D), ("vocab", "embed"), 0.02),
+        "enc_final_norm": Spec((D,), (None,), "ones", jnp.float32),
+        "dec_final_norm": Spec((D,), (None,), "ones", jnp.float32),
+        "lm_head": Spec((D, Vp), ("embed", "vocab"), 0.02),
+    }
+    s.update(_attn_schema("enc/self", Le, D, H, KV, hd, resid))
+    s.update(_mlp_schema("enc/mlp", Le, D, F, resid))
+    s.update(_attn_schema("dec/self", Ld, D, H, KV, hd, resid))
+    s.update(_attn_schema("dec/cross", Ld, D, H, KV, hd, resid))
+    s.update(_mlp_schema("dec/mlp", Ld, D, F, resid))
+    return s
+
+
+def init(cfg: ArchConfig, key: jax.Array) -> Dict[str, jax.Array]:
+    return init_params(schema(cfg), key)
+
+
+def _stack(params: Dict[str, Any], prefix: str) -> Dict[str, Any]:
+    pre = prefix + "/"
+    return {k[len(pre):]: v for k, v in params.items() if k.startswith(pre)}
+
+
+def _self_attn(cfg, lp, x, *, positions, causal, cache=None, pos=None,
+               q_block=0, unroll=1):
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = rms_norm(x, lp["norm"])
+    q = matmul(h, lp["wq"]).reshape(B, S, H, hd)
+    k = matmul(h, lp["wk"]).reshape(B, S, KV, hd)
+    v = matmul(h, lp["wv"]).reshape(B, S, KV, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if cache is None:
+        attn = gqa_attention(q, k, v, causal=causal, q_block=q_block, unroll=unroll)
+        new_cache = (k, v)
+    else:
+        ck, cv = update_kv_cache(cache[0], cache[1], k, v, pos)
+        attn = gqa_attention(q, ck, cv, causal=False, kv_len=pos + 1)
+        new_cache = (ck, cv)
+    return x + matmul(attn.reshape(B, S, H * hd), lp["wo"]), new_cache
+
+
+def _cross_attn(cfg, lp, x, enc_kv, *, q_block=0, unroll=1):
+    """enc_kv: precomputed (k, v) each (B, S_src, KV, hd) — fixed during decode."""
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    h = rms_norm(x, lp["norm"])
+    q = matmul(h, lp["wq"]).reshape(B, S, H, hd)
+    attn = gqa_attention(q, enc_kv[0], enc_kv[1], causal=False, q_block=q_block,
+                         unroll=unroll)
+    return x + matmul(attn.reshape(B, S, H * hd), lp["wo"])
+
+
+def _cross_kv(cfg, lp, enc_out):
+    B, T, D = enc_out.shape
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    k = matmul(enc_out, lp["wk"]).reshape(B, T, KV, hd)
+    v = matmul(enc_out, lp["wv"]).reshape(B, T, KV, hd)
+    return k, v
+
+
+def _mlp(lp, x):
+    return x + swiglu(rms_norm(x, lp["norm"]), lp["w_gate"], lp["w_up"], lp["w_down"])
+
+
+def encode(cfg: ArchConfig, params, src_embeds: jax.Array, *, unroll: int = 1,
+           q_block: int = 0, remat: bool = False) -> jax.Array:
+    """Bidirectional encoder over precomputed frontend embeddings."""
+    B, S, D = src_embeds.shape
+    positions = jnp.arange(S)
+    sa, ml = _stack(params, "enc/self"), _stack(params, "enc/mlp")
+
+    from repro.distributed.ctx import constrain_activation
+
+    def body(x, lps):
+        lp_sa, lp_ml = lps
+        x, _ = _self_attn(cfg, lp_sa, x, positions=positions, causal=False,
+                          q_block=q_block, unroll=unroll)
+        return constrain_activation(_mlp(lp_ml, x)), None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(fn, src_embeds, (sa, ml), unroll=unroll)
+    return rms_norm(x, params["enc_final_norm"])
+
+
+def decode_train(cfg: ArchConfig, params, tokens, enc_out, *, unroll: int = 1,
+                 q_block: int = 0, remat: bool = False) -> jax.Array:
+    B, S = tokens.shape
+    x = take_rows(params["embed"], tokens)
+    positions = jnp.arange(S)
+    sa = _stack(params, "dec/self")
+    ca = _stack(params, "dec/cross")
+    ml = _stack(params, "dec/mlp")
+
+    from repro.distributed.ctx import constrain_activation
+
+    def body(x, lps):
+        lp_sa, lp_ca, lp_ml = lps
+        x, _ = _self_attn(cfg, lp_sa, x, positions=positions, causal=True,
+                          q_block=q_block, unroll=unroll)
+        x = _cross_attn(cfg, lp_ca, x, _cross_kv(cfg, lp_ca, enc_out),
+                        q_block=q_block, unroll=unroll)
+        return constrain_activation(_mlp(lp_ml, x)), None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(fn, x, (sa, ca, ml), unroll=unroll)
+    return rms_norm(x, params["dec_final_norm"])
+
+
+def logits_fn(cfg: ArchConfig, params, x: jax.Array) -> jax.Array:
+    return matmul(x, params["lm_head"])
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, unroll: int = 1, q_block: int = 0,
+            remat: bool = True) -> jax.Array:
+    """batch: {"src_embeds": (B, S_src, D), "tokens": (B, S_tgt)}."""
+    tokens = batch["tokens"]
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    enc_out = encode(cfg, params, batch["src_embeds"], unroll=unroll,
+                     q_block=q_block, remat=remat)
+    x = decode_train(cfg, params, inp, enc_out, unroll=unroll, q_block=q_block,
+                     remat=remat)
+    return softmax_xent(logits_fn(cfg, params, x), labels, cfg.vocab)
+
+
+# ------------------------------------------------------------------------- serving
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               src_len: Optional[int] = None):
+    Ld, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    src_len = src_len or max_len
+    return {
+        "k": jnp.zeros((Ld, batch, max_len, KV, hd), dtype),
+        "v": jnp.zeros((Ld, batch, max_len, KV, hd), dtype),
+        "xk": jnp.zeros((Ld, batch, src_len, KV, hd), dtype),
+        "xv": jnp.zeros((Ld, batch, src_len, KV, hd), dtype),
+    }
+
+
+def cache_specs(cfg: ArchConfig) -> Dict[str, Tuple[Optional[str], ...]]:
+    return {
+        "k": ("layers", "batch", "kv_seq", "kv", None),
+        "v": ("layers", "batch", "kv_seq", "kv", None),
+        "xk": ("layers", "batch", "kv_seq", "kv", None),
+        "xv": ("layers", "batch", "kv_seq", "kv", None),
+    }
+
+
+def prefill(cfg: ArchConfig, params, batch, *, max_len: Optional[int] = None,
+            unroll: int = 1, q_block: int = 0):
+    """batch: {"src_embeds", "tokens"} — runs encoder + target prefix; returns
+    (last-position logits, cache with self-attn KV padded to max_len + cross KV)."""
+    src_embeds, tokens = batch["src_embeds"], batch["tokens"]
+    B, S = tokens.shape
+    max_len = max_len or S
+    enc_out = encode(cfg, params, src_embeds, unroll=unroll, q_block=q_block)
+
+    x = take_rows(params["embed"], tokens)
+    positions = jnp.arange(S)
+    sa = _stack(params, "dec/self")
+    ca = _stack(params, "dec/cross")
+    ml = _stack(params, "dec/mlp")
+
+    def body(x, lps):
+        lp_sa, lp_ca, lp_ml = lps
+        x, (k, v) = _self_attn(cfg, lp_sa, x, positions=positions, causal=True,
+                               q_block=q_block, unroll=unroll)
+        xk, xv = _cross_kv(cfg, lp_ca, enc_out)
+        x = _cross_attn(cfg, lp_ca, x, (xk, xv), q_block=q_block, unroll=unroll)
+        return _mlp(lp_ml, x), (k, v, xk, xv)
+
+    x, (k, v, xk, xv) = jax.lax.scan(body, x, (sa, ca, ml), unroll=unroll)
+    x = rms_norm(x, params["dec_final_norm"])
+    pad = [(0, 0), (0, 0), (0, max_len - S), (0, 0), (0, 0)]
+    cache = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad), "xk": xk, "xv": xv}
+    return logits_fn(cfg, params, x[:, -1:, :]), cache
+
+
+def decode_step(cfg: ArchConfig, params, token, cache, pos, *, unroll: int = 1):
+    from repro.distributed.ctx import constrain_activation
+    B = token.shape[0]
+    x = constrain_activation(take_rows(params["embed"], token))
+    positions = pos + jnp.arange(1)
+    sa = _stack(params, "dec/self")
+    ca = _stack(params, "dec/cross")
+    ml = _stack(params, "dec/mlp")
+
+    def body(x, xs):
+        lp_sa, lp_ca, lp_ml, ck, cv, xk, xv = xs
+        x, (ck, cv) = _self_attn(cfg, lp_sa, x, positions=positions, causal=False,
+                                 cache=(ck, cv), pos=pos)
+        x = _cross_attn(cfg, lp_ca, x, (xk, xv))
+        return constrain_activation(_mlp(lp_ml, x)), (ck, cv)
+
+    x, (ck, cv) = jax.lax.scan(
+        body, x, (sa, ca, ml, cache["k"], cache["v"], cache["xk"], cache["xv"]),
+        unroll=unroll)
+    x = rms_norm(x, params["dec_final_norm"])
+    return logits_fn(cfg, params, x), {"k": ck, "v": cv,
+                                       "xk": cache["xk"], "xv": cache["xv"]}

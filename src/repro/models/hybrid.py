@@ -1,0 +1,287 @@
+"""Jamba-style hybrid decoder: Mamba + attention interleave with MoE FFNs.
+
+Layer pattern (arXiv:2403.19887): layers are grouped into *periods* of
+``attn_period`` blocks; each period holds exactly ONE attention block (at the
+middle position, matching Jamba's 1:7 attention:mamba ratio for period 8) and
+``attn_period - 1`` Mamba-2 blocks.  Every block carries an FFN; blocks at odd
+within-period positions use MoE (``moe.every_n == 2``), the rest a dense MLP.
+
+Because the within-period pattern repeats exactly (``every_n`` divides
+``attn_period``), parameters are stacked over PERIODS and iterated with one
+``lax.scan``; the 8 per-position sub-blocks unroll inside the scan body.  This
+keeps compile time O(period) while letting the dry-run unroll fully.
+
+The 500k-token decode shape runs on this family: the 9 attention layers hold a
+sharded KV cache (sequence-sharded over the data axis, flash-decoding-style
+partial-softmax combine in the serving layer); the 63 Mamba layers carry O(1)
+SSM state.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import dense, mamba2
+from .layers import (Schema, Spec, init_params, matmul, rms_norm, softmax_xent,
+                     swiglu, take_rows, update_kv_cache, gqa_attention, rope)
+from .moe import moe_block_schema, moe_mlp, _padded_experts
+
+
+def _layout(cfg: ArchConfig):
+    """Per-period position layout: list of (mixer, ffn) strings."""
+    period = cfg.attn_period
+    assert cfg.n_layers % period == 0, (cfg.n_layers, period)
+    every = cfg.moe.every_n if cfg.moe else 0
+    if every:
+        assert period % every == 0, (period, every)
+    attn_idx = period // 2
+    out = []
+    for j in range(period):
+        mixer = "attn" if j == attn_idx else "mamba"
+        ffn = "moe" if (every and j % every == every - 1) else "mlp"
+        out.append((mixer, ffn))
+    return out
+
+
+def schema(cfg: ArchConfig) -> Schema:
+    D, F = cfg.d_model, cfg.d_ff
+    period = cfg.attn_period
+    nP = cfg.n_layers // period
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ssm = cfg.ssm
+    Din = ssm.d_inner(D)
+    Hs, N, G = ssm.n_heads(D), ssm.d_state, 1
+    d_in_proj = 2 * Din + 2 * G * N + Hs
+    Vp = cfg.padded_vocab()
+    resid = 0.02 / (2 * cfg.n_layers) ** 0.5
+    s: Schema = {
+        "embed": Spec((Vp, D), ("vocab", "embed"), 0.02),
+        "final_norm": Spec((D,), (None,), "ones", jnp.float32),
+        "lm_head": Spec((D, Vp), ("embed", "vocab"), 0.02),
+    }
+    for j, (mixer, ffn) in enumerate(_layout(cfg)):
+        p = f"periods/pos{j}"
+        if mixer == "attn":
+            s[f"{p}/attn_norm"] = Spec((nP, D), ("layers", None), "ones", jnp.float32)
+            s[f"{p}/wq"] = Spec((nP, D, H * hd), ("layers", "embed", "heads"))
+            s[f"{p}/wk"] = Spec((nP, D, KV * hd), ("layers", "embed", "kv"))
+            s[f"{p}/wv"] = Spec((nP, D, KV * hd), ("layers", "embed", "kv"))
+            s[f"{p}/wo"] = Spec((nP, H * hd, D), ("layers", "heads", "embed"), resid)
+        else:
+            s.update(mamba2.mamba_schema(p, nP, D, ssm, resid))
+        s[f"{p}/mlp_norm"] = Spec((nP, D), ("layers", None), "ones", jnp.float32)
+        if ffn == "moe":
+            Ep = _padded_experts(cfg)
+            s.update(moe_block_schema(f"{p}/moe", nP, D, F, cfg.moe, Ep, resid))
+        else:
+            s[f"{p}/w_gate"] = Spec((nP, D, F), ("layers", "embed", "mlp"))
+            s[f"{p}/w_up"] = Spec((nP, D, F), ("layers", "embed", "mlp"))
+            s[f"{p}/w_down"] = Spec((nP, F, D), ("layers", "mlp", "embed"), resid)
+    return s
+
+
+def init(cfg: ArchConfig, key: jax.Array) -> Dict[str, jax.Array]:
+    return init_params(schema(cfg), key)
+
+
+def _period_stack(params: Dict[str, Any]) -> Dict[str, Any]:
+    return {k.split("/", 1)[1]: v for k, v in params.items()
+            if k.startswith("periods/")}
+
+
+def _pos_params(pp: Dict[str, Any], j: int) -> Dict[str, Any]:
+    pre = f"pos{j}/"
+    return {k[len(pre):]: v for k, v in pp.items() if k.startswith(pre)}
+
+
+def _ffn(cfg: ArchConfig, lp: Dict[str, Any], x: jax.Array, ffn_kind: str):
+    h = rms_norm(x, lp["mlp_norm"])
+    if ffn_kind == "moe":
+        wts = {k.split("/", 1)[1]: v for k, v in lp.items() if k.startswith("moe/")}
+        y, aux = moe_mlp(h, wts, cfg.moe, _padded_experts(cfg))
+        return x + y, aux
+    return x + swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"]), jnp.float32(0.0)
+
+
+def _attn_block(cfg, lp, x, *, positions, cache=None, pos=None, q_block=0, unroll=1):
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = rms_norm(x, lp["attn_norm"])
+    q = matmul(h, lp["wq"]).reshape(B, S, H, hd)
+    k = matmul(h, lp["wk"]).reshape(B, S, KV, hd)
+    v = matmul(h, lp["wv"]).reshape(B, S, KV, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if cache is None:
+        attn = gqa_attention(q, k, v, causal=True, q_block=q_block, unroll=unroll)
+        new_cache = (k, v)
+    else:
+        ck, cv = update_kv_cache(cache[0], cache[1], k, v, pos)
+        attn = gqa_attention(q, ck, cv, causal=False, kv_len=pos + 1)
+        new_cache = (ck, cv)
+    return x + matmul(attn.reshape(B, S, H * hd), lp["wo"]), new_cache
+
+
+def _period_body(cfg: ArchConfig, pp: Dict[str, Any], x: jax.Array, *,
+                 positions, caches: Optional[Dict] = None, pos=None,
+                 q_block: int = 0, unroll: int = 1, chunk: Optional[int] = None,
+                 collect: bool = False, remat_inner: bool = False):
+    """Apply one period's blocks.  caches: {"k","v","conv_x","conv_bc","ssm"}
+    period-local.
+
+    ``remat_inner`` checkpoints every sub-block individually: with only the
+    period-level checkpoint, the backward replay keeps ALL eight sub-blocks'
+    FSDP weight gathers live at once (~40 GiB/chip for jamba-398B); nesting
+    bounds the live gathers to one sub-block.
+    """
+    from repro.distributed.ctx import constrain_activation
+    new_kv = None
+    new_conv_x, new_conv_bc, new_ssm = [], [], []
+    aux_total = jnp.float32(0.0)
+    mamba_i = 0
+    decode = caches is not None and x.shape[1] == 1 and pos is not None
+
+    def wrap(f):
+        return jax.checkpoint(f) if remat_inner else f
+
+    for j, (mixer, ffn_kind) in enumerate(_layout(cfg)):
+        lp = _pos_params(pp, j)
+        if mixer == "attn":
+            cache = (caches["k"], caches["v"]) if decode else None
+            x, kv = wrap(lambda lp, x: _attn_block(
+                cfg, lp, x, positions=positions, cache=cache, pos=pos,
+                q_block=q_block, unroll=unroll))(lp, x)
+            new_kv = kv
+        else:
+            cs = (caches["conv_x"][mamba_i], caches["conv_bc"][mamba_i]) \
+                if decode else None
+            hs = caches["ssm"][mamba_i] if decode else None
+            out, ((cx2, cbc2), hs2) = wrap(lambda lp, x: mamba2._mamba_block(
+                cfg, lp, x, conv_state=cs, ssm_state=hs, chunk=chunk))(lp, x)
+            x = x + out
+            if decode or collect:
+                new_conv_x.append(cx2)
+                new_conv_bc.append(cbc2)
+                new_ssm.append(hs2)
+            mamba_i += 1
+        x, aux = wrap(lambda lp, x: _ffn(cfg, lp, x, ffn_kind))(lp, x)
+        if remat_inner:
+            x = constrain_activation(x)
+        aux_total = aux_total + aux
+    out_caches = None
+    if decode or collect:
+        out_caches = {
+            "k": new_kv[0], "v": new_kv[1],
+            "conv_x": jnp.stack(new_conv_x),
+            "conv_bc": jnp.stack(new_conv_bc), "ssm": jnp.stack(new_ssm),
+        }
+    return x, out_caches, aux_total
+
+
+def forward(cfg: ArchConfig, params, tokens, *, unroll: int = 1, q_block: int = 0,
+            remat: bool = False, collect_cache: bool = False,
+            chunk: Optional[int] = None):
+    from repro.distributed.ctx import constrain_activation
+    B, S = tokens.shape
+    x = constrain_activation(take_rows(params["embed"], tokens))
+    positions = jnp.arange(S)
+    stack = _period_stack(params)
+
+    def body(carry, pp):
+        x, aux_sum = carry
+        x, caches, aux = _period_body(cfg, pp, x, positions=positions,
+                                      q_block=q_block, unroll=unroll, chunk=chunk,
+                                      collect=collect_cache, remat_inner=remat)
+        return (constrain_activation(x), aux_sum + aux), \
+            caches if collect_cache else None
+
+    fn = jax.checkpoint(body) if remat else body
+    (x, aux), caches = jax.lax.scan(fn, (x, jnp.float32(0.0)), stack, unroll=unroll)
+    x = rms_norm(x, params["final_norm"])
+    return x, caches, aux / cfg.n_layers
+
+
+def logits_fn(cfg: ArchConfig, params, x: jax.Array) -> jax.Array:
+    return matmul(x, params["lm_head"])
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, unroll: int = 1, q_block: int = 0,
+            remat: bool = True, aux_coef: float = 0.01,
+            chunk: Optional[int] = None) -> jax.Array:
+    tokens = batch["tokens"]
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    x, _, aux = forward(cfg, params, inp, unroll=unroll, q_block=q_block,
+                        remat=remat, chunk=chunk)
+    return softmax_xent(logits_fn(cfg, params, x), labels, cfg.vocab) + aux_coef * aux
+
+
+# ------------------------------------------------------------------------- serving
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    ssm = cfg.ssm
+    period = cfg.attn_period
+    nP = cfg.n_layers // period
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    Din = ssm.d_inner(cfg.d_model)
+    Hs, N, G = ssm.n_heads(cfg.d_model), ssm.d_state, 1
+    n_mamba = period - 1
+    return {
+        "k": jnp.zeros((nP, batch, max_len, KV, hd), dtype),
+        "v": jnp.zeros((nP, batch, max_len, KV, hd), dtype),
+        "conv_x": jnp.zeros((nP, n_mamba, batch, ssm.d_conv - 1, Din), dtype),
+        "conv_bc": jnp.zeros((nP, n_mamba, batch, ssm.d_conv - 1, 2 * G * N),
+                             dtype),
+        "ssm": jnp.zeros((nP, n_mamba, batch, Hs, ssm.head_dim, N), jnp.float32),
+    }
+
+
+def cache_specs(cfg: ArchConfig) -> Dict[str, Tuple[Optional[str], ...]]:
+    return {
+        "k": ("layers", "batch", "kv_seq", "kv", None),
+        "v": ("layers", "batch", "kv_seq", "kv", None),
+        "conv_x": ("layers", None, "batch", None, "mlp"),
+        "conv_bc": ("layers", None, "batch", None, None),
+        "ssm": ("layers", None, "batch", "heads", None, None),
+    }
+
+
+def prefill(cfg: ArchConfig, params, tokens, *, max_len: Optional[int] = None,
+            unroll: int = 1, q_block: int = 0, chunk: Optional[int] = None):
+    B, S = tokens.shape
+    max_len = max_len or S
+    x, caches, _ = forward(cfg, params, tokens, unroll=unroll, q_block=q_block,
+                           collect_cache=True, chunk=chunk)
+    pad = [(0, 0), (0, 0), (0, max_len - S), (0, 0), (0, 0)]
+    cache = {
+        "k": jnp.pad(caches["k"], pad), "v": jnp.pad(caches["v"], pad),
+        "conv_x": caches["conv_x"], "conv_bc": caches["conv_bc"],
+        "ssm": caches["ssm"],
+    }
+    return logits_fn(cfg, params, x[:, -1:, :]), cache
+
+
+def decode_step(cfg: ArchConfig, params, token, cache, pos, *, unroll: int = 1):
+    from repro.distributed.ctx import constrain_activation
+    B = token.shape[0]
+    x = constrain_activation(take_rows(params["embed"], token))
+    positions = pos + jnp.arange(1)
+    stack = _period_stack(params)
+
+    def body(x, xs):
+        pp, ck, cv, ccx, ccbc, cssm = xs
+        caches = {"k": ck, "v": cv, "conv_x": ccx, "conv_bc": ccbc, "ssm": cssm}
+        x, nc, _ = _period_body(cfg, pp, x, positions=positions, caches=caches,
+                                pos=pos)
+        return constrain_activation(x), \
+            (nc["k"], nc["v"], nc["conv_x"], nc["conv_bc"], nc["ssm"])
+
+    x, (ck, cv, ccx, ccbc, cssm) = jax.lax.scan(
+        body, x, (stack, cache["k"], cache["v"], cache["conv_x"],
+                  cache["conv_bc"], cache["ssm"]),
+        unroll=unroll)
+    x = rms_norm(x, params["final_norm"])
+    return logits_fn(cfg, params, x), {"k": ck, "v": cv, "conv_x": ccx,
+                                       "conv_bc": ccbc, "ssm": cssm}

@@ -1,0 +1,294 @@
+"""Shared model-building blocks (pure JAX, functional, schema-driven).
+
+Parameters live in a flat ``{name: array}`` dict; a parallel schema maps each name to
+``(shape, logical_axes, init)``.  Logical axes (e.g. ``"vocab"``, "heads", "mlp",
+"expert") are resolved to mesh axes by ``repro.distributed.sharding`` — models know
+nothing about meshes.
+
+Weight tensors may be plain arrays OR :class:`QT` triples (quantized weight + scale +
+zero) — ``matmul``/``take`` dequantize on the fly, which XLA fuses into the consuming
+dot, keeping integer bytes on the HBM path (the EntroLLM serving mode).  When the
+``repro.kernels`` Pallas path is enabled, ``matmul`` routes to the fused dequant-matmul
+kernel instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------- schema
+
+Axes = Tuple[Optional[str], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    axes: Axes                      # logical axis names, len == len(shape)
+    init: Any = 0.02                # float std | "zeros" | "ones" | "a_log" | "dt_bias"
+    dtype: Any = jnp.bfloat16       # norms/ssm-sensitive params use f32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Schema = Dict[str, Spec]
+
+
+def init_param(key: jax.Array, spec: Spec) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "a_log":        # mamba2: A in [-16, -1] via log
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(spec.dtype)
+    if spec.init == "dt_bias":      # softplus^-1 of dt in [1e-3, 1e-1]
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1e-3, 1e-1)
+        return jnp.log(jnp.expm1(u)).astype(spec.dtype)
+    std = float(spec.init)
+    return (std * jax.random.normal(key, spec.shape, jnp.float32)).astype(spec.dtype)
+
+
+def init_params(schema: Schema, key: jax.Array) -> Dict[str, jax.Array]:
+    names = sorted(schema)
+    keys = jax.random.split(key, len(names))
+    return {n: init_param(k, schema[n]) for n, k in zip(names, keys)}
+
+
+# ----------------------------------------------------------------- quantized weights
+
+class QT(NamedTuple):
+    """Quantized weight triple; leaves integer bytes on the HBM path."""
+    q: jax.Array        # uint8 symbols
+    scale: jax.Array    # f32 broadcastable
+    zero: jax.Array     # f32 broadcastable
+
+
+class QT4(NamedTuple):
+    """int4 weights packed two-per-byte along the LAST axis (see
+    kernels.ops.pack_nibbles): q[..., j] holds symbol 2j in the low nibble and
+    symbol 2j+1 in the high nibble.  Unpacking is shifts + interleave — cheap,
+    fusable, and halves the HBM bytes of the uint8 path again."""
+    q: jax.Array        # uint8, last dim = N/2
+    scale: jax.Array
+    zero: jax.Array
+
+
+def _unpack4(q: jax.Array) -> jax.Array:
+    lo = q & jnp.uint8(0x0F)
+    hi = q >> jnp.uint8(4)
+    return jnp.stack([lo, hi], axis=-1).reshape(*q.shape[:-1], q.shape[-1] * 2)
+
+
+class QTG(NamedTuple):
+    """Quantized weight with a gradient path to the bf16 master (training's
+    compressed-FSDP-gather mode): forward computes from the uint8 symbols
+    (the master is dead code, so only integer bytes cross the FSDP
+    all-gather); backward is a straight-through estimator into the master."""
+    q: jax.Array        # uint8 symbols (packed nibbles when bits == 4)
+    scale: jax.Array
+    zero: jax.Array
+    master: jax.Array   # bf16 FSDP-sharded master weight (grad target)
+    # static marker for 4-bit packing rides in scale's trailing dim (see deq)
+
+
+@jax.custom_vjp
+def _ste_deq(master, q, scale, zero):
+    # packed-nibble detection is static: packed q has half the master's
+    # trailing dim
+    sym = _unpack4(q) if q.shape[-1] != master.shape[-1] else q
+    return (sym.astype(jnp.bfloat16) * scale.astype(jnp.bfloat16)
+            + zero.astype(jnp.bfloat16))
+
+
+def _ste_deq_fwd(master, q, scale, zero):
+    return _ste_deq(master, q, scale, zero), None
+
+
+def _ste_deq_bwd(_, g):
+    # straight-through: full gradient to the master weight
+    return g.astype(jnp.bfloat16), None, None, None
+
+
+_ste_deq.defvjp(_ste_deq_fwd, _ste_deq_bwd)
+
+
+def deq(w: Any, dtype=jnp.bfloat16) -> jax.Array:
+    if isinstance(w, QT):
+        return w.q.astype(dtype) * w.scale.astype(dtype) + w.zero.astype(dtype)
+    if isinstance(w, QT4):
+        return (_unpack4(w.q).astype(dtype) * w.scale.astype(dtype)
+                + w.zero.astype(dtype))
+    if isinstance(w, QTG):
+        return _ste_deq(w.master, w.q, w.scale, w.zero).astype(dtype)
+    return w.astype(dtype) if w.dtype != dtype else w
+
+
+def matmul(x: jax.Array, w: Any, dim_nums: Optional[str] = None) -> jax.Array:
+    """x @ w with on-the-fly dequantization (fused by XLA into the dot)."""
+    wd = deq(w, x.dtype)
+    if dim_nums is None:
+        return x @ wd
+    return jnp.einsum(dim_nums, x, wd)
+
+
+def take_rows(w: Any, idx: jax.Array) -> jax.Array:
+    """Embedding lookup honoring quantized tables (dequantize only gathered rows)."""
+    if isinstance(w, QTG):
+        rows = jnp.take(w.q, idx, axis=0)
+        master_rows = jnp.take(w.master, idx, axis=0)
+        scale = w.scale if w.scale.shape[0] == 1 \
+            else jnp.take(w.scale, idx, axis=0)
+        zero = w.zero if w.zero.shape[0] == 1 \
+            else jnp.take(w.zero, idx, axis=0)
+        return _ste_deq(master_rows, rows, scale, zero)
+    if isinstance(w, QT4):
+        rows = _unpack4(jnp.take(w.q, idx, axis=0))
+        scale = w.scale if w.scale.ndim == 0 or w.scale.shape[0] == 1 \
+            else jnp.take(w.scale, idx, axis=0)
+        zero = w.zero if w.zero.ndim == 0 or w.zero.shape[0] == 1 \
+            else jnp.take(w.zero, idx, axis=0)
+        return rows.astype(jnp.bfloat16) * scale.astype(jnp.bfloat16) \
+            + zero.astype(jnp.bfloat16)
+    if isinstance(w, QT):
+        rows = jnp.take(w.q, idx, axis=0)
+        scale = w.scale if w.scale.ndim == 0 or w.scale.shape[0] == 1 \
+            else jnp.take(w.scale, idx, axis=0)
+        zero = w.zero if w.zero.ndim == 0 or w.zero.shape[0] == 1 \
+            else jnp.take(w.zero, idx, axis=0)
+        return rows.astype(jnp.bfloat16) * scale.astype(jnp.bfloat16) \
+            + zero.astype(jnp.bfloat16)
+    return jnp.take(w, idx, axis=0)
+
+
+# ------------------------------------------------------------------------ primitives
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale.astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: (..., S, n, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs          # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                                 # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([
+        x1 * cos.astype(x.dtype) - x2 * sin.astype(x.dtype),
+        x2 * cos.astype(x.dtype) + x1 * sin.astype(x.dtype),
+    ], axis=-1)
+    return out
+
+
+def swiglu(x: jax.Array, w_gate: Any, w_up: Any, w_down: Any) -> jax.Array:
+    g = matmul(x, w_gate)
+    u = matmul(x, w_up)
+    return matmul(jax.nn.silu(g) * u, w_down)
+
+
+# -------------------------------------------------------------------------- attention
+
+NEG_INF = -1e9
+
+
+def gqa_attention(
+    q: jax.Array,              # (B, S, H, hd)
+    k: jax.Array,              # (B, T, KV, hd)
+    v: jax.Array,              # (B, T, KV, hd)
+    *,
+    causal: bool,
+    q_offset: Any = 0,         # global position of q[0] (for causal masking vs cache)
+    kv_len: Optional[jax.Array] = None,   # valid cache length (decode)
+    q_block: int = 0,          # 0 = single block; else scan over q blocks
+    unroll: int = 1,
+) -> jax.Array:
+    """Grouped-query attention with optional q-block chunking.
+
+    SPMD formulation: KV heads are broadcast up to the full head count BEFORE
+    the score einsum (MaxText-style "KV replication"), so every attention
+    tensor carries one merged head axis H that shards cleanly over the model
+    axis — the (KV, G) split axes that GSPMD must otherwise co-shard are never
+    materialized.  The broadcast is sharded by the head constraint, so each
+    chip only materializes its own H/|model| head slice.
+
+    Chunking over the query axis bounds the live (Qb x T) score tensor — the
+    memory-realistic lowering used by the dry-run for long-sequence prefill
+    (the softmax over T is exact per block; no online accumulation needed).
+    """
+    from repro.distributed.ctx import constrain_heads, constrain_scores
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    q = constrain_heads(q)
+    if G > 1:
+        k = jnp.broadcast_to(k[:, :, :, None, :], (B, T, KV, G, hd)
+                             ).reshape(B, T, H, hd)
+        v = jnp.broadcast_to(v[:, :, :, None, :], (B, T, KV, G, hd)
+                             ).reshape(B, T, H, hd)
+    k = constrain_heads(k, is_cache_side=True)
+    v = constrain_heads(v, is_cache_side=True)
+
+    def block(qb: jax.Array, qpos: jax.Array) -> jax.Array:
+        # qb: (B, Sb, H, hd); qpos: (Sb,) global positions
+        # bf16 operands + f32 accumulation (MXU-style): keeps the KV-cache
+        # read at 2 bytes/element — an f32 cast before the dot doubles the
+        # cache wire/HBM traffic (EXPERIMENTS.md §Perf H1 iteration 2)
+        s = jnp.einsum("bsnh,btnh->bnst", (qb * scale).astype(jnp.bfloat16),
+                       k.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+        s = constrain_scores(s)                       # (B, H, Sq, T)
+        tpos = jnp.arange(T)
+        mask = jnp.ones((qpos.shape[0], T), bool)
+        if causal:
+            mask &= tpos[None, :] <= qpos[:, None]
+        if kv_len is not None:
+            mask &= tpos[None, :] < kv_len
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bnst,btnh->bsnh", p.astype(v.dtype), v)
+
+    if q_block <= 0 or q_block >= S:
+        return block(q, q_offset + jnp.arange(S))
+
+    assert S % q_block == 0, (S, q_block)
+    nb = S // q_block
+    qb = q.reshape(B, nb, q_block, H, hd)
+
+    def body(_, qi):
+        qblk, base = qi
+        return None, block(qblk, base + jnp.arange(q_block))
+
+    bases = q_offset + jnp.arange(nb) * q_block
+    _, outs = jax.lax.scan(body, None, (jnp.moveaxis(qb, 1, 0), bases), unroll=unroll)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd)
+
+
+def update_kv_cache(cache_k: jax.Array, cache_v: jax.Array, k: jax.Array, v: jax.Array,
+                    pos: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Write step-k/v (B, 1, KV, hd) into preallocated (B, T, KV, hd) caches."""
+    ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+    return ck, cv
+
+
+# ---------------------------------------------------------------------- loss helpers
+
+def softmax_xent(logits: jax.Array, labels: jax.Array, vocab: int) -> jax.Array:
+    """Mean token cross-entropy; labels >= vocab (padding) are masked out."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None].clip(0, logits.shape[-1] - 1),
+        axis=-1)[..., 0]
+    mask = (labels >= 0) & (labels < vocab)
+    return jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1)

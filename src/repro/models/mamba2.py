@@ -1,0 +1,347 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) decoder.
+
+Chunked SSD algorithm (the paper's Listing 1, adapted to JAX):
+
+  * split the sequence into chunks of length ``Q``;
+  * intra-chunk: quadratic attention-like term with the decay mask
+    ``L[i, j] = exp(segsum(a))`` — this is the part that maps onto the MXU;
+  * inter-chunk: a per-chunk state ``(H, P, N)`` carried by an associative
+    recurrence ``h_{c+1} = decay_c * h_c + B_c^T x_c`` implemented with
+    ``jax.lax.associative_scan`` over chunks (log-depth, TPU-friendly)
+    — this replaces the CUDA selective-scan kernel of Mamba-1.
+
+State layout per head: (P=head_dim, N=d_state).  Decode step is the O(1)
+recurrence ``h = exp(a dt) h + dt B x`` with output ``C^T h`` — SSM state plays
+the role of the KV cache and never grows with sequence length (why this arch
+runs the long_500k shape).
+
+Sensitive params (A_log, dt_bias, norms) stay fp32 and are excluded from
+quantization by ``core.store.default_quantize_predicate``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .layers import (Schema, Spec, init_params, matmul, rms_norm, softmax_xent,
+                     take_rows)
+
+
+def mamba_schema(prefix: str, L: int, D: int, ssm, resid: float) -> Schema:
+    """One stacked Mamba-2 block's parameters.
+
+    TP layout note: the projection is SPLIT into a [z | x] tensor (both halves
+    d_inner, sharded over the model axis with the split exactly on a shard
+    boundary) and a small replicated [B | C | dt] tensor — a single fused
+    (D, 2·Din + 2GN + H) projection puts the split points off shard
+    boundaries and GSPMD emits thousands of halo collective-permutes
+    (hypothesis→confirmed in EXPERIMENTS.md §Perf).  The depthwise conv is
+    likewise split per channel group (mathematically identical).
+    """
+    Din = ssm.d_inner(D)
+    H = ssm.n_heads(D)
+    N = ssm.d_state
+    G = 1                            # n_groups=1 for B/C (paper's MVA analogue)
+    K = ssm.d_conv
+    return {
+        f"{prefix}/norm": Spec((L, D), ("layers", None), "ones", jnp.float32),
+        f"{prefix}/in_zx": Spec((L, D, 2 * Din), ("layers", "embed", "mlp")),
+        f"{prefix}/in_bcdt": Spec((L, D, 2 * G * N + H),
+                                  ("layers", "embed", None)),
+        f"{prefix}/conv_x_w": Spec((L, K, Din), ("layers", None, "mlp"), 0.02,
+                                   jnp.float32),
+        f"{prefix}/conv_x_b": Spec((L, Din), ("layers", "mlp"), "zeros",
+                                   jnp.float32),
+        f"{prefix}/conv_bc_w": Spec((L, K, 2 * G * N), ("layers", None, None),
+                                    0.02, jnp.float32),
+        f"{prefix}/conv_bc_b": Spec((L, 2 * G * N), ("layers", None), "zeros",
+                                    jnp.float32),
+        f"{prefix}/A_log": Spec((L, H), ("layers", "heads"), "a_log",
+                                jnp.float32),
+        f"{prefix}/dt_bias": Spec((L, H), ("layers", "heads"), "dt_bias",
+                                  jnp.float32),
+        f"{prefix}/D_skip": Spec((L, H), ("layers", "heads"), "ones",
+                                 jnp.float32),
+        f"{prefix}/ssm_norm": Spec((L, Din), ("layers", "mlp"), "ones",
+                                   jnp.float32),
+        f"{prefix}/out_proj": Spec((L, Din, D), ("layers", "mlp", "embed"),
+                                   resid),
+    }
+
+
+def schema(cfg: ArchConfig) -> Schema:
+    L, D = cfg.n_layers, cfg.d_model
+    Vp = cfg.padded_vocab()
+    resid = 0.02 / (2 * L) ** 0.5
+    s: Schema = {
+        "embed": Spec((Vp, D), ("vocab", "embed"), 0.02),
+        "final_norm": Spec((D,), (None,), "ones", jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = Spec((D, Vp), ("embed", "vocab"), 0.02)
+    s.update(mamba_schema("layers", L, D, cfg.ssm, resid))
+    return s
+
+
+def init(cfg: ArchConfig, key: jax.Array) -> Dict[str, jax.Array]:
+    return init_params(schema(cfg), key)
+
+
+def _layer_stack(params: Dict[str, Any]) -> Dict[str, Any]:
+    return {k.split("/", 1)[1]: v for k, v in params.items() if k.startswith("layers/")}
+
+
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv1d.  xBC: (B, S, C); w: (K, C); returns (y, new_state).
+
+    ``state`` is the last K-1 inputs (B, K-1, C) for streaming decode.
+    """
+    B, S, C = xBC.shape
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((B, K - 1, C), xBC.dtype)
+    else:
+        pad = state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)            # (B, S+K-1, C)
+    # depthwise conv as K shifted adds — avoids conv_general for tiny K
+    y = jnp.zeros((B, S, C), jnp.float32)
+    for k in range(K):
+        y = y + xp[:, k: k + S, :].astype(jnp.float32) * w[k].astype(jnp.float32)
+    y = jax.nn.silu(y + b.astype(jnp.float32))
+    new_state = xp[:, S:, :]                            # last K-1 inputs
+    return y.astype(xBC.dtype), new_state
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum a[..., j+1..i] (−inf for j > i)."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int, h0: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    x:  (B, S, H, P)   — value-like input (already gated/conv'd)
+    dt: (B, S, H)      — softplus'd timestep (>0)
+    A:  (H,)           — negative decay rate
+    Bm: (B, S, N)      — input projection (n_groups=1, broadcast over heads)
+    Cm: (B, S, N)      — output projection
+    h0: (B, H, P, N)   — initial state (decode restart); None = zeros
+
+    Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    if S % chunk:
+        # pad with dt = 0 positions: decay exp(0) = 1 and input x*dt = 0, so the
+        # padded tail neither perturbs the carried state nor the first S outputs.
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        y, h = ssd_chunked(x, dt, A, Bm, Cm, chunk, h0=h0)
+        return y[:, :S], h
+    nc = S // chunk
+    f32 = jnp.float32
+
+    xb = x.reshape(B, nc, chunk, H, P).astype(f32)
+    dtb = dt.reshape(B, nc, chunk, H).astype(f32)
+    Bb = Bm.reshape(B, nc, chunk, N).astype(f32)
+    Cb = Cm.reshape(B, nc, chunk, N).astype(f32)
+
+    a = dtb * A[None, None, None, :]                     # (B,nc,Q,H) log-decay
+    a_hq = jnp.moveaxis(a, -1, -2)                       # (B,nc,H,Q)
+
+    # ---- intra-chunk (quadratic, MXU-friendly) ----
+    Lmat = jnp.exp(_segsum(a_hq))                        # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cb, Bb)       # (B,nc,Q,Q)
+    M = scores[:, :, None] * Lmat                        # (B,nc,H,Q,Q)
+    xdt = xb * dtb[..., None]                            # (B,nc,Q,H,P)
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", M, xdt)
+
+    # ---- chunk states ----
+    a_cum = jnp.cumsum(a_hq, axis=-1)                    # (B,nc,H,Q)
+    a_tot = a_cum[..., -1]                               # (B,nc,H)
+    decay_in = jnp.exp(a_tot[..., None] - a_cum)         # (B,nc,H,Q) decay from t→end
+    states = jnp.einsum("bcjn,bchj,bcjhp->bchpn", Bb, decay_in, xdt)
+
+    # ---- inter-chunk associative recurrence: h_c = exp(a_tot_c) h_{c-1} + states_c
+    decay_chunk = jnp.exp(a_tot)                         # (B,nc,H)
+
+    def combine(left, right):
+        dl, hl = left
+        dr, hr = right
+        return dl * dr, hr + hl * dr[..., None, None]
+
+    d_scan, h_scan = jax.lax.associative_scan(
+        combine, (jnp.moveaxis(decay_chunk, 1, 0), jnp.moveaxis(states, 1, 0)))
+    h_after = jnp.moveaxis(h_scan, 0, 1)                 # (B,nc,H,P,N) state AFTER chunk c
+    d_all = jnp.moveaxis(d_scan, 0, 1)                   # (B,nc,H) cumulative decay
+    if h0 is not None:
+        h_after = h_after + d_all[..., None, None] * h0[:, None].astype(f32)
+    # state entering chunk c
+    h_in = jnp.concatenate([
+        (h0[:, None].astype(f32) if h0 is not None
+         else jnp.zeros_like(h_after[:, :1])),
+        h_after[:, :-1],
+    ], axis=1)
+
+    # ---- inter-chunk output: y_off[t] = C_t · exp(a_cum[t]) h_in
+    decay_out = jnp.exp(a_cum)                           # (B,nc,H,Q)
+    y_off = jnp.einsum("bcin,bchpn,bchi->bcihp", Cb, h_in, decay_out)
+
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    return y.astype(x.dtype), h_after[:, -1]
+
+
+def ssd_step(x, dt, A, Bm, Cm, h):
+    """O(1) decode recurrence.  x: (B,H,P); dt: (B,H); Bm/Cm: (B,N); h: (B,H,P,N)."""
+    f32 = jnp.float32
+    xf, dtf, Bf, Cf, hf = (t.astype(f32) for t in (x, dt, Bm, Cm, h))
+    da = jnp.exp(dtf * A[None])                          # (B,H)
+    h_new = hf * da[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xf * dtf[..., None], Bf)
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cf)
+    return y.astype(x.dtype), h_new
+
+
+def _mamba_block(cfg: ArchConfig, lp: Dict[str, Any], x: jax.Array, *,
+                 conv_state=None, ssm_state=None, chunk: Optional[int] = None):
+    """One mamba2 block.  Returns (out, (new_conv_state, new_ssm_state)).
+
+    conv_state is a pair (x-channels state, BC-channels state) matching the
+    split projections (see ``mamba_schema``).
+    """
+    ssm = cfg.ssm
+    B, S, D = x.shape
+    Din = ssm.d_inner(D)
+    H, P, N, G = ssm.n_heads(D), ssm.head_dim, ssm.d_state, 1
+    chunk = chunk or ssm.chunk
+
+    h = rms_norm(x, lp["norm"])
+    zx = matmul(h, lp["in_zx"])
+    z, xs = jnp.split(zx, [Din], axis=-1)          # split ON a shard boundary
+    bcdt = matmul(h, lp["in_bcdt"])                # small, replicated
+    BC, dt = jnp.split(bcdt, [2 * G * N], axis=-1)
+    cs_x, cs_bc = conv_state if conv_state is not None else (None, None)
+    xs, new_conv_x = _causal_conv(xs, lp["conv_x_w"], lp["conv_x_b"], cs_x)
+    BC, new_conv_bc = _causal_conv(BC, lp["conv_bc_w"], lp["conv_bc_b"], cs_bc)
+    Bm, Cm = jnp.split(BC, [G * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))        # (H,) negative
+
+    xh = xs.reshape(B, S, H, P)
+    if S == 1 and ssm_state is not None:
+        y, h_new = ssd_step(xh[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0], ssm_state)
+        y = y[:, None]
+    else:
+        y, h_new = ssd_chunked(xh, dt, A, Bm, Cm, chunk, h0=ssm_state)
+    y = y + xh * lp["D_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B, S, Din)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 lp["ssm_norm"])
+    out = matmul(y, lp["out_proj"])
+    return out, ((new_conv_x, new_conv_bc), h_new)
+
+
+def forward(cfg: ArchConfig, params, tokens, *, unroll: int = 1,
+            remat: bool = False, collect_cache: bool = False,
+            chunk: Optional[int] = None):
+    from repro.distributed.ctx import constrain_activation
+    B, S = tokens.shape
+    x = constrain_activation(take_rows(params["embed"], tokens))
+    stack = _layer_stack(params)
+
+    def body(x, lp):
+        out, (cs, hs) = _mamba_block(cfg, lp, x, chunk=chunk)
+        return constrain_activation(x + out), (cs, hs) if collect_cache else None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, caches = jax.lax.scan(fn, x, stack, unroll=unroll)
+    x = rms_norm(x, params["final_norm"])
+    return x, caches
+
+
+def logits_fn(cfg: ArchConfig, params, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        from .layers import deq
+        return matmul(x, deq(params["embed"]).T)
+    return matmul(x, params["lm_head"])
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, unroll: int = 1, remat: bool = True,
+            q_block: int = 0, chunk: Optional[int] = None) -> jax.Array:
+    tokens = batch["tokens"]
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    x, _ = forward(cfg, params, inp, unroll=unroll, remat=remat, chunk=chunk)
+    return softmax_xent(logits_fn(cfg, params, x), labels, cfg.vocab)
+
+
+# ------------------------------------------------------------------------- serving
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    ssm = cfg.ssm
+    L, D = cfg.n_layers, cfg.d_model
+    Din = ssm.d_inner(D)
+    H, P, N, G = ssm.n_heads(D), ssm.head_dim, ssm.d_state, 1
+    return {
+        "conv_x": jnp.zeros((L, batch, ssm.d_conv - 1, Din), dtype),
+        "conv_bc": jnp.zeros((L, batch, ssm.d_conv - 1, 2 * G * N), dtype),
+        "ssm": jnp.zeros((L, batch, H, P, N), jnp.float32),
+    }
+
+
+def cache_specs(cfg: ArchConfig) -> Dict[str, Tuple[Optional[str], ...]]:
+    return {
+        "conv_x": ("layers", "batch", None, "mlp"),
+        "conv_bc": ("layers", "batch", None, None),
+        "ssm": ("layers", "batch", "heads", None, None),
+    }
+
+
+def prefill(cfg: ArchConfig, params, tokens, *, max_len: Optional[int] = None,
+            unroll: int = 1, q_block: int = 0, chunk: Optional[int] = None):
+    """State cache is O(1) in sequence length — max_len is accepted for API parity."""
+    B, S = tokens.shape
+    x = take_rows(params["embed"], tokens)
+    stack = _layer_stack(params)
+
+    def body(x, lp):
+        out, ((cx, cbc), hs) = _mamba_block(cfg, lp, x, chunk=chunk)
+        return x + out, (cx, cbc, hs)
+
+    x, (cxs, cbcs, ssms) = jax.lax.scan(body, x, stack, unroll=unroll)
+    x = rms_norm(x, params["final_norm"])
+    logits = logits_fn(cfg, params, x[:, -1:, :])
+    return logits, {"conv_x": cxs, "conv_bc": cbcs, "ssm": ssms}
+
+
+def decode_step(cfg: ArchConfig, params, token, cache, pos, *, unroll: int = 1):
+    from repro.distributed.ctx import constrain_activation
+    B = token.shape[0]
+    x = constrain_activation(take_rows(params["embed"], token))
+    stack = _layer_stack(params)
+
+    def body(x, xs):
+        lp, cx, cbc, hs = xs
+        out, ((cx, cbc), hs) = _mamba_block(cfg, lp, x, conv_state=(cx, cbc),
+                                            ssm_state=hs)
+        return constrain_activation(x + out), (cx, cbc, hs)
+
+    x, (cxs, cbcs, ssms) = jax.lax.scan(
+        body, x, (stack, cache["conv_x"], cache["conv_bc"], cache["ssm"]),
+        unroll=unroll)
+    x = rms_norm(x, params["final_norm"])
+    return logits_fn(cfg, params, x), {"conv_x": cxs, "conv_bc": cbcs,
+                                       "ssm": ssms}

@@ -1,0 +1,152 @@
+"""Training step + loop: grad-accumulation microbatching, donation, metrics.
+
+``make_train_step`` builds the jitted SPMD step used by both the real trainer
+(`launch/train.py`) and the dry-run (`launch/dryrun.py`): the same function is
+``.lower().compile()``-ed against ShapeDtypeStructs for the roofline table.
+
+Gradient accumulation scans over microbatches *inside* the step (sliced from
+the leading batch axis) so the optimizer + collective schedule stays one
+program; compute/comm overlap comes from XLA's latency-hiding scheduler —
+per-layer reduce-scatters issued inside the backward scan overlap the next
+layer's grads (standard FSDP overlap).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import api
+from . import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: opt.AdamWConfig = opt.AdamWConfig()
+    microbatches: int = 1          # grad-accum splits of the global batch
+    grad_accum_dtype: str = "f32"  # "bf16" = memory-tight mode (>=100B archs)
+    remat: bool = True
+    unroll: int = 1                # layer-scan unroll (dry-run uses n_layers)
+    q_block: int = 0               # attention query-block chunking
+    grad_compress: bool = False    # int8 gradient all-reduce w/ error feedback
+    q8_gather: int = 0             # 0=off | 8 | 4: EntroLLM-compressed FSDP
+    #                                weight gathers (STE; see ste_quantize)
+
+
+def loss_for(cfg: ArchConfig) -> Callable:
+    mod = api.build(cfg)
+    return mod.loss_fn
+
+
+def ste_quantize_params(params: Dict[str, Any], bits: int) -> Dict[str, Any]:
+    """EntroLLM-compressed FSDP weight movement (beyond-paper, §Perf H2).
+
+    Per-channel (axis-0) mixed symmetric/asymmetric quantization of every big
+    matrix to uint8 symbols (packed nibbles for 4-bit) as a QTG 4-tuple the
+    models consume via ``deq``.  The quantize is local shard math plus a tiny
+    max-reduce; the per-layer FSDP all-gather then moves 1 (or 0.5) bytes per
+    parameter instead of 2: the forward path computes only from the symbols
+    (the bf16 master is dead code there, so GSPMD gathers the uint8 tensor),
+    while ``_ste_deq``'s straight-through backward routes gradients to the
+    sharded master (QAT semantics; quality validated at small scale in
+    tests/test_integration.py).
+    """
+    from repro.models.layers import QTG
+    from repro.launch.specs import _quantize_pred
+    qmax = float((1 << bits) - 1)
+    out: Dict[str, Any] = {}
+    for name, w in params.items():
+        if not _quantize_pred(name, getattr(w, "shape", ())):
+            out[name] = w
+            continue
+        wf = w.astype(jnp.float32)
+        red = tuple(range(1, wf.ndim))
+        lo = wf.min(axis=red, keepdims=True)
+        hi = wf.max(axis=red, keepdims=True)
+        single = lo * hi >= 0.0
+        absmax = jnp.where(jnp.abs(hi) >= jnp.abs(lo), hi, lo)
+        scale = jnp.where(single,
+                          jnp.where(absmax == 0.0, 1.0, absmax / qmax),
+                          jnp.where(hi == lo, 1.0, (hi - lo) / qmax))
+        zero = jnp.where(single, 0.0, lo)
+        q = jnp.clip(jnp.round((wf - zero) / scale), 0.0, qmax
+                     ).astype(jnp.uint8)
+        if bits == 4:
+            q = q[..., 0::2] | (q[..., 1::2] << jnp.uint8(4))
+        out[name] = QTG(q, scale.astype(jnp.float32),
+                        zero.astype(jnp.float32), w)
+    return out
+
+
+def make_train_step(cfg: ArchConfig, tc: TrainConfig) -> Callable:
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    loss_fn = loss_for(cfg)
+
+    def microbatch_grads(params, batch):
+        def one(p, mb):
+            if tc.q8_gather:
+                p = ste_quantize_params(p, tc.q8_gather)
+            return loss_fn(cfg, p, mb, unroll=tc.unroll,
+                           q_block=tc.q_block, remat=tc.remat)
+
+        if tc.microbatches <= 1:
+            loss, grads = jax.value_and_grad(one)(params, batch)
+            return loss, grads
+
+        def slice_mb(i, x):
+            mbs = x.shape[0] // tc.microbatches
+            return jax.lax.dynamic_slice_in_dim(x, i * mbs, mbs, 0)
+
+        def body(carry, i):
+            loss_acc, grad_acc = carry
+            mb = jax.tree.map(partial(slice_mb, i), batch)
+            loss, grads = jax.value_and_grad(one)(params, mb)
+            grad_acc = jax.tree.map(
+                lambda a, g: a + g.astype(a.dtype), grad_acc, grads)
+            return (loss_acc + loss, grad_acc), None
+
+        acc_dt = jnp.bfloat16 if tc.grad_accum_dtype == "bf16" else jnp.float32
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+        (loss, grads), _ = jax.lax.scan(
+            body, (jnp.float32(0.0), zeros), jnp.arange(tc.microbatches))
+        inv = 1.0 / tc.microbatches
+        return loss * inv, jax.tree.map(
+            lambda g: g.astype(jnp.float32) * inv, grads)
+
+    def step(params, opt_state, batch):
+        loss, grads = microbatch_grads(params, batch)
+        if tc.grad_compress:
+            from repro.distributed.grad_compress import compress_decompress
+            grads = compress_decompress(grads)
+        params, opt_state, metrics = opt.apply_updates(tc.opt, params, grads,
+                                                       opt_state)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return step
+
+
+def train(cfg: ArchConfig, tc: TrainConfig, params, opt_state, data_iter,
+          num_steps: int, *, jit_kwargs: Optional[dict] = None,
+          hooks: Tuple[Callable, ...] = ()) -> Tuple[Any, Any, Dict]:
+    """Host-side loop: feeds batches, runs hooks (checkpoint/watchdog/logging)."""
+    step_fn = jax.jit(make_train_step(cfg, tc), donate_argnums=(0, 1),
+                      **(jit_kwargs or {}))
+    history = []
+    t0 = time.perf_counter()
+    for i in range(num_steps):
+        batch = next(data_iter)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        for h in hooks:
+            out = h(i, params, opt_state, metrics)
+            if out is not None:                       # hook replaced the state
+                params, opt_state = out
+        history.append({k: float(v) for k, v in metrics.items()})
+    wall = time.perf_counter() - t0
+    return params, opt_state, {"history": history, "wall_s": wall,
+                               "steps_per_s": num_steps / max(wall, 1e-9)}

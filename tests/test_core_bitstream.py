@@ -1,0 +1,125 @@
+"""Round-trip tests for encode -> serial decode -> multi-stream decode (np + jax)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitstream, quant
+from repro.core.decode_jax import decode_streams_jax
+from repro.core.entropy import HuffmanTable, global_frequencies
+from repro.core.segmentation import balanced_assignment, segment_and_encode
+from repro.core.store import CompressedModel
+
+
+def _table_for(symbols, bits):
+    freqs = np.bincount(symbols.reshape(-1), minlength=1 << bits).astype(np.int64)
+    return HuffmanTable(freqs, max_len=12)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_encode_serial_roundtrip(bits):
+    rng = np.random.default_rng(bits)
+    # skewed symbol distribution, like quantized Gaussian weights
+    raw = rng.normal(0, 0.15, size=5000)
+    symbols = np.clip(np.rint(raw * (1 << bits) + (1 << (bits - 1))), 0,
+                      (1 << bits) - 1).astype(np.uint8)
+    t = _table_for(symbols, bits)
+    stream, nbits = bitstream.encode_symbols(symbols, t.codes, t.lengths)
+    assert nbits == t.encoded_bits(symbols)
+    dec = bitstream.decode_serial(stream, symbols.size, t.lut_sym, t.lut_len, t.max_len)
+    np.testing.assert_array_equal(dec, symbols)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 8), st.integers(1, 2000))
+def test_roundtrip_property(seed, bits, n):
+    rng = np.random.default_rng(seed)
+    symbols = rng.integers(0, 1 << bits, size=n).astype(np.uint8)
+    t = _table_for(symbols, bits)
+    stream, _ = bitstream.encode_symbols(symbols, t.codes, t.lengths)
+    dec = bitstream.decode_serial(stream, n, t.lut_sym, t.lut_len, t.max_len)
+    np.testing.assert_array_equal(dec, symbols)
+
+
+def test_multistream_matches_serial():
+    rng = np.random.default_rng(11)
+    segs = [rng.integers(0, 256, size=rng.integers(1, 700)).astype(np.uint8)
+            for _ in range(17)]
+    t = _table_for(np.concatenate(segs), 8)
+    streams, counts = [], []
+    for s in segs:
+        enc, _ = bitstream.encode_symbols(s, t.codes, t.lengths)
+        streams.append(enc)
+        counts.append(s.size)
+    mat, _ = bitstream.pack_streams(streams)
+    counts = np.array(counts)
+    out = bitstream.decode_streams(mat, counts, t.lut_sym, t.lut_len, t.max_len)
+    for i, s in enumerate(segs):
+        np.testing.assert_array_equal(out[i, : s.size], s)
+
+
+def test_jax_decoder_matches_numpy():
+    rng = np.random.default_rng(12)
+    segs = [rng.integers(0, 16, size=256).astype(np.uint8) for _ in range(8)]
+    t = _table_for(np.concatenate(segs), 4)
+    streams = [bitstream.encode_symbols(s, t.codes, t.lengths)[0] for s in segs]
+    mat, _ = bitstream.pack_streams(streams)
+    counts = np.full(8, 256, dtype=np.int32)
+    ref = bitstream.decode_streams(mat, counts, t.lut_sym, t.lut_len, t.max_len)
+    out = decode_streams_jax(mat, counts, t.lut_sym.astype(np.int32),
+                             t.lut_len.astype(np.int32), max_len=t.max_len,
+                             max_count=256)
+    np.testing.assert_array_equal(np.asarray(out), ref)
+
+
+def test_segmentation_roundtrip_and_balance():
+    rng = np.random.default_rng(13)
+    q = rng.integers(0, 256, size=(300, 70)).astype(np.uint8)
+    t = _table_for(q, 8)
+    meta, streams = segment_and_encode("w", q, t, segment_symbols=1024)
+    assert meta.seg_counts.sum() == q.size
+    # balanced assignment: worker loads within 20% of each other
+    buckets = balanced_assignment(meta.seg_bits, 3)
+    loads = [meta.seg_bits[b].sum() for b in buckets]
+    assert max(loads) <= 1.2 * max(min(loads), 1)
+    # segments decode independently and reassemble exactly
+    mat, _ = bitstream.pack_streams(streams)
+    out = bitstream.decode_streams(mat, meta.seg_counts, t.lut_sym, t.lut_len, t.max_len)
+    flat = np.concatenate([out[i, : int(c)] for i, c in enumerate(meta.seg_counts)])
+    np.testing.assert_array_equal(flat.astype(np.uint8), q.reshape(-1))
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_compressed_model_end_to_end(bits, tmp_path):
+    rng = np.random.default_rng(bits + 100)
+    params = {
+        "layer0/attn/wq": rng.normal(0, 0.02, size=(128, 128)).astype(np.float32),
+        "layer0/mlp/w1": rng.normal(0, 0.02, size=(128, 256)).astype(np.float32),
+        "layer0/mlp/w2": np.abs(rng.normal(0, 0.02, size=(256, 128))).astype(np.float32),
+        "layer0/norm/scale": np.ones(128, dtype=np.float32),  # stays fp32
+    }
+    cm = CompressedModel.compress(params, bits=bits, segment_symbols=2048)
+    assert "layer0/norm/scale" in cm.unquantized
+
+    # lossless: decoded symbols equal direct quantization
+    for name in ["layer0/attn/wq", "layer0/mlp/w1", "layer0/mlp/w2"]:
+        direct = quant.quantize(params[name], bits)
+        np.testing.assert_array_equal(cm.decode_tensor(name), direct.q)
+
+    # dequantized weights approximate originals within half a step
+    deq = cm.dequantize_all()
+    for name in ["layer0/attn/wq", "layer0/mlp/w1"]:
+        direct = quant.quantize(params[name], bits)
+        np.testing.assert_allclose(deq[name], quant.dequantize(direct), rtol=0, atol=1e-6)
+
+    # stats coherent: encoded <= quantized <= fp16
+    st_ = cm.stats()
+    assert st_.encoded_bytes <= st_.quant_bytes <= st_.raw_bytes
+    assert st_.entropy_bits <= st_.effective_bits <= st_.entropy_bits + 1.0
+
+    # persistence roundtrip
+    p = str(tmp_path / "model.npz")
+    cm.save(p)
+    cm2 = CompressedModel.load(p)
+    np.testing.assert_array_equal(cm2.decode_tensor("layer0/attn/wq"),
+                                  cm.decode_tensor("layer0/attn/wq"))
+    assert cm2.stats().effective_bits == pytest.approx(st_.effective_bits)

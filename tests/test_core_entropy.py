@@ -1,0 +1,127 @@
+"""Tests for canonical length-limited Huffman coding + the paper's Table I bands."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import entropy, quant
+from repro.core.entropy import (HuffmanTable, canonical_codes, code_lengths,
+                                effective_bits, huffman_code_lengths,
+                                package_merge_lengths, shannon_entropy,
+                                validate_kraft)
+
+
+def _rand_freqs(rng, n, zipf=False):
+    if zipf:
+        f = np.floor(1e6 / (np.arange(1, n + 1) ** 1.3)).astype(np.int64)
+        rng.shuffle(f)
+        return f
+    return rng.integers(0, 10_000, size=n).astype(np.int64)
+
+
+def test_huffman_matches_entropy_bound():
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        freqs = _rand_freqs(rng, 256)
+        lengths = huffman_code_lengths(freqs)
+        h = shannon_entropy(freqs)
+        eb = effective_bits(freqs, lengths)
+        assert h <= eb + 1e-9
+        assert eb < h + 1.0  # Huffman is within 1 bit of entropy
+        assert abs(validate_kraft(lengths) - 1.0) < 1e-12
+
+
+def test_package_merge_optimal_when_unconstrained():
+    rng = np.random.default_rng(1)
+    for _ in range(10):
+        freqs = _rand_freqs(rng, 64, zipf=True)
+        unlimited = huffman_code_lengths(freqs)
+        limited = package_merge_lengths(freqs, max_len=32)
+        # same total cost (code assignments may differ, cost must match exactly)
+        assert (freqs * unlimited).sum() == (freqs * limited).sum()
+
+
+def test_package_merge_respects_limit_and_kraft():
+    rng = np.random.default_rng(2)
+    # heavily skewed -> unlimited Huffman would exceed 12 bits
+    freqs = np.array([2 ** i for i in range(20)], dtype=np.int64)
+    assert huffman_code_lengths(freqs).max() > 12
+    lengths = package_merge_lengths(freqs, max_len=12)
+    assert lengths.max() <= 12
+    assert np.all(lengths[freqs > 0] >= 1)
+    assert validate_kraft(lengths) <= 1.0 + 1e-12
+    # cost must not be worse than the naive "clamp all to ceil(log2 n)" code
+    flat = np.where(freqs > 0, int(np.ceil(np.log2((freqs > 0).sum()))), 0)
+    assert (freqs * lengths).sum() <= (freqs * flat).sum()
+
+
+def test_canonical_codes_are_prefix_free():
+    rng = np.random.default_rng(3)
+    freqs = _rand_freqs(rng, 100, zipf=True)
+    lengths = code_lengths(freqs, max_len=12)
+    codes = canonical_codes(lengths)
+    entries = [(int(codes[s]), int(l)) for s, l in enumerate(lengths) if l > 0]
+    # pairwise prefix-freedom
+    as_bits = {format(c, f"0{l}b") for c, l in entries}
+    assert len(as_bits) == len(entries)
+    for a in as_bits:
+        for b in as_bits:
+            if a is not b and len(a) < len(b):
+                assert not b.startswith(a), (a, b)
+
+
+def test_decode_lut_consistency():
+    rng = np.random.default_rng(4)
+    freqs = _rand_freqs(rng, 256, zipf=True)
+    t = HuffmanTable(freqs, max_len=12)
+    # every symbol's canonical code decodes back to itself through the LUT
+    for s in np.nonzero(freqs)[0]:
+        l = int(t.lengths[s])
+        peek = int(t.codes[s]) << (t.max_len - l)
+        assert t.lut_sym[peek] == s
+        assert t.lut_len[peek] == l
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 256), st.integers(0, 2**31 - 1))
+def test_table_property(nsym, seed):
+    rng = np.random.default_rng(seed)
+    freqs = np.zeros(256, dtype=np.int64)
+    active = rng.choice(256, size=nsym, replace=False)
+    freqs[active] = rng.integers(1, 100_000, size=nsym)
+    t = HuffmanTable(freqs, max_len=12)
+    assert t.lengths.max() <= 12
+    assert t.entropy <= t.effective_bits + 1e-9
+    assert validate_kraft(t.lengths) <= 1.0 + 1e-12
+    # length-limited optimum is within 0.1 bits of entropy for these sizes... not
+    # guaranteed in general; assert the Huffman <= entropy + 1 bound instead.
+    assert t.effective_bits < t.entropy + 1.0
+
+
+def test_paper_table1_effective_bits_band():
+    """Reproduce the paper's Table I 'Effective Bits' finding on realistic weights.
+
+    LLM weights are near-Gaussian with outliers; per-tensor min/max quantization then
+    concentrates symbols around the center, so 8-bit quantized weights entropy-code to
+    ~5.5-6 bits and 4-bit weights to ~1.3-1.7 bits (paper: 5.92/5.58/5.84 and
+    1.57/1.39/1.62).  We synthesize weights as Gaussian + a small outlier tail, the
+    standard model for trained LLM weight matrices.
+    """
+    rng = np.random.default_rng(7)
+    tensors = []
+    for _ in range(8):
+        w = rng.normal(0.0, 0.02, size=(512, 512)).astype(np.float32)
+        # outlier tail (~0.1% of entries, 10-25 sigma) as observed in trained LLMs
+        n_out = int(w.size * 0.001)
+        idx = rng.choice(w.size, n_out, replace=False)
+        w.reshape(-1)[idx] *= rng.uniform(10, 25, size=n_out).astype(np.float32)
+        tensors.append(w)
+
+    for bits, lo, hi in [(8, 5.0, 6.5), (4, 1.0, 2.2)]:
+        qs = [quant.quantize(w, bits).q for w in tensors]
+        freqs = entropy.global_frequencies(qs, 1 << bits)
+        t = HuffmanTable(freqs, max_len=12)
+        assert lo < t.effective_bits < hi, (bits, t.effective_bits)
+        # near-optimal coding: Gallager's redundancy bound is p_max + 0.086; small
+        # alphabets (4-bit: 16 symbols) sit closer to that bound than large ones.
+        p_max = t.freqs.max() / t.freqs.sum()
+        assert t.effective_bits <= t.entropy + p_max + 0.086 + 1e-9

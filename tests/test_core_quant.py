@@ -1,0 +1,92 @@
+"""Unit + property tests for the EntroLLM mixed quantization scheme (paper Alg. 1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+
+def test_scheme_selection_rule():
+    # all-positive / all-negative tensors -> symmetric unsigned, mixed-sign -> asymmetric
+    assert quant.choose_scheme(np.array([0.1, 2.0])) is quant.Scheme.SYMMETRIC_UNSIGNED
+    assert quant.choose_scheme(np.array([-3.0, -0.5])) is quant.Scheme.SYMMETRIC_UNSIGNED
+    assert quant.choose_scheme(np.array([0.0, 1.0])) is quant.Scheme.SYMMETRIC_UNSIGNED
+    assert quant.choose_scheme(np.array([-1.0, 1.0])) is quant.Scheme.ASYMMETRIC
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("gran", list(quant.Granularity))
+def test_roundtrip_error_bound(bits, gran):
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(64, 256)).astype(np.float32)
+    qt = quant.quantize(w, bits, gran, group=64)
+    wd = quant.dequantize(qt)
+    # reconstruction error bounded by half a quantization step everywhere
+    step = np.abs(np.broadcast_to(qt.scale, (64, 256) if gran is not quant.Granularity.PER_GROUP
+                                  else qt.scale.shape))
+    err = np.abs(wd - w)
+    if gran is quant.Granularity.PER_GROUP:
+        errg = err.reshape(64, 256 // 64, 64)
+        assert np.all(errg <= 0.5 * np.abs(qt.scale) + 1e-7)
+    else:
+        assert np.all(err <= 0.5 * step + 1e-7)
+    assert qt.q.min() >= 0 and qt.q.max() <= (1 << bits) - 1
+
+
+def test_symbols_are_unsigned_for_both_schemes():
+    rng = np.random.default_rng(1)
+    w_pos = np.abs(rng.normal(size=(32, 32))).astype(np.float32)
+    w_mix = rng.normal(size=(32, 32)).astype(np.float32)
+    for w, scheme in [(w_pos, quant.Scheme.SYMMETRIC_UNSIGNED),
+                      (w_mix, quant.Scheme.ASYMMETRIC)]:
+        qt = quant.quantize(w, 8)
+        assert qt.scheme is scheme
+        assert qt.q.dtype == np.uint8
+
+
+def test_negative_tensor_signed_scale():
+    w = -np.abs(np.random.default_rng(2).normal(size=(16, 16))).astype(np.float32)
+    qt = quant.quantize(w, 8)
+    assert qt.scheme is quant.Scheme.SYMMETRIC_UNSIGNED
+    assert qt.scale.item() < 0  # sign carried by the scale
+    assert np.allclose(quant.dequantize(qt), w, atol=abs(qt.scale.item()) / 2 + 1e-7)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(2, 8),
+    st.integers(0, 2**31 - 1),
+    st.sampled_from(["normal", "uniform", "allpos", "allneg", "constant"]),
+)
+def test_roundtrip_property(bits, seed, kind):
+    rng = np.random.default_rng(seed)
+    shape = (rng.integers(1, 40), rng.integers(1, 40))
+    if kind == "normal":
+        w = rng.normal(size=shape)
+    elif kind == "uniform":
+        w = rng.uniform(-5, 5, size=shape)
+    elif kind == "allpos":
+        w = np.abs(rng.normal(size=shape)) + 0.1
+    elif kind == "allneg":
+        w = -np.abs(rng.normal(size=shape)) - 0.1
+    else:
+        w = np.full(shape, float(rng.normal()))
+    w = w.astype(np.float32)
+    qt = quant.quantize(w, bits)
+    wd = quant.dequantize(qt)
+    scale = abs(qt.scale.item())
+    assert np.all(np.abs(wd - w) <= 0.5 * scale + 1e-6 + 1e-5 * np.abs(w))
+
+
+def test_jnp_matches_numpy():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(3)
+    for kind in ["mixed", "pos"]:
+        w = rng.normal(size=(48, 48)).astype(np.float32)
+        if kind == "pos":
+            w = np.abs(w)
+        q_np = quant.quantize(w, 8)
+        q_j, s_j, z_j = quant.quantize_jnp(jnp.asarray(w), 8)
+        assert np.array_equal(np.asarray(q_j), q_np.q)
+        assert np.allclose(float(s_j), q_np.scale.item(), rtol=1e-6)
+        assert np.allclose(float(z_j), q_np.zero.item(), rtol=1e-6)

@@ -1,0 +1,163 @@
+"""Numerical correctness of the model-math building blocks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.layers import gqa_attention, rms_norm, rope, softmax_xent
+from repro.models.mamba2 import _causal_conv, ssd_chunked, ssd_step
+
+
+def _naive_attention(q, k, v, causal, kv_len=None):
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    kf = np.repeat(np.asarray(k, np.float32), G, axis=2)
+    vf = np.repeat(np.asarray(v, np.float32), G, axis=2)
+    qf = np.asarray(q, np.float32)
+    out = np.zeros((B, S, H, hd), np.float32)
+    for b in range(B):
+        for h in range(H):
+            s = qf[b, :, h] @ kf[b, :, h].T / np.sqrt(hd)
+            mask = np.ones((S, T), bool)
+            if causal:
+                mask &= np.tril(np.ones((S, T), bool))
+            if kv_len is not None:
+                mask[:, kv_len:] = False
+            s = np.where(mask, s, -1e9)
+            p = np.exp(s - s.max(-1, keepdims=True))
+            p /= p.sum(-1, keepdims=True)
+            out[b, :, h] = p @ vf[b, :, h]
+    return out
+
+
+@pytest.mark.parametrize("S,H,KV,q_block", [(16, 4, 2, 0), (32, 4, 4, 8),
+                                            (32, 8, 2, 16)])
+def test_gqa_attention_matches_naive(S, H, KV, q_block):
+    rng = np.random.default_rng(S + H)
+    B, hd = 2, 16
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    out = gqa_attention(q, k, v, causal=True, q_block=q_block)
+    want = _naive_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32), want, atol=5e-2)
+
+
+def test_gqa_attention_decode_with_cache_mask():
+    rng = np.random.default_rng(0)
+    B, T, H, KV, hd = 2, 16, 4, 2, 8
+    q = jnp.asarray(rng.normal(size=(B, 1, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, KV, hd)), jnp.float32)
+    out = gqa_attention(q, k, v, causal=False, kv_len=jnp.int32(10))
+    want = _naive_attention(q, k, v, causal=False, kv_len=10)
+    np.testing.assert_allclose(np.asarray(out, np.float32), want, atol=5e-2)
+
+
+def test_rope_preserves_norm_and_relativity():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(1, 8, 2, 16)), jnp.float32)
+    pos = jnp.arange(8)
+    y = rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+    # dot(q_i, k_j) depends only on i - j
+    q = jnp.asarray(rng.normal(size=(1, 16, 1, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 16, 1, 16)), jnp.float32)
+    qr = np.asarray(rope(q, jnp.arange(16), 1e4))
+    kr = np.asarray(rope(k, jnp.arange(16), 1e4))
+    d1 = (qr[0, 5, 0] * kr[0, 3, 0]).sum()
+    q2 = np.asarray(rope(q, jnp.arange(16) + 7, 1e4))
+    k2 = np.asarray(rope(k, jnp.arange(16) + 7, 1e4))
+    d2 = (q2[0, 5, 0] * k2[0, 3, 0]).sum()
+    np.testing.assert_allclose(d1, d2, rtol=1e-4, atol=1e-5)
+
+
+def test_rms_norm_unit_rms():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(0, 10, size=(4, 32)), jnp.float32)
+    y = rms_norm(x, jnp.ones(32))
+    rms = np.sqrt((np.asarray(y) ** 2).mean(-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_softmax_xent_masks_out_of_vocab():
+    logits = jnp.zeros((1, 4, 8))
+    labels = jnp.asarray([[1, 2, 100, -1]])     # 2 valid, 2 masked
+    loss = softmax_xent(logits, labels, vocab=8)
+    np.testing.assert_allclose(float(loss), np.log(8), rtol=1e-5)
+
+
+@pytest.mark.parametrize("S,chunk", [(64, 16), (96, 32), (50, 32)])
+def test_ssd_chunked_matches_stepwise(S, chunk):
+    rng = np.random.default_rng(S)
+    B, H, P, N = 2, 3, 8, 16
+    x = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(B, S, H)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 4.0, size=(H,)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    h0 = jnp.asarray(rng.normal(size=(B, H, P, N)), jnp.float32)
+    y, h = ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk, h0=h0)
+    hh = h0
+    ys = []
+    for t in range(S):
+        yt, hh = ssd_step(x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], hh)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(jnp.stack(ys, 1)),
+                               atol=5e-5)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hh), atol=5e-5)
+
+
+def test_causal_conv_matches_numpy_and_streams():
+    rng = np.random.default_rng(3)
+    B, S, C, K = 2, 20, 6, 4
+    x = jnp.asarray(rng.normal(size=(B, S, C)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, C)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(C,)), jnp.float32)
+    y, state = _causal_conv(x, w, b)
+    # numpy oracle
+    xp = np.concatenate([np.zeros((B, K - 1, C)), np.asarray(x)], axis=1)
+    want = np.zeros((B, S, C))
+    for k in range(K):
+        want += xp[:, k: k + S] * np.asarray(w)[k]
+    want = want + np.asarray(b)
+    want = want / (1 + np.exp(-want))           # silu
+    np.testing.assert_allclose(np.asarray(y), want, atol=1e-5)
+    # streaming: feed the tail one token at a time with carried state
+    y2, st = _causal_conv(x[:, :10], w, b)
+    outs = [y2]
+    for t in range(10, S):
+        yt, st = _causal_conv(x[:, t:t + 1], w, b, state=st)
+        outs.append(yt)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(y), atol=1e-5)
+
+
+def test_moe_dispatch_matches_dense_ffn_when_experts_identical():
+    """With identical experts + top-1 and ample capacity, MoE == dense MLP."""
+    from repro.configs.base import MoEConfig
+    from repro.models.moe import moe_mlp
+    rng = np.random.default_rng(4)
+    B, S, D, F, E = 2, 8, 16, 32, 4
+    x = jnp.asarray(rng.normal(size=(B, S, D)), jnp.bfloat16)
+    w_gate1 = rng.normal(0, 0.2, size=(D, F)).astype(np.float32)
+    w_up1 = rng.normal(0, 0.2, size=(D, F)).astype(np.float32)
+    w_down1 = rng.normal(0, 0.2, size=(F, D)).astype(np.float32)
+    wts = {
+        "router": jnp.asarray(rng.normal(size=(D, E)), jnp.float32),
+        "w_gate": jnp.asarray(np.tile(w_gate1, (E, 1, 1)), jnp.bfloat16),
+        "w_up": jnp.asarray(np.tile(w_up1, (E, 1, 1)), jnp.bfloat16),
+        "w_down": jnp.asarray(np.tile(w_down1, (E, 1, 1)), jnp.bfloat16),
+    }
+    mcfg = MoEConfig(num_experts=E, top_k=1, capacity_factor=8.0)
+    y, aux = moe_mlp(x, wts, mcfg, E)
+    xd = np.asarray(x, np.float32)
+    h = xd @ w_gate1
+    u = xd @ w_up1
+    want = (h / (1 + np.exp(-h)) * u) @ w_down1
+    np.testing.assert_allclose(np.asarray(y, np.float32), want, atol=0.1,
+                               rtol=0.1)
+    assert np.isfinite(float(aux))

@@ -1,0 +1,148 @@
+"""Hypothesis property tests on the system's invariants (deliverable c)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+from repro.core.bitstream import decode_streams, encode_symbols, pack_streams
+from repro.core.entropy import (HuffmanTable, canonical_codes, code_lengths,
+                                effective_bits, huffman_code_lengths,
+                                package_merge_lengths, shannon_entropy,
+                                validate_kraft)
+
+arrays_f32 = st.lists(
+    st.floats(min_value=-100, max_value=100, allow_nan=False, width=32),
+    min_size=4, max_size=300)
+
+
+@given(arrays_f32, st.sampled_from([2, 4, 8]))
+@settings(max_examples=60, deadline=None)
+def test_quantize_error_bounded_by_half_step(vals, bits):
+    """|w - dequant(quant(w))| <= scale/2 everywhere (round-to-nearest)."""
+    w = np.array(vals, np.float32).reshape(1, -1)
+    qt = quant.quantize(w, bits)
+    err = np.abs(quant.dequantize(qt) - w)
+    assert (err <= np.abs(qt.scale) * 0.5 + 1e-6).all()
+
+
+@given(arrays_f32, st.sampled_from([4, 8]))
+@settings(max_examples=60, deadline=None)
+def test_quantize_symbols_in_range(vals, bits):
+    w = np.array(vals, np.float32).reshape(1, -1)
+    qt = quant.quantize(w, bits)
+    assert qt.q.min() >= 0 and qt.q.max() < (1 << bits)
+
+
+@given(arrays_f32)
+@settings(max_examples=40, deadline=None)
+def test_scheme_selection_rule(vals):
+    """Paper Alg.1 line 5: symmetric iff single-signed."""
+    w = np.array(vals, np.float32)
+    scheme = quant.choose_scheme(w)
+    single = float(w.max()) * float(w.min()) >= 0
+    assert (scheme is quant.Scheme.SYMMETRIC_UNSIGNED) == single
+
+
+@given(st.lists(st.integers(min_value=0, max_value=100_000), min_size=2,
+                max_size=256))
+@settings(max_examples=60, deadline=None)
+def test_huffman_kraft_equality(freqs):
+    f = np.array(freqs, np.int64)
+    if (f > 0).sum() < 2:
+        return
+    lengths = huffman_code_lengths(f)
+    assert abs(validate_kraft(lengths) - 1.0) < 1e-9
+
+
+@given(st.lists(st.integers(min_value=1, max_value=100_000), min_size=2,
+                max_size=200), st.integers(min_value=9, max_value=15))
+@settings(max_examples=40, deadline=None)
+def test_package_merge_respects_limit_and_kraft(freqs, max_len):
+    f = np.array(freqs, np.int64)
+    lengths = package_merge_lengths(f, max_len)
+    nz = lengths[f > 0]
+    assert (nz > 0).all() and (nz <= max_len).all()
+    assert validate_kraft(lengths) <= 1.0 + 1e-9
+
+
+@given(st.lists(st.integers(min_value=1, max_value=10_000), min_size=2,
+                max_size=128))
+@settings(max_examples=40, deadline=None)
+def test_code_is_within_one_bit_of_entropy(freqs):
+    """Huffman optimality: H <= avg_len < H + 1."""
+    f = np.array(freqs, np.int64)
+    lengths = code_lengths(f, max_len=16)
+    h = shannon_entropy(f)
+    avg = effective_bits(f, lengths)
+    assert h - 1e-9 <= avg < h + 1.0
+
+
+@given(st.lists(st.integers(min_value=0, max_value=255), min_size=1,
+                max_size=2000),
+       st.integers(min_value=1, max_value=4))
+@settings(max_examples=40, deadline=None)
+def test_encode_decode_roundtrip(symbols, n_segments):
+    """Lossless: decode(encode(s)) == s for any symbols and segmentation."""
+    syms = np.array(symbols, np.uint8)
+    freqs = np.bincount(syms, minlength=256)
+    table = HuffmanTable(freqs, max_len=12)
+    chunks = np.array_split(syms, min(n_segments, len(syms)))
+    chunks = [c for c in chunks if len(c)]
+    streams = [encode_symbols(c, table.codes, table.lengths)[0]
+               for c in chunks]
+    mat, _ = pack_streams(streams)
+    counts = np.array([len(c) for c in chunks], np.int64)
+    out = decode_streams(mat, counts, table.lut_sym, table.lut_len, 12)
+    got = np.concatenate([out[i, :c] for i, c in enumerate(counts)])
+    assert (got == syms).all()
+
+
+@given(st.lists(st.integers(min_value=0, max_value=255), min_size=2,
+                max_size=500))
+@settings(max_examples=30, deadline=None)
+def test_canonical_codes_prefix_free(symbols):
+    syms = np.array(symbols, np.uint8)
+    freqs = np.bincount(syms, minlength=256)
+    lengths = code_lengths(freqs, max_len=14)
+    codes = canonical_codes(lengths)
+    live = [(int(codes[s]), int(lengths[s]))
+            for s in range(256) if lengths[s] > 0]
+    # no code is a prefix of another
+    for i, (c1, l1) in enumerate(live):
+        for c2, l2 in live[i + 1:]:
+            lo = min(l1, l2)
+            assert (c1 >> (l1 - lo)) != (c2 >> (l2 - lo))
+
+
+@given(st.lists(st.floats(min_value=-5, max_value=5, allow_nan=False,
+                          width=32), min_size=256, max_size=1024))
+@settings(max_examples=20, deadline=None)
+def test_compressed_model_lossless_vs_quantized(vals):
+    """The container reproduces the QUANTIZED weights bit-exactly (the paper's
+    losslessness claim is w.r.t. the quantized model)."""
+    from repro.core.store import CompressedModel
+    arr = np.array(vals, np.float32)
+    arr = arr[: len(arr) - len(arr) % 16]
+    w = arr.reshape(16, -1)
+    params = {"w": np.tile(w, (4, 1))}        # make it big enough to quantize
+    cm = CompressedModel.compress(params, bits=8)
+    if "w" not in cm.tensors:                 # too small -> kept raw
+        return
+    direct = quant.quantize(np.tile(w, (4, 1)), 8)
+    got = cm.decode_tensor("w")
+    assert (got == direct.q).all()
+
+
+@given(st.integers(min_value=1, max_value=64), st.integers(min_value=1,
+                                                           max_value=8))
+@settings(max_examples=30, deadline=None)
+def test_balanced_assignment_covers_all(n_segments, n_workers):
+    from repro.core.segmentation import balanced_assignment
+    rng = np.random.default_rng(n_segments * 10 + n_workers)
+    bits = rng.integers(1, 10_000, size=n_segments)
+    buckets = balanced_assignment(bits, n_workers)
+    allidx = np.concatenate([b for b in buckets if len(b)]) \
+        if any(len(b) for b in buckets) else np.array([])
+    assert sorted(allidx.tolist()) == list(range(n_segments))
+    if n_segments >= n_workers * 4:
+        loads = np.array([bits[b].sum() for b in buckets])
+        assert loads.max() <= 2.5 * max(loads.min(), 1)
