@@ -1,0 +1,99 @@
+"""Monolithic vs streamed weight decode (the load-path half of Table II).
+
+The paper's serving win assumes the one-time parallel decode is cheap AND
+that the device can hold the working set; ``decode_all`` (monolithic) decodes
+every segment of every tensor in one lock-step batch — peak host memory
+~ total model size, first weight available only at the end.  The
+:class:`~repro.core.scheduler.DecodeScheduler` streams fixed-budget chunks
+through a named decoder backend with double-buffered prefetch instead.
+
+For one 8-bit and one 4-bit container this harness reports, per strategy:
+
+  ttfw_ms    — time to first weight (first tensor fully decoded)
+  total_s    — wall time to decode every tensor
+  Msym/s     — end-to-end decode throughput
+  peak_MB    — peak Python-visible allocation during the decode
+               (``tracemalloc``; numpy buffers are tracked), i.e. the
+               decode working set *excluding* the shared container payload
+
+and asserts the streamed outputs are bit-identical to the monolithic ones.
+
+Usage:  PYTHONPATH=src python -m benchmarks.decode_streaming
+        (or `python -m benchmarks.run streaming`)
+"""
+from __future__ import annotations
+
+import time
+import tracemalloc
+
+import numpy as np
+
+from repro.configs import registry
+from repro.core.decode_backends import auto_pick, available_backends
+from repro.core.quant import Granularity
+from repro.core.store import CompressedModel
+from .table1_storage import trained_like_params
+
+
+def _run_strategy(cm: CompressedModel, strategy: str, backend: str):
+    """Returns (decoded dict, row dict)."""
+    tracemalloc.start()
+    t0 = time.perf_counter()
+    ttfw = None
+    out = {}
+    if strategy == "monolithic":
+        out = cm.decode_all(backend=backend)
+        ttfw = time.perf_counter() - t0          # nothing usable earlier
+    else:
+        for name, sym in cm.iter_decode(backend=backend):
+            if ttfw is None:
+                ttfw = time.perf_counter() - t0
+            out[name] = sym
+    total = time.perf_counter() - t0
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    n_sym = sum(t.n_symbols for t in cm.tensors.values())
+    row = dict(strategy=strategy, backend=backend, ttfw_ms=ttfw * 1e3,
+               total_s=total, msym_per_s=n_sym / total / 1e6,
+               peak_mb=peak / 1e6)
+    return out, row
+
+
+def run(model: str = "qwen3-1.7b", backends=None, verbose: bool = True):
+    cfg = registry.reduced(registry.get(model))
+    params = trained_like_params(cfg)
+    if backends is None:
+        # numpy is iteration-bound (cost ~ segment symbol count per chunk, so
+        # streaming multiplies it); the compiled backends are where streaming
+        # wins wall-clock as well as memory — show both when possible.
+        backends = [auto_pick().name]
+        if "jax" in available_backends() and "jax" not in backends:
+            backends.append("jax")
+    rows = []
+    for bits in (8, 4):
+        cm = CompressedModel.compress(params, bits=bits,
+                                      granularity=Granularity.PER_CHANNEL)
+        for backend in backends:
+            ref, r_mono = _run_strategy(cm, "monolithic", backend)
+            got, r_str = _run_strategy(cm, "streamed", backend)
+            assert set(ref) == set(got)
+            for k in ref:
+                assert (ref[k] == got[k]).all(), \
+                    f"stream/mono mismatch: {k} ({bits}b, {backend})"
+            for r in (r_mono, r_str):
+                r.update(model=model, bits=bits)
+                rows.append(r)
+    if verbose:
+        print(f"(available backends: {', '.join(available_backends())}; "
+              f"streamed output verified bit-identical to monolithic)")
+        print(f"{'bits':>4} {'backend':>16} {'strategy':>11} {'ttfw_ms':>9} "
+              f"{'total_s':>8} {'Msym/s':>7} {'peak_MB':>8}")
+        for r in rows:
+            print(f"{r['bits']:>4} {r['backend']:>16} {r['strategy']:>11} "
+                  f"{r['ttfw_ms']:>9.0f} {r['total_s']:>8.2f} "
+                  f"{r['msym_per_s']:>7.2f} {r['peak_mb']:>8.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -3,6 +3,7 @@
   table1  — storage / effective bits (paper Table I)
   table2  — latency breakdown with/without Huffman (paper Table II)
   decode  — parallel-decoding scaling (paper §IV-C / Fig. 3)
+  streaming — monolithic vs streamed weight decode (load-path of Table II)
   roofline — render §Roofline from dry-run JSON (if present)
 
 ``python -m benchmarks.run [name ...]`` runs all by default.
@@ -15,8 +16,9 @@ import sys
 
 def main(argv=None) -> int:
     which = (argv or sys.argv[1:]) or ["table1", "table2", "decode",
-                                       "roofline"]
-    from . import decode_throughput, table1_storage, table2_latency
+                                       "streaming", "roofline"]
+    from . import (decode_streaming, decode_throughput, table1_storage,
+                   table2_latency)
 
     if "table1" in which:
         print("== Table I analogue: storage & effective bits ==")
@@ -29,6 +31,10 @@ def main(argv=None) -> int:
     if "decode" in which:
         print("== Parallel decode scaling (paper §IV-C) ==")
         decode_throughput.run()
+        print()
+    if "streaming" in which:
+        print("== Monolithic vs streamed weight decode ==")
+        decode_streaming.run()
         print()
     if "roofline" in which:
         path = "results/dryrun_baseline.json"

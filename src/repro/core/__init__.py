@@ -1,11 +1,18 @@
 """EntroLLM core: mixed quantization + global Huffman coding + parallel decoding."""
-from . import bitstream, decode_jax, entropy, quant, segmentation, store
+from . import (bitstream, decode_backends, decode_jax, entropy, quant,
+               scheduler, segmentation, store)
+from .decode_backends import (DecoderBackend, available_backends,
+                              backend_names, get_backend, register_backend)
 from .entropy import HuffmanTable
 from .quant import Granularity, QuantizedTensor, Scheme, dequantize, quantize
+from .scheduler import DEFAULT_CHUNK_SYMBOLS, DecodeScheduler
 from .store import CompressedModel, CompressionStats
 
 __all__ = [
-    "bitstream", "decode_jax", "entropy", "quant", "segmentation", "store",
+    "bitstream", "decode_backends", "decode_jax", "entropy", "quant",
+    "scheduler", "segmentation", "store",
     "HuffmanTable", "Granularity", "QuantizedTensor", "Scheme",
     "dequantize", "quantize", "CompressedModel", "CompressionStats",
+    "DecoderBackend", "DecodeScheduler", "DEFAULT_CHUNK_SYMBOLS",
+    "available_backends", "backend_names", "get_backend", "register_backend",
 ]

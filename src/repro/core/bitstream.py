@@ -22,6 +22,16 @@ import numpy as np
 GUARD_BYTES = 4
 
 
+def pow2_bucket(n: int, floor: int) -> int:
+    """Round ``n`` up to a power of two >= floor.  Chunked decode callers
+    bucket matrix shapes with this so shape-specialized (jit / Pallas)
+    decoders compile once per bucket instead of once per chunk geometry."""
+    b = floor
+    while b < n:
+        b <<= 1
+    return b
+
+
 def encode_symbols(symbols: np.ndarray, codes: np.ndarray, lengths: np.ndarray
                    ) -> Tuple[np.ndarray, int]:
     """Vectorized Huffman encode of a flat uint8 symbol array.
@@ -61,10 +71,15 @@ def decode_serial(stream: np.ndarray, count: int, lut_sym: np.ndarray, lut_len: 
     return out
 
 
-def pack_streams(streams: Sequence[np.ndarray]) -> Tuple[np.ndarray, np.ndarray]:
-    """Stack variable-length byte streams into a (S, max_bytes) matrix + byte lengths."""
+def pack_streams(streams: Sequence[np.ndarray], *, min_width: int = 0
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """Stack variable-length byte streams into a (S, max_bytes) matrix + byte lengths.
+
+    ``min_width`` lets chunked callers pad every chunk's matrix to a common
+    (e.g. power-of-two) width so shape-specialized decoders reuse one compile.
+    """
     lens = np.array([len(s) for s in streams], dtype=np.int64)
-    width = int(lens.max(initial=GUARD_BYTES))
+    width = max(int(lens.max(initial=GUARD_BYTES)), int(min_width))
     mat = np.zeros((len(streams), width), dtype=np.uint8)
     for i, s in enumerate(streams):
         mat[i, : len(s)] = s

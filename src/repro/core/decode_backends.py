@@ -1,0 +1,181 @@
+"""Pluggable decoder backends for the multi-stream Huffman decode.
+
+One decode *call* takes a packed stream matrix (S segments x B bytes, guard
+padded), per-segment symbol counts, and the canonical-code LUT, and returns
+the (S, max_count) int32 symbol matrix — the contract shared by
+``core.bitstream.decode_streams`` (numpy), ``core.decode_jax.decode_streams_jax``
+(jit), and ``kernels.huffman_decode.decode_streams_pallas`` (TPU kernel).
+
+This module makes that choice a first-class, *named* decision instead of an
+ad-hoc per-call-site import:
+
+* ``register_backend`` / ``get_backend`` — a string-keyed registry
+  (``"numpy"``, ``"jax"``, ``"pallas"``, ``"pallas-interpret"``).
+* Capability probing — each backend reports :meth:`DecoderBackend.available`;
+  the ``pallas`` backend probes whether the kernel actually *compiles* on this
+  host (``interpret=False``).  Interpret mode is never auto-picked: it exists
+  only as the explicitly named ``"pallas-interpret"`` fallback.
+* ``auto_pick`` — capability-based default: compiled Pallas on TPU, the jit
+  decoder when an accelerator is attached, the numpy host path otherwise.
+
+The :class:`repro.core.scheduler.DecodeScheduler` drives whichever backend it
+is handed; see docs/ARCHITECTURE.md §"Streaming decode" for the data flow.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from .bitstream import decode_streams
+
+
+@dataclasses.dataclass(frozen=True)
+class DecoderBackend:
+    """A named decode implementation + its capability probes.
+
+    ``fn(mat, counts, lut_sym, lut_len, max_len, max_count) -> (S, max_count)
+    int32 ndarray``.  ``probe`` answers "can this backend run here at all?"
+    (gates by-name requests); ``auto_probe`` answers "should auto-pick use it
+    here?" — e.g. the jit decoder runs fine on CPU but is only *preferred*
+    when an accelerator is attached, and the interpret fallback is runnable
+    everywhere yet never auto-picked.  ``priority`` orders auto-pick
+    (higher wins).
+    """
+
+    name: str
+    fn: Callable[..., np.ndarray]
+    probe: Callable[[], bool]
+    priority: int = 0
+    auto_probe: Optional[Callable[[], bool]] = None
+
+    def available(self) -> bool:
+        try:
+            return bool(self.probe())
+        except Exception:
+            return False
+
+    def auto_eligible(self) -> bool:
+        try:
+            return bool((self.auto_probe or self.probe)())
+        except Exception:
+            return False
+
+    def decode(self, mat: np.ndarray, counts: np.ndarray, lut_sym: np.ndarray,
+               lut_len: np.ndarray, *, max_len: int,
+               max_count: Optional[int] = None) -> np.ndarray:
+        counts = np.asarray(counts, dtype=np.int64)
+        mc = int(counts.max(initial=0)) if max_count is None else int(max_count)
+        out = self.fn(mat, counts, lut_sym, lut_len, max_len, mc)
+        return np.asarray(out)[:, :mc] if mc else np.asarray(out)
+
+
+_REGISTRY: Dict[str, DecoderBackend] = {}
+
+
+def register_backend(backend: DecoderBackend) -> DecoderBackend:
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def backend_names() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def available_backends() -> List[str]:
+    return [n for n in backend_names() if _REGISTRY[n].available()]
+
+
+def auto_pick() -> DecoderBackend:
+    """Highest-priority backend whose auto-pick probe passes on this host."""
+    ranked = sorted(_REGISTRY.values(), key=lambda b: -b.priority)
+    for b in ranked:
+        if b.auto_eligible():
+            return b
+    return _REGISTRY["numpy"]    # always available by construction
+
+
+def get_backend(name: Optional[str] = None) -> DecoderBackend:
+    """Resolve a backend by name; ``None`` / ``"auto"`` -> capability pick.
+
+    Asking for an unavailable backend raises so misconfiguration is loud;
+    use ``auto`` when a silent fallback is wanted.
+    """
+    if name is None or name == "auto":
+        return auto_pick()
+    try:
+        b = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown decoder backend {name!r}; "
+                       f"registered: {backend_names()}") from None
+    if not b.available():
+        raise RuntimeError(f"decoder backend {name!r} is not available on "
+                           f"this host (available: {available_backends()})")
+    return b
+
+
+# ------------------------------------------------------------------ numpy
+def _numpy_decode(mat, counts, lut_sym, lut_len, max_len, max_count):
+    return decode_streams(mat, counts, lut_sym, lut_len, max_len)
+
+
+register_backend(DecoderBackend(
+    name="numpy", fn=_numpy_decode, probe=lambda: True, priority=0))
+
+
+# -------------------------------------------------------------------- jax
+def _jax_ok() -> bool:
+    import jax  # noqa: F401  (baked into the image; probe stays cheap)
+    return True
+
+
+def _jax_accelerated() -> bool:
+    import jax
+    return jax.default_backend() != "cpu"
+
+
+def _jax_decode(mat, counts, lut_sym, lut_len, max_len, max_count):
+    import jax.numpy as jnp
+    from .decode_jax import bucket_streams, decode_streams_jax
+    mat, counts, mc = bucket_streams(mat, counts, max_count)
+    out = decode_streams_jax(jnp.asarray(mat), jnp.asarray(counts, jnp.int32),
+                             jnp.asarray(lut_sym), jnp.asarray(lut_len),
+                             max_len=max_len, max_count=mc)
+    return np.asarray(out)
+
+
+register_backend(DecoderBackend(
+    name="jax", fn=_jax_decode, probe=_jax_ok, priority=10,
+    auto_probe=_jax_accelerated))
+
+
+# ----------------------------------------------------------------- pallas
+def _pallas_supported() -> bool:
+    from repro.kernels.huffman_decode import pallas_decode_supported
+    return pallas_decode_supported()
+
+
+def _pallas_decode(interpret: bool):
+    def fn(mat, counts, lut_sym, lut_len, max_len, max_count):
+        import jax.numpy as jnp
+        from repro.kernels.huffman_decode import decode_streams_pallas
+        from .decode_jax import bucket_streams
+        mat, counts, mc = bucket_streams(mat, counts, max_count)
+        out = decode_streams_pallas(
+            jnp.asarray(mat), jnp.asarray(counts, jnp.int32),
+            jnp.asarray(lut_sym), jnp.asarray(lut_len),
+            max_len=max_len, max_count=mc, interpret=interpret)
+        return np.asarray(out)
+    return fn
+
+
+register_backend(DecoderBackend(
+    name="pallas", fn=_pallas_decode(interpret=False),
+    probe=_pallas_supported, priority=20))
+
+# Interpret mode re-runs the kernel's Python trace per symbol step — orders of
+# magnitude slower than the numpy path.  Explicit opt-in only (never auto).
+register_backend(DecoderBackend(
+    name="pallas-interpret", fn=_pallas_decode(interpret=True),
+    probe=_jax_ok, priority=-10, auto_probe=lambda: False))

@@ -5,13 +5,43 @@ Identical structure to :func:`repro.core.bitstream.decode_streams` but expressed
 ``shard_map`` (each device decodes only its local segments — the pod-scale version of
 the paper's thread-parallel decode).  The Pallas kernel in
 ``repro.kernels.huffman_decode`` implements the same loop with the LUT pinned in VMEM.
+
+:func:`bucket_streams` is the host-side companion for *chunked* callers (the
+streaming :class:`~repro.core.scheduler.DecodeScheduler`): ``decode_streams_jax``
+specializes on (S, B, max_count), so decoding many variably-shaped chunks
+would recompile per chunk — bucketing shapes to powers of two keeps the
+compile cache to a handful of entries.
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import Tuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+from .bitstream import pow2_bucket
+
+
+def bucket_streams(mat: np.ndarray, counts: np.ndarray, max_count: int,
+                   ) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Zero-pad (S, B) streams + counts so every dimension lands on a
+    power-of-two bucket (padded lanes decode nothing: count 0).  Callers that
+    pack with ``pack_streams(..., min_width=pow2_bucket(...))`` arrive with B
+    already bucketed and skip the copy here."""
+    S, B = mat.shape
+    Sp = pow2_bucket(S, 8)
+    Bp = pow2_bucket(B, 64)
+    mc = pow2_bucket(max_count, 256)
+    if (Sp, Bp) != (S, B):
+        m = np.zeros((Sp, Bp), dtype=np.uint8)
+        m[:S, :B] = mat
+        mat = m
+        counts = np.concatenate(
+            [np.asarray(counts, np.int64), np.zeros(Sp - S, np.int64)])
+    return mat, np.asarray(counts, np.int64), mc
 
 
 @partial(jax.jit, static_argnames=("max_len", "max_count"))

@@ -1,0 +1,212 @@
+"""Streaming weight-decode scheduler (paper Alg. 1 EDGE DEVICE OPERATIONS,
+restructured as a pipeline instead of a monolithic pass).
+
+``CompressedModel.decode_all`` historically materialized *every* segment of
+*every* tensor in one lock-step batch: peak host memory ~ total model size,
+and the serving engine could not touch a single weight until the last symbol
+of the last tensor had decoded.  :class:`DecodeScheduler` replaces that with:
+
+1. **Plan** — walk the container's segments in order and group them into
+   :class:`DecodeChunk`\\ s holding at most ``chunk_symbols`` symbols.  Chunk
+   boundaries also respect a *group key* (per-layer by default: the tensor
+   name's ``/``-prefix), so one chunk never straddles two layer groups unless
+   a single tensor is itself larger than the budget (it then spans several
+   chunks and is reassembled on completion).
+2. **Decode** — each chunk is packed and decoded through a pluggable
+   :class:`repro.core.decode_backends.DecoderBackend` (``numpy`` / ``jax`` /
+   ``pallas`` by name, or capability-based auto-pick).
+3. **Stream** — :meth:`iter_decode` yields ``(name, symbols)`` as soon as a
+   tensor's last segment lands, with **double-buffered prefetch**: a worker
+   thread decodes chunk *k+1* while the consumer (dequantize, device transfer,
+   engine load) processes chunk *k*.
+
+Peak host memory is bounded by ~2 in-flight chunks (packed bytes + int32
+symbols) plus one partially assembled tensor — independent of model size.
+The monolithic behaviour is recovered exactly by ``chunk_symbols=None``
+(one chunk holding everything), which is what ``decode_all`` uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from concurrent.futures import ThreadPoolExecutor
+from typing import (TYPE_CHECKING, Callable, Dict, Iterator, List, Optional,
+                    Sequence, Tuple)
+
+import numpy as np
+
+from .bitstream import GUARD_BYTES, pack_streams, pow2_bucket
+from .decode_backends import DecoderBackend, get_backend
+from .segmentation import DEFAULT_SEGMENT_SYMBOLS
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard (store -> scheduler)
+    from .store import CompressedModel
+
+# 8 segments x 64k symbols ~ 0.5 MB of encoded uint8 payload and 2 MB of
+# decoded int32 per chunk at the default segment size — small enough for
+# edge-class hosts, large enough to keep every decode lane busy.
+DEFAULT_CHUNK_SYMBOLS = 8 * DEFAULT_SEGMENT_SYMBOLS
+
+
+def layer_group_key(name: str) -> str:
+    """Default chunk-affinity key: the tensor name's leading path component
+    (``"layers/wq" -> "layers"``, ``"embed" -> "embed"``).  With the repo's
+    layer-stacked parameter layout this keeps each logical weight group's
+    segments contiguous in the plan."""
+    return name.split("/", 1)[0]
+
+
+@dataclasses.dataclass
+class _Seg:
+    """One encoded segment's coordinates inside the container."""
+
+    tensor: str
+    index: int        # segment index within the tensor
+    is_last: bool     # final segment of its tensor
+    offset: int       # byte offset into the payload
+    nbytes: int
+    count: int        # symbols in this segment
+
+
+@dataclasses.dataclass
+class DecodeChunk:
+    """A fixed-budget unit of decode work (a run of consecutive segments)."""
+
+    segs: List[_Seg]
+
+    @property
+    def symbols(self) -> int:
+        return sum(s.count for s in self.segs)
+
+    @property
+    def tensors(self) -> List[str]:
+        out: List[str] = []
+        for s in self.segs:
+            if not out or out[-1] != s.tensor:
+                out.append(s.tensor)
+        return out
+
+
+class DecodeScheduler:
+    """Plans and runs chunked, prefetched decoding of one compressed model.
+
+    Args:
+      model: the :class:`~repro.core.store.CompressedModel` container.
+      backend: registry name (``"numpy"`` / ``"jax"`` / ``"pallas"`` /
+        ``"pallas-interpret"``), ``"auto"``/None for capability pick, or a
+        :class:`DecoderBackend` instance.
+      chunk_symbols: symbol budget per chunk; ``None`` -> single monolithic
+        chunk (the historical ``decode_all`` behaviour).
+      group_key: ``name -> str`` chunk-affinity key (default per-layer); pass
+        ``lambda n: ""`` to disable group boundaries and chunk purely by
+        budget.
+      first: optional name prefixes to schedule ahead of container order
+        (e.g. ``("embed",)`` so the serving engine's embedding is resident
+        before the bulk of the blocks decode).
+      prefetch: decode chunk *k+1* on a worker thread while chunk *k* is
+        consumed (double buffering).  Disable for single-threaded debugging.
+    """
+
+    def __init__(self, model: "CompressedModel", *,
+                 backend=None,
+                 chunk_symbols: Optional[int] = DEFAULT_CHUNK_SYMBOLS,
+                 group_key: Optional[Callable[[str], str]] = None,
+                 first: Sequence[str] = (),
+                 prefetch: bool = True):
+        self.model = model
+        self.backend: DecoderBackend = (
+            backend if isinstance(backend, DecoderBackend)
+            else get_backend(backend))
+        self.chunk_symbols = chunk_symbols
+        self.group_key = group_key or layer_group_key
+        self.first = tuple(first)
+        self.prefetch = prefetch
+
+    # ------------------------------------------------------------------ plan
+    def _ordered_names(self) -> List[str]:
+        names = list(self.model.tensors)
+        if not self.first:
+            return names
+        rank = {n: i for i, n in enumerate(names)}
+        early = lambda n: not any(n.startswith(p) for p in self.first)
+        return sorted(names, key=lambda n: (early(n), rank[n]))
+
+    def plan(self) -> List[DecodeChunk]:
+        """Group the container's segments into budgeted chunks."""
+        budget = self.chunk_symbols
+        chunks: List[DecodeChunk] = []
+        cur: List[_Seg] = []
+        cur_symbols = 0
+        cur_group: Optional[str] = None
+        for name in self._ordered_names():
+            meta = self.model.tensors[name]
+            group = self.group_key(name)
+            n_seg = len(meta.seg_offsets)
+            for j, (o, nb, c) in enumerate(zip(meta.seg_offsets,
+                                               meta.seg_nbytes,
+                                               meta.seg_counts)):
+                seg = _Seg(tensor=name, index=j, is_last=(j == n_seg - 1),
+                           offset=int(o), nbytes=int(nb), count=int(c))
+                boundary = budget is not None and cur and (
+                    cur_symbols + seg.count > budget or group != cur_group)
+                if boundary:
+                    chunks.append(DecodeChunk(cur))
+                    cur, cur_symbols = [], 0
+                cur.append(seg)
+                cur_symbols += seg.count
+                cur_group = group
+        if cur:
+            chunks.append(DecodeChunk(cur))
+        return chunks
+
+    # ---------------------------------------------------------------- decode
+    def _decode_chunk(self, chunk: DecodeChunk) -> List[np.ndarray]:
+        """Decode one chunk; returns per-segment symbol arrays (trimmed)."""
+        payload = self.model.payload
+        table = self.model.table
+        streams = [payload[s.offset: s.offset + s.nbytes] for s in chunk.segs]
+        counts = np.array([s.count for s in chunk.segs], dtype=np.int64)
+        # pack straight onto the shape bucket the jit/Pallas backends would
+        # otherwise re-pad to, so chunked decodes reuse one compile per bucket
+        width = max(GUARD_BYTES, max(s.nbytes for s in chunk.segs))
+        mat, _ = pack_streams(streams, min_width=pow2_bucket(width, 64))
+        dec = self.backend.decode(mat, counts, table.lut_sym, table.lut_len,
+                                  max_len=table.max_len)
+        return [dec[i, : s.count] for i, s in enumerate(chunk.segs)]
+
+    def iter_decode(self) -> Iterator[Tuple[str, np.ndarray]]:
+        """Yield ``(name, uint8 symbols in tensor shape)`` incrementally.
+
+        Tensors are emitted the moment their final segment decodes; with
+        prefetch enabled the next chunk decodes concurrently on a worker
+        thread while the caller consumes the current one.
+        """
+        chunks = self.plan()
+        if not chunks:
+            return
+        if not self.prefetch or len(chunks) == 1:
+            gen = (self._decode_chunk(c) for c in chunks)
+            yield from self._assemble(chunks, gen)
+            return
+        with ThreadPoolExecutor(max_workers=1) as ex:
+            def prefetched():
+                fut = ex.submit(self._decode_chunk, chunks[0])
+                for i in range(len(chunks)):
+                    got = fut.result()
+                    if i + 1 < len(chunks):
+                        fut = ex.submit(self._decode_chunk, chunks[i + 1])
+                    yield got
+            yield from self._assemble(chunks, prefetched())
+
+    def _assemble(self, chunks: List[DecodeChunk],
+                  decoded) -> Iterator[Tuple[str, np.ndarray]]:
+        pieces: Dict[str, List[np.ndarray]] = {}
+        for chunk, segs in zip(chunks, decoded):
+            for seg, arr in zip(chunk.segs, segs):
+                pieces.setdefault(seg.tensor, []).append(arr)
+                if not seg.is_last:
+                    continue
+                meta = self.model.tensors[seg.tensor]
+                parts = pieces.pop(seg.tensor)
+                flat = np.concatenate(parts) if len(parts) > 1 else parts[0]
+                yield seg.tensor, flat.astype(np.uint8).reshape(meta.shape)
+        assert not pieces, f"incomplete tensors at end of plan: {list(pieces)}"

@@ -7,16 +7,20 @@ On-disk layout (a single ``.npz``):
   * one contiguous uint8 payload holding every segment stream (byte aligned).
 
 Decode path mirrors Alg. 1's EDGE DEVICE OPERATIONS: load table + streams, then
-multi-stream parallel decode (numpy lanes, jnp, or the Pallas kernel — selectable),
-then either dequantize to the compute dtype or hand the still-quantized weights to the
-fused dequant-matmul serving path.
+multi-stream parallel decode through a named backend (``numpy`` / ``jax`` /
+``pallas`` — see :mod:`repro.core.decode_backends`), then either dequantize to
+the compute dtype or hand the still-quantized weights to the fused
+dequant-matmul serving path.  All decode entry points are thin consumers of
+:class:`repro.core.scheduler.DecodeScheduler`; the ``iter_*`` variants stream
+tensors incrementally with bounded host memory (docs/ARCHITECTURE.md,
+"Streaming decode").
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -25,6 +29,11 @@ from .bitstream import GUARD_BYTES, decode_streams, pack_streams
 from .entropy import HuffmanTable
 from .segmentation import (DEFAULT_SEGMENT_SYMBOLS, SegmentedTensor,
                            balanced_assignment, segment_and_encode)
+
+
+# "use the scheduler's default budget" sentinel, so ``chunk_symbols=None``
+# can mean "one monolithic chunk" consistently across every decode entry point
+_DEFAULT_CHUNK: object = object()
 
 
 @dataclasses.dataclass
@@ -107,6 +116,20 @@ class CompressedModel:
         return cls(table, tensors, qmeta, payload, unquantized)
 
     # --------------------------------------------------------------- decompression
+    def scheduler(self, *, backend=None, chunk_symbols=_DEFAULT_CHUNK,
+                  first: Sequence[str] = (), prefetch: bool = True):
+        """Build a :class:`~repro.core.scheduler.DecodeScheduler` over this
+        container.  ``chunk_symbols=None`` -> one monolithic chunk (the
+        lock-step all-segments batch); a positive budget (default: the
+        scheduler's per-layer budget) -> bounded-memory streaming with
+        double-buffered prefetch."""
+        from .scheduler import DEFAULT_CHUNK_SYMBOLS, DecodeScheduler
+        if chunk_symbols is _DEFAULT_CHUNK:
+            chunk_symbols = DEFAULT_CHUNK_SYMBOLS
+        return DecodeScheduler(self, backend=backend,
+                               chunk_symbols=chunk_symbols, first=first,
+                               prefetch=prefetch)
+
     def decode_tensor(self, name: str) -> np.ndarray:
         """Parallel-decode one tensor back to its uint8 symbols."""
         meta = self.tensors[name]
@@ -121,7 +144,25 @@ class CompressedModel:
             if len(streams) > 1 else out[0, : int(meta.seg_counts[0])]
         return flat.astype(np.uint8).reshape(meta.shape)
 
-    def decode_all(self, workers: int = 1) -> Dict[str, np.ndarray]:
+    def iter_decode(self, *, backend=None,
+                    chunk_symbols: Optional[int] = _DEFAULT_CHUNK,
+                    first: Sequence[str] = (),
+                    prefetch: bool = True) -> Iterator[Tuple[str, np.ndarray]]:
+        """Stream ``(name, uint8 symbols)`` tensors as they finish decoding.
+
+        ``chunk_symbols`` defaults to the scheduler's budget (per-layer
+        groups, ~512k symbols/chunk) so host memory stays bounded by the
+        chunk size; ``None`` means one monolithic chunk — the same convention
+        as :class:`~repro.core.scheduler.DecodeScheduler` everywhere.
+        """
+        if chunk_symbols is _DEFAULT_CHUNK:
+            from .scheduler import DEFAULT_CHUNK_SYMBOLS
+            chunk_symbols = DEFAULT_CHUNK_SYMBOLS
+        sched = self.scheduler(backend=backend, chunk_symbols=chunk_symbols,
+                               first=first, prefetch=prefetch)
+        return sched.iter_decode()
+
+    def decode_all(self, workers: int = 1, *, backend=None) -> Dict[str, np.ndarray]:
         """Alg. 1 EDGE DEVICE OPERATIONS: decode every tensor.
 
         ALL segments of ALL tensors are batched into ONE lock-step
@@ -129,52 +170,50 @@ class CompressedModel:
         with lanes playing the threads; batching keeps every lane busy
         regardless of per-tensor segment counts (per-tensor decoding is
         lane-starved for small tensors — measured ~6x slower in
-        benchmarks/table2).
+        benchmarks/table2).  Peak host memory ~ total model size; use
+        :meth:`iter_decode` / :meth:`iter_quantized_weights` for the
+        bounded-memory streaming path.
         """
-        names = list(self.tensors)
-        if not names:
-            return {}
-        streams, counts, owners = [], [], []
-        for name in names:
-            meta = self.tensors[name]
-            for o, nb, c in zip(meta.seg_offsets, meta.seg_nbytes,
-                                meta.seg_counts):
-                streams.append(self.payload[o: o + nb])
-                counts.append(int(c))
-                owners.append(name)
-        mat, _ = pack_streams(streams)
-        counts_arr = np.array(counts, dtype=np.int64)
-        dec = decode_streams(mat, counts_arr, self.table.lut_sym,
-                             self.table.lut_len, self.table.max_len)
-        out: Dict[str, np.ndarray] = {}
-        pieces: Dict[str, List[np.ndarray]] = {}
-        for i, name in enumerate(owners):
-            pieces.setdefault(name, []).append(dec[i, : counts[i]])
-        for name in names:
-            meta = self.tensors[name]
-            flat = np.concatenate(pieces[name]) if len(pieces[name]) > 1 \
-                else pieces[name][0]
-            out[name] = flat.astype(np.uint8).reshape(meta.shape)
-        return out
+        sched = self.scheduler(backend=backend, chunk_symbols=None,
+                               prefetch=False)
+        return dict(sched.iter_decode())
 
-    def dequantize_all(self) -> Dict[str, np.ndarray]:
-        symbols = self.decode_all()
+    def iter_dequantize(self, **kw) -> Iterator[Tuple[str, np.ndarray]]:
+        """Stream fully dequantized fp32 tensors (unquantized ones first)."""
+        for name, w in self.unquantized.items():
+            yield name, w
+        for name, q in self.iter_decode(**kw):
+            yield name, self._dequantize_one(name, q)
+
+    def _dequantize_one(self, name: str, q: np.ndarray) -> np.ndarray:
+        m = self.qmeta[name]
+        qt = quant.QuantizedTensor(
+            q=q, scale=m["scale"], zero=m["zero"], bits=m["bits"],
+            scheme=quant.Scheme(m["scheme"]),
+            granularity=quant.Granularity(m["granularity"]),
+            shape=self.tensors[name].shape,
+        )
+        return quant.dequantize(qt)
+
+    def dequantize_all(self, *, backend=None) -> Dict[str, np.ndarray]:
         out: Dict[str, np.ndarray] = dict(self.unquantized)
-        for name, q in symbols.items():
-            m = self.qmeta[name]
-            qt = quant.QuantizedTensor(
-                q=q, scale=m["scale"], zero=m["zero"], bits=m["bits"],
-                scheme=quant.Scheme(m["scheme"]),
-                granularity=quant.Granularity(m["granularity"]),
-                shape=self.tensors[name].shape,
-            )
-            out[name] = quant.dequantize(qt)
+        for name, q in self.decode_all(backend=backend).items():
+            out[name] = self._dequantize_one(name, q)
         return out
 
-    def quantized_weights(self) -> Dict[str, Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+    def iter_quantized_weights(self, **kw) -> Iterator[
+            Tuple[str, Tuple[np.ndarray, np.ndarray, np.ndarray]]]:
+        """Stream ``name -> (q, scale, zero)`` triples for the fused dequant
+        serving path — weights stay integer in HBM, dequant fuses into the
+        matmul; tensors arrive incrementally with bounded host memory."""
+        for name, q in self.iter_decode(**kw):
+            m = self.qmeta[name]
+            yield name, (q, m["scale"], m["zero"])
+
+    def quantized_weights(self, *, backend=None) -> Dict[str, Tuple[np.ndarray, np.ndarray, np.ndarray]]:
         """Decode to (q, scale, zero) triples for the fused dequant serving path —
         weights stay integer in HBM, dequant fuses into the matmul."""
-        symbols = self.decode_all()
+        symbols = self.decode_all(backend=backend)
         return {
             name: (q, self.qmeta[name]["scale"], self.qmeta[name]["zero"])
             for name, q in symbols.items()

@@ -1,8 +1,10 @@
 """Jitted public wrappers around the Pallas kernels + packing utilities.
 
-``interpret`` defaults to True off-TPU (this container) and False on real TPU
-hardware; callers can force either.  All wrappers fall back to the jnp oracle
-when ``REPRO_DISABLE_PALLAS=1`` (escape hatch for debugging).
+``interpret=None`` resolves by capability probe: the compiled kernel is used
+whenever it lowers on this host (``huffman_decode.pallas_decode_supported``),
+and interpret mode is only the fallback when compilation is impossible
+(CPU-only containers); callers can force either.  All wrappers fall back to
+the jnp oracle when ``REPRO_DISABLE_PALLAS=1`` (escape hatch for debugging).
 """
 from __future__ import annotations
 
@@ -16,7 +18,7 @@ import numpy as np
 
 from . import ref
 from .dequant_matmul import dequant_matmul as _dequant_matmul_pallas
-from .huffman_decode import decode_streams_pallas
+from .huffman_decode import decode_streams_pallas, pallas_decode_supported
 
 
 def _on_tpu() -> bool:
@@ -78,7 +80,8 @@ def huffman_decode(mat: jax.Array, counts: jax.Array, lut_sym: jax.Array,
         return jnp.asarray(ref.decode_streams_ref(
             _np.asarray(mat), _np.asarray(counts), _np.asarray(lut_sym),
             _np.asarray(lut_len), max_len))
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    if interpret is None:
+        interpret = not pallas_decode_supported()
     return decode_streams_pallas(mat, counts, lut_sym, lut_len,
                                  max_len=max_len, max_count=max_count,
                                  interpret=interpret)

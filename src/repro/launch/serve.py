@@ -1,7 +1,8 @@
 """Serving launcher: EntroLLM end-to-end on this host.
 
 Pipeline: init weights -> mixed-quantize + Huffman-encode into the
-compressed container -> parallel-decode -> serve batched requests with
+compressed container -> *streaming* parallel decode (chunked, double-buffered
+prefetch through a named decoder backend) -> serve batched requests with
 quantized (QT) weights resident, dequant fused into matmuls.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
@@ -25,6 +26,14 @@ def main(argv=None):
     p.add_argument("--gen", type=int, default=16)
     p.add_argument("--no-quantized-serving", action="store_true",
                    help="dequantize to dense fp32 at load (baseline mode)")
+    p.add_argument("--decode-backend", default=None,
+                   help="decoder backend name (numpy / jax / pallas / "
+                        "pallas-interpret); default: capability auto-pick")
+    p.add_argument("--chunk-symbols", type=int, default=None,
+                   help="streaming decode chunk budget in symbols "
+                        "(default: scheduler per-layer budget)")
+    p.add_argument("--no-stream", action="store_true",
+                   help="monolithic decode_all load (pre-streaming path)")
     p.add_argument("--production", action="store_true")
     p.add_argument("--shape", default="decode_32k")
     p.add_argument("--multi-pod", action="store_true")
@@ -64,11 +73,20 @@ def main(argv=None):
           f"{st.reduction_vs_quant*100:.1f}% below quantized, "
           f"{st.reduction_vs_fp16*100:.1f}% below fp16  [{t_comp:.1f}s]")
 
-    t0 = time.perf_counter()
+    load_metrics = {}
+    load_kw = {}
+    if args.chunk_symbols is not None:      # absent flag -> scheduler default
+        load_kw["chunk_symbols"] = args.chunk_symbols
     serve_params = engine.load_params_from_compressed(
-        cm, quantized=not args.no_quantized_serving)
-    print(f"parallel decode + load: {time.perf_counter()-t0:.2f}s "
-          f"(quantized residency: {not args.no_quantized_serving})")
+        cm, quantized=not args.no_quantized_serving,
+        backend=args.decode_backend, stream=not args.no_stream,
+        metrics=load_metrics, **load_kw)
+    print(f"{'streamed' if not args.no_stream else 'monolithic'} decode + "
+          f"load [{load_metrics['decode_backend']}]: "
+          f"{load_metrics['decode_load_s']:.2f}s "
+          f"(first weight resident after "
+          f"{load_metrics['time_to_first_weight_s']*1e3:.0f}ms; "
+          f"quantized residency: {not args.no_quantized_serving})")
 
     sc = engine.ServeConfig(max_len=args.prompt_len + args.gen)
     eng = engine.Engine(cfg, serve_params, sc)
@@ -87,9 +105,11 @@ def main(argv=None):
                                           (args.batch, args.prompt_len)),
                              jnp.int32)
     out, metrics = eng.generate(prompt, args.gen, echo_metrics=True)
+    ttft = load_metrics["decode_load_s"] + metrics["ttft_s"]
     print(f"generated {out.shape} tokens: prefill {metrics['prefill_s']:.2f}s, "
           f"decode {metrics['decode_s']:.2f}s "
-          f"({metrics['tok_per_s']:.1f} tok/s)")
+          f"({metrics['tok_per_s']:.1f} tok/s); "
+          f"time-to-first-token incl. weight load: {ttft:.2f}s")
     return 0
 
 

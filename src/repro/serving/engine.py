@@ -5,7 +5,12 @@ Pipeline (paper Alg. 1 EDGE DEVICE OPERATIONS, pod-scale):
   1. **Load**: the engine takes a :class:`core.store.CompressedModel`
      (entropy-coded container).  Weights are parallel-decoded ONCE per engine
      start — the analogue of the paper's once-per-sequence decode, amortized
-     over every request the engine ever serves.
+     over every request the engine ever serves.  The default load path
+     *streams*: the :class:`~repro.core.scheduler.DecodeScheduler` feeds
+     fixed-budget chunks (embedding first) through a pluggable decoder
+     backend with double-buffered prefetch, so host memory stays bounded and
+     the first weights are resident long before the last chunk decodes
+     (``time_to_first_weight_s`` in the load metrics).
   2. **Residency**: decoded weights stay *quantized* (uint8 symbols + scale +
      zero as :class:`models.layers.QT` triples) in HBM; dequantization fuses
      into each consuming matmul.  HBM traffic per decode step is 1 byte/param
@@ -29,7 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.store import CompressedModel
+from repro.core.store import _DEFAULT_CHUNK, CompressedModel
 from repro.models import api
 from repro.models.layers import QT
 
@@ -45,27 +50,72 @@ class ServeConfig:
 
 def load_params_from_compressed(model: CompressedModel, *,
                                 quantized: bool = True,
-                                pack_int4: bool = True) -> Dict[str, Any]:
-    """Parallel-decode the container into serving weights.
+                                pack_int4: bool = True,
+                                backend: Optional[str] = None,
+                                chunk_symbols: Optional[int] = _DEFAULT_CHUNK,
+                                stream: bool = True,
+                                metrics: Optional[dict] = None) -> Dict[str, Any]:
+    """Decode the container into serving weights, streaming by default.
 
     quantized=True  -> {name: QT(q, scale, zero)} + fp32 leftovers (EntroLLM
                        path); 4-bit containers pack nibble pairs into QT4
                        (0.5 bytes/param resident) unless ``pack_int4=False``
     quantized=False -> dense fp32 weights (baseline path)
+
+    ``stream=True`` consumes :meth:`CompressedModel.iter_decode` chunk by
+    chunk: host memory stays bounded by the scheduler's chunk budget
+    (``chunk_symbols``; ``None`` = one monolithic chunk, same convention as
+    the scheduler), the embedding is scheduled first, and each tensor's
+    device transfer overlaps the prefetch-decode of the next chunk.
+    ``stream=False`` recovers the monolithic ``decode_all`` batch.
+    ``backend`` is a decoder-registry name (``numpy`` / ``jax`` / ``pallas``
+    / ``pallas-interpret``; None = auto) and is honored on both paths.
+
+    When a ``metrics`` dict is passed it is filled with
+    ``time_to_first_weight_s`` (start -> first decoded tensor resident),
+    ``decode_load_s`` (total), and the resolved ``decode_backend`` name.
     """
+    from repro.core.decode_backends import get_backend
     from repro.models.layers import QT4
-    if not quantized:
-        return {k: jnp.asarray(v) for k, v in model.dequantize_all().items()}
-    out: Dict[str, Any] = {k: jnp.asarray(v) for k, v in model.unquantized.items()}
-    for name, (q, scale, zero) in model.quantized_weights().items():
-        bits = model.qmeta[name]["bits"]
-        if bits == 4 and pack_int4 and q.shape[-1] % 2 == 0:
-            packed = (q[..., 0::2] | (q[..., 1::2] << 4)).astype(np.uint8)
-            out[name] = QT4(jnp.asarray(packed), jnp.asarray(scale),
-                            jnp.asarray(zero))
+    t0 = time.perf_counter()
+    ttfw: Optional[float] = None
+    resolved = get_backend(backend)
+
+    if stream:
+        kw = dict(backend=resolved, first=("embed",),
+                  chunk_symbols=chunk_symbols)
+        pairs = (model.iter_dequantize(**kw) if not quantized
+                 else model.iter_quantized_weights(**kw))
+    elif quantized:
+        pairs = iter(model.quantized_weights(backend=resolved).items())
+    else:
+        pairs = iter(model.dequantize_all(backend=resolved).items())
+
+    out: Dict[str, Any] = {}
+    if quantized:
+        for k, v in model.unquantized.items():
+            out[k] = jnp.asarray(v)
+    for name, val in pairs:
+        if quantized and name in model.qmeta:
+            q, scale, zero = val
+            bits = model.qmeta[name]["bits"]
+            if bits == 4 and pack_int4 and q.shape[-1] % 2 == 0:
+                packed = (q[..., 0::2] | (q[..., 1::2] << 4)).astype(np.uint8)
+                out[name] = QT4(jnp.asarray(packed), jnp.asarray(scale),
+                                jnp.asarray(zero))
+            else:
+                out[name] = QT(jnp.asarray(q), jnp.asarray(scale),
+                               jnp.asarray(zero))
         else:
-            out[name] = QT(jnp.asarray(q), jnp.asarray(scale),
-                           jnp.asarray(zero))
+            out[name] = jnp.asarray(val)
+        if ttfw is None:
+            jax.block_until_ready(jax.tree.leaves(out[name]))
+            ttfw = time.perf_counter() - t0
+    jax.block_until_ready(jax.tree.leaves(out))
+    if metrics is not None:
+        metrics["time_to_first_weight_s"] = ttfw if ttfw is not None else 0.0
+        metrics["decode_load_s"] = time.perf_counter() - t0
+        metrics["decode_backend"] = resolved.name
     return out
 
 
@@ -117,6 +167,8 @@ class Engine:
             B, S = prompt.shape
         toks = []
         tok = sample(logits, key, self.sc.temperature)[:, None]
+        tok.block_until_ready()
+        t_first_token = time.perf_counter() - t0
         toks.append(tok)
         t1 = time.perf_counter()
         for i in range(steps - 1):
@@ -130,6 +182,7 @@ class Engine:
         t_decode = time.perf_counter() - t1
         if echo_metrics:
             return out, {"prefill_s": t_prefill, "decode_s": t_decode,
+                         "ttft_s": t_first_token,
                          "tok_per_s": B * max(steps - 1, 1) / max(t_decode, 1e-9)}
         return out
 

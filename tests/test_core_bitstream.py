@@ -1,6 +1,8 @@
 """Round-trip tests for encode -> serial decode -> multi-stream decode (np + jax)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core import bitstream, quant

@@ -1,6 +1,8 @@
 """Tests for canonical length-limited Huffman coding + the paper's Table I bands."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core import entropy, quant

@@ -1,6 +1,8 @@
 """Unit + property tests for the EntroLLM mixed quantization scheme (paper Alg. 1)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core import quant

@@ -1,5 +1,8 @@
 """Hypothesis property tests on the system's invariants (deliverable c)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core import quant

@@ -1,0 +1,166 @@
+"""Streaming decode subsystem: scheduler chunking, backend registry,
+bit-identity with the monolithic path, and the serving load path."""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import decode_backends as db
+from repro.core.quant import Granularity
+from repro.core.scheduler import DecodeScheduler, layer_group_key
+from repro.core.store import CompressedModel
+
+
+def _params(seed=0):
+    rng = np.random.default_rng(seed)
+    # > 1 segment for the big tensors at segment_symbols=16k, plus small and
+    # unquantized tensors to exercise every container path
+    return {
+        "embed": (rng.standard_t(3, size=(300, 128)) * 0.02).astype(np.float32),
+        "layers/wq": (rng.standard_t(3, size=(3, 96, 128)) * 0.02).astype(np.float32),
+        "layers/w_up": (rng.standard_t(3, size=(3, 128, 160)) * 0.02).astype(np.float32),
+        "lm_head": (rng.standard_t(3, size=(128, 300)) * 0.02).astype(np.float32),
+        "final_norm": rng.normal(size=(128,)).astype(np.float32),
+    }
+
+
+def _compress(bits, seed=0, segment_symbols=16 * 1024):
+    return CompressedModel.compress(_params(seed), bits=bits,
+                                    granularity=Granularity.PER_CHANNEL,
+                                    segment_symbols=segment_symbols)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("chunk_symbols", [10_000, 40_000, 10**9])
+def test_streaming_bit_identical_to_monolithic(bits, chunk_symbols):
+    cm = _compress(bits)
+    mono = cm.decode_all()
+    streamed = dict(cm.iter_decode(chunk_symbols=chunk_symbols))
+    assert set(mono) == set(streamed)
+    for k in mono:
+        assert mono[k].dtype == streamed[k].dtype == np.uint8
+        assert (mono[k] == streamed[k]).all(), k
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_streaming_save_load_roundtrip(bits):
+    cm = _compress(bits)
+    mono = cm.decode_all()
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "model.npz")
+        cm.save(path)
+        cm2 = CompressedModel.load(path)
+        streamed = dict(cm2.iter_decode(chunk_symbols=20_000))
+    assert set(mono) == set(streamed)
+    for k in mono:
+        assert (mono[k] == streamed[k]).all(), k
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax", "pallas-interpret"])
+def test_streaming_backends_agree(backend):
+    cm = _compress(8, segment_symbols=4096)
+    if backend not in db.available_backends():
+        pytest.skip(f"{backend} unavailable here")
+    mono = cm.decode_all()
+    streamed = dict(cm.iter_decode(backend=backend, chunk_symbols=12_000))
+    for k in mono:
+        assert (mono[k] == streamed[k]).all(), (backend, k)
+
+
+def test_scheduler_plan_respects_budget_and_groups():
+    cm = _compress(8)
+    budget = 20_000
+    sched = DecodeScheduler(cm, backend="numpy", chunk_symbols=budget)
+    plan = sched.plan()
+    all_segs = [(s.tensor, s.index) for c in plan for s in c.segs]
+    want = [(n, j) for n, t in cm.tensors.items()
+            for j in range(len(t.seg_offsets))]
+    assert all_segs == want                      # every segment exactly once
+    for c in plan:
+        groups = {layer_group_key(s.tensor) for s in c.segs}
+        assert len(groups) == 1                  # per-layer affinity
+        # budget is only exceeded when a single segment alone exceeds it
+        if len(c.segs) > 1:
+            assert c.symbols <= budget
+    assert len(plan) > 1
+
+
+def test_scheduler_first_prefix_reorders_schedule():
+    cm = _compress(8)
+    names = [n for n, _ in cm.iter_decode(chunk_symbols=20_000,
+                                          first=("lm_head",))]
+    assert names[0] == "lm_head"
+    assert set(names) == set(cm.tensors)
+
+
+def test_scheduler_monolithic_single_chunk():
+    cm = _compress(8)
+    plan = DecodeScheduler(cm, backend="numpy", chunk_symbols=None).plan()
+    assert len(plan) == 1
+    assert plan[0].symbols == sum(t.n_symbols for t in cm.tensors.values())
+
+
+def test_prefetch_off_matches_prefetch_on():
+    cm = _compress(4)
+    on = dict(DecodeScheduler(cm, backend="numpy", chunk_symbols=15_000,
+                              prefetch=True).iter_decode())
+    off = dict(DecodeScheduler(cm, backend="numpy", chunk_symbols=15_000,
+                               prefetch=False).iter_decode())
+    for k in on:
+        assert (on[k] == off[k]).all(), k
+
+
+def test_backend_registry_auto_pick_never_interpret():
+    assert db.auto_pick().name != "pallas-interpret"
+    assert "numpy" in db.available_backends()
+    with pytest.raises(KeyError):
+        db.get_backend("no-such-backend")
+
+
+def test_backend_registry_pallas_fallback_is_clean():
+    """Compiled pallas is capability-probed; when the kernel cannot compile
+    on this host, requesting it raises and auto-pick routes elsewhere."""
+    b = db._REGISTRY["pallas"]
+    if b.available():
+        assert db.get_backend("pallas").name == "pallas"
+    else:
+        with pytest.raises(RuntimeError, match="not available"):
+            db.get_backend("pallas")
+        assert db.auto_pick().name in ("numpy", "jax")
+
+
+def test_streaming_engine_load_matches_monolithic():
+    from repro.serving import engine
+    cm = _compress(8)
+    metrics = {}
+    streamed = engine.load_params_from_compressed(cm, quantized=True,
+                                                  metrics=metrics)
+    mono = engine.load_params_from_compressed(cm, quantized=True,
+                                              stream=False)
+    assert set(streamed) == set(mono)
+    for k in mono:
+        ms, mm = streamed[k], mono[k]
+        if hasattr(ms, "q"):
+            pairs = [(ms.q, mm.q), (ms.scale, mm.scale), (ms.zero, mm.zero)]
+        else:
+            pairs = [(ms, mm)]
+        for a, b in pairs:
+            assert (np.asarray(a) == np.asarray(b)).all(), k
+    assert 0.0 <= metrics["time_to_first_weight_s"] <= metrics["decode_load_s"]
+    assert metrics["decode_backend"] in db.backend_names()
+
+
+def test_streaming_engine_load_int4_packed():
+    from repro.serving import engine
+    from repro.models.layers import QT4
+    cm = _compress(4)
+    streamed = engine.load_params_from_compressed(cm, quantized=True)
+    mono = engine.load_params_from_compressed(cm, quantized=True, stream=False)
+    assert any(isinstance(v, QT4) for v in streamed.values())
+    for k in mono:
+        ms, mm = streamed[k], mono[k]
+        if hasattr(ms, "q"):
+            assert (np.asarray(ms.q) == np.asarray(mm.q)).all(), k
+        else:
+            assert (np.asarray(ms) == np.asarray(mm)).all(), k
