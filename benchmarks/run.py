@@ -4,6 +4,7 @@
   table2  — latency breakdown with/without Huffman (paper Table II)
   decode  — parallel-decoding scaling (paper §IV-C / Fig. 3)
   streaming — monolithic vs streamed weight decode (load-path of Table II)
+  traffic — continuous batching vs lockstep under Poisson arrivals
   roofline — render §Roofline from dry-run JSON (if present)
 
 ``python -m benchmarks.run [name ...]`` runs all by default.
@@ -16,7 +17,7 @@ import sys
 
 def main(argv=None) -> int:
     which = (argv or sys.argv[1:]) or ["table1", "table2", "decode",
-                                       "streaming", "roofline"]
+                                       "streaming", "traffic", "roofline"]
     from . import (decode_streaming, decode_throughput, table1_storage,
                    table2_latency)
 
@@ -35,6 +36,11 @@ def main(argv=None) -> int:
     if "streaming" in which:
         print("== Monolithic vs streamed weight decode ==")
         decode_streaming.run()
+        print()
+    if "traffic" in which:
+        print("== Continuous batching vs lockstep (Poisson traffic) ==")
+        from . import serving_traffic
+        serving_traffic.run()
         print()
     if "roofline" in which:
         path = "results/dryrun_baseline.json"

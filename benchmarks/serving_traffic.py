@@ -1,0 +1,171 @@
+"""Continuous batching vs lockstep serving under synthetic Poisson traffic.
+
+The paper's Jetson speedups assume the accelerator stays busy; this harness
+measures whether the serving layer can actually keep it busy when requests
+arrive *independently*.  A seeded Poisson process emits N requests (ragged
+prompt lengths, ragged ``max_new_tokens``, greedy); the same trace is served
+two ways:
+
+  lockstep    — the pre-batching engine's only option for independent
+                arrivals: one ``Engine.generate`` call per request, in
+                arrival order (request i starts at
+                ``max(arrival_i, finish_{i-1})``).
+  continuous  — :class:`~repro.serving.batching.ContinuousEngine` with
+                ``--slots`` slots: arrivals are queued as their timestamps
+                come due, admitted into free slots mid-flight (chunked
+                prefill), and detach on completion.
+
+Reported per strategy: queue wait, TTFT, p50/p99 end-to-end latency, and
+aggregate tok/s (total generated tokens / makespan).  Every request's greedy
+tokens are asserted bit-identical between the two paths — batching must
+never change what a request decodes, only when.
+
+Usage:  PYTHONPATH=src python -m benchmarks.serving_traffic [--dry-run]
+        (or `python -m benchmarks.run traffic`)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import List, Optional
+
+import numpy as np
+
+
+def _percentile(xs: List[float], p: float) -> float:
+    return float(np.percentile(np.asarray(xs), p)) if xs else float("nan")
+
+
+def run_lockstep(eng, trace):
+    """Serial Engine.generate per arrival — the lockstep baseline."""
+    import jax.numpy as jnp
+    t0 = time.monotonic()
+    outs, rows = [], []
+    for arrival, prompt, max_new in trace:
+        now = time.monotonic() - t0
+        if now < arrival:
+            time.sleep(arrival - now)
+            now = arrival
+        start = time.monotonic() - t0               # generate begins
+        out, m = eng.generate(jnp.asarray(prompt[None]), max_new,
+                              echo_metrics=True)
+        done = time.monotonic() - t0
+        outs.append(np.asarray(out)[0].tolist())
+        rows.append(dict(queue_wait=start - arrival,
+                         ttft=start - arrival + m["ttft_s"],
+                         latency=done - arrival, n_tokens=max_new))
+    makespan = time.monotonic() - t0
+    return outs, rows, makespan
+
+
+def run_continuous(ce, trace):
+    """Feed the trace through the ContinuousEngine as timestamps come due."""
+    from repro.serving.batching import replay
+    requests, _, makespan = replay(ce, trace)
+    outs = [r.output for r in requests]
+    rows = [dict(queue_wait=r.queue_wait_s, ttft=r.ttft_s,
+                 latency=r.latency_s, n_tokens=len(r.output))
+            for r in requests]
+    return outs, rows, makespan
+
+
+def _report(name, rows, makespan):
+    toks = sum(r["n_tokens"] for r in rows)
+    lat = [r["latency"] for r in rows]
+    print(f"  {name:<11} {toks:4d} tok in {makespan:6.2f}s "
+          f"= {toks / max(makespan, 1e-9):7.1f} tok/s | "
+          f"queue wait p50 {_percentile([r['queue_wait'] for r in rows], 50)*1e3:6.1f}ms | "
+          f"ttft p50 {_percentile([r['ttft'] for r in rows], 50)*1e3:6.1f}ms | "
+          f"latency p50/p99 {_percentile(lat, 50)*1e3:7.1f}/"
+          f"{_percentile(lat, 99)*1e3:7.1f}ms")
+    return toks / max(makespan, 1e-9)
+
+
+def run(model: str = "qwen3-1.7b", *, n_requests: int = 16, slots: int = 8,
+        rate_per_s: float = 100.0, prompt_max: int = 24, gen_max: int = 12,
+        prefill_chunk: int = 8, check_speedup: Optional[float] = None,
+        seed: int = 0, verbose: bool = True) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import registry
+    from repro.models import api
+    from repro.serving import engine as serving_engine
+    from repro.serving.batching import ContinuousEngine, poisson_trace
+
+    cfg = registry.reduced(registry.get(model))
+    params = api.build(cfg).init(cfg, jax.random.PRNGKey(0))
+    max_len = prompt_max + gen_max + prefill_chunk
+    sc = serving_engine.ServeConfig(max_len=max_len)
+    eng = serving_engine.Engine(cfg, params, sc)
+    trace = poisson_trace(n_requests, rate_per_s=rate_per_s,
+                          prompt_max=prompt_max, gen_max=gen_max,
+                          vocab=cfg.vocab, seed=seed)
+
+    # warm both paths so the comparison measures serving, not XLA compiles:
+    # every (prompt_len) shape for lockstep, the slot/chunk shapes for CB
+    for _, prompt, _ in trace:
+        eng.generate(jnp.asarray(prompt[None]), 2)
+    warm = ContinuousEngine(cfg, params, sc, n_slots=slots,
+                            max_queue=n_requests,
+                            prefill_chunk=prefill_chunk, steps=eng.steps)
+    for _, prompt, max_new in trace[:2]:
+        warm.submit(prompt, max_new)
+    warm.run()
+
+    if verbose:
+        print(f"{cfg.name}: {n_requests} Poisson arrivals @ {rate_per_s}/s, "
+              f"prompts ≤{prompt_max}, gen ≤{gen_max}, {slots} slots")
+    outs_l, rows_l, span_l = run_lockstep(eng, trace)
+    ce = ContinuousEngine(cfg, params, sc, n_slots=slots,
+                          max_queue=n_requests, prefill_chunk=prefill_chunk,
+                          steps=eng.steps)
+    outs_c, rows_c, span_c = run_continuous(ce, trace)
+
+    for i, (a, b) in enumerate(zip(outs_l, outs_c)):
+        assert a == b, (f"request {i}: continuous batching changed greedy "
+                        f"tokens\n  lockstep   {a}\n  continuous {b}")
+    tps_l = _report("lockstep", rows_l, span_l) if verbose else \
+        sum(r["n_tokens"] for r in rows_l) / max(span_l, 1e-9)
+    tps_c = _report("continuous", rows_c, span_c) if verbose else \
+        sum(r["n_tokens"] for r in rows_c) / max(span_c, 1e-9)
+    speedup = tps_c / max(tps_l, 1e-9)
+    if verbose:
+        print(f"  aggregate speedup: {speedup:.2f}x "
+              f"({len(outs_c)} requests bit-identical)")
+    if check_speedup is not None:
+        assert speedup >= check_speedup, \
+            f"continuous batching {speedup:.2f}x < required {check_speedup}x"
+    return dict(speedup=speedup, tok_per_s_lockstep=tps_l,
+                tok_per_s_continuous=tps_c)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default="qwen3-1.7b")
+    p.add_argument("--requests", type=int, default=16)
+    p.add_argument("--slots", type=int, default=8)
+    p.add_argument("--rate", type=float, default=100.0,
+                   help="Poisson arrival rate, requests/s")
+    p.add_argument("--prompt-max", type=int, default=24)
+    p.add_argument("--gen-max", type=int, default=12)
+    p.add_argument("--prefill-chunk", type=int, default=8)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--check", type=float, default=None, metavar="X",
+                   help="fail unless continuous >= X times lockstep tok/s")
+    p.add_argument("--dry-run", action="store_true",
+                   help="tiny CI smoke: few requests, no speedup gate")
+    args = p.parse_args(argv)
+    if args.dry_run:
+        run(args.arch, n_requests=4, slots=2, rate_per_s=200.0, prompt_max=10,
+            gen_max=5, prefill_chunk=4, seed=args.seed)
+        return 0
+    run(args.arch, n_requests=args.requests, slots=args.slots,
+        rate_per_s=args.rate, prompt_max=args.prompt_max,
+        gen_max=args.gen_max, prefill_chunk=args.prefill_chunk,
+        check_speedup=args.check, seed=args.seed)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

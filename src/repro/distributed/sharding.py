@@ -132,6 +132,12 @@ def serve_rules(mesh: Mesh, *, long_context: bool = False) -> Rules:
         "expert_mlp": None,
         "layers": None,
         "batch": () if long_context else _axes(mesh, "pod", "data"),
+        # resolution rule for the slotted cache layout (cache_specs(cfg,
+        # layout="slot")): slots resolve like lockstep batch rows.  The
+        # single-host ContinuousEngine does not install shardings yet — this
+        # rule exists so the slotted layout resolves when serving goes
+        # multi-device.
+        "slot": () if long_context else _axes(mesh, "pod", "data"),
         "kv_seq": _axes(mesh, "pod", "data") if long_context else (),
         "seq": None,
     })

@@ -2,11 +2,23 @@
 
 Pipeline: init weights -> mixed-quantize + Huffman-encode into the
 compressed container -> *streaming* parallel decode (chunked, double-buffered
-prefetch through a named decoder backend) -> serve batched requests with
-quantized (QT) weights resident, dequant fused into matmuls.
+prefetch through a named decoder backend) -> serve with quantized (QT)
+weights resident, dequant fused into matmuls.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
-        --bits 8 --batch 4 --prompt-len 32 --gen 16
+Two serving modes:
+
+* lockstep (default) — one fixed-shape batch through ``Engine.generate``:
+
+      PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
+          --bits 8 --batch 4 --prompt-len 32 --gen 16
+
+* continuous batching (``--batch-slots N``) — a slot-batched
+  ``ContinuousEngine`` serves ``--traffic R`` independently-arriving
+  synthetic requests (Poisson replay; ragged prompts and gen lengths),
+  reporting queue wait / TTFT / latency percentiles:
+
+      PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
+          --bits 8 --batch-slots 8 --traffic 16 --gen 16
 
 ``--production`` lowers the full-config serve_step on the production mesh
 instead (same path as the dry-run decode cells).
@@ -34,10 +46,35 @@ def main(argv=None):
                         "(default: scheduler per-layer budget)")
     p.add_argument("--no-stream", action="store_true",
                    help="monolithic decode_all load (pre-streaming path)")
+    p.add_argument("--batch-slots", type=int, default=0, metavar="N",
+                   help="serve with an N-slot continuous-batching engine "
+                        "instead of one lockstep batch (0 = lockstep)")
+    p.add_argument("--max-queue", type=int, default=64,
+                   help="admission-queue bound for --batch-slots")
+    p.add_argument("--prefill-chunk", type=int, default=16,
+                   help="chunked-prefill step for --batch-slots")
+    p.add_argument("--traffic", type=int, default=0, metavar="R",
+                   help="with --batch-slots: replay R synthetic Poisson "
+                        "arrivals (ragged prompts/gen) instead of one "
+                        "uniform request wave")
     p.add_argument("--production", action="store_true")
     p.add_argument("--shape", default="decode_32k")
     p.add_argument("--multi-pod", action="store_true")
     args = p.parse_args(argv)
+
+    # validate the backend against the registry BEFORE any expensive work, so
+    # a typo fails with the list of choices, not a deep KeyError mid-load
+    if args.decode_backend is not None and args.decode_backend != "auto":
+        from repro.core.decode_backends import (available_backends,
+                                                backend_names)
+        if args.decode_backend not in backend_names():
+            p.error(f"unknown decoder backend {args.decode_backend!r}; "
+                    f"registered: {backend_names()}, "
+                    f"available on this host: {available_backends()}")
+        if args.decode_backend not in available_backends():
+            p.error(f"decoder backend {args.decode_backend!r} is not "
+                    f"available on this host; available: "
+                    f"{available_backends()}")
 
     if args.production:
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
@@ -88,9 +125,17 @@ def main(argv=None):
           f"{load_metrics['time_to_first_weight_s']*1e3:.0f}ms; "
           f"quantized residency: {not args.no_quantized_serving})")
 
-    sc = engine.ServeConfig(max_len=args.prompt_len + args.gen)
-    eng = engine.Engine(cfg, serve_params, sc)
+    # slot mode pads prompts to a prefill-chunk multiple, so its cache needs
+    # that much headroom; the lockstep path keeps the exact footprint
+    headroom = max(args.prefill_chunk, 0) if args.batch_slots > 0 else 0
+    sc = engine.ServeConfig(max_len=args.prompt_len + args.gen + headroom)
     rng = np.random.default_rng(0)
+
+    if args.batch_slots > 0:
+        return _serve_continuous(cfg, serve_params, sc, args, rng,
+                                 load_metrics)
+
+    eng = engine.Engine(cfg, serve_params, sc)
     if cfg.family == "encdec":
         prompt = {
             "tokens": jnp.asarray(rng.integers(0, cfg.vocab,
@@ -108,8 +153,57 @@ def main(argv=None):
     ttft = load_metrics["decode_load_s"] + metrics["ttft_s"]
     print(f"generated {out.shape} tokens: prefill {metrics['prefill_s']:.2f}s, "
           f"decode {metrics['decode_s']:.2f}s "
-          f"({metrics['tok_per_s']:.1f} tok/s); "
+          f"({metrics['decode_tok_per_s']:.1f} decode tok/s, "
+          f"{metrics['e2e_tok_per_s']:.1f} e2e tok/s); "
           f"time-to-first-token incl. weight load: {ttft:.2f}s")
+    return 0
+
+
+def _serve_continuous(cfg, serve_params, sc, args, rng, load_metrics):
+    """--batch-slots path: slot-batched serving of independent requests."""
+    import numpy as np
+    from repro.serving.batching import (ContinuousEngine, QueueFullError,
+                                        poisson_trace, replay)
+
+    ce = ContinuousEngine(cfg, serve_params, sc, n_slots=args.batch_slots,
+                          max_queue=args.max_queue,
+                          prefill_chunk=args.prefill_chunk)
+    n = args.traffic if args.traffic > 0 else args.batch
+    shed = 0
+    t0 = time.monotonic()
+    if args.traffic > 0:        # Poisson replay: ragged prompts + gen lengths
+        trace = poisson_trace(n, rate_per_s=100.0, prompt_max=args.prompt_len,
+                              gen_max=args.gen, vocab=cfg.vocab, seed=0)
+        _, shed, _ = replay(ce, trace, shed_on_full=True)
+    else:                       # one wave of uniform requests
+        for _ in range(n):
+            prompt = rng.integers(0, cfg.vocab, (args.prompt_len,)
+                                  ).astype(np.int32)
+            while True:
+                try:
+                    ce.submit(prompt, args.gen)
+                    break
+                except QueueFullError:   # drain some work, then re-offer
+                    ce.step()
+        ce.run()
+    span = time.monotonic() - t0
+    fin = ce.finished
+    if not fin:
+        print(f"continuous batching: no requests completed "
+              f"({shed} shed by backpressure)")
+        return 1
+    toks = sum(len(r.output) for r in fin)
+    lat = sorted(r.latency_s for r in fin)
+    ttft = sorted(r.ttft_s for r in fin)
+    print(f"continuous batching [{args.batch_slots} slots, queue bound "
+          f"{args.max_queue}]: {len(fin)}/{n} requests"
+          + (f" ({shed} shed by backpressure)" if shed else "")
+          + f", {toks} tok in "
+          f"{span:.2f}s = {toks/max(span, 1e-9):.1f} tok/s aggregate")
+    print(f"  ttft p50 {ttft[len(ttft)//2]*1e3:.0f}ms (+{load_metrics['decode_load_s']:.2f}s "
+          f"weight load) | latency p50 {lat[len(lat)//2]*1e3:.0f}ms "
+          f"p99 {lat[min(len(lat)-1, int(len(lat)*0.99))]*1e3:.0f}ms | "
+          f"{ce.n_decode_steps} fused decode steps")
     return 0
 
 

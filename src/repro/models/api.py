@@ -7,6 +7,18 @@
     decode_step(cfg, params, token, cache, pos, *, ...) -> (logits, cache)
     init_cache(cfg, batch, max_len) -> cache pytree
     cache_specs(cfg) -> logical axes for cache leaves
+
+Attention-cache families (dense, moe) additionally expose the slot-batch
+contract used by continuous-batching serving (``serving/batching``):
+
+    prefill_chunk(cfg, params, tokens, cache, pos, *, ...) -> (logits, cache)
+        — chunked prefill at per-slot (B,) write offsets
+    decode_step(..., pos=(B,) array)
+        — one fused step over a slot batch with ragged per-slot kv_len
+
+``supports_continuous_batching(cfg)`` reports whether a family implements it
+(recurrent caches — ssm/hybrid conv+state, encdec cross-attention — need a
+family-specific slot layout and are not wired up yet).
 """
 from __future__ import annotations
 
@@ -27,6 +39,12 @@ def build(cfg: ArchConfig) -> types.ModuleType:
         "hybrid": hybrid,
         "encdec": encdec,
     }[cfg.family]
+
+
+def supports_continuous_batching(cfg: ArchConfig) -> bool:
+    """True when the family implements the slot-batch cache contract
+    (``prefill_chunk`` + per-slot ``decode_step`` positions)."""
+    return hasattr(build(cfg), "prefill_chunk")
 
 
 def param_shapes(cfg: ArchConfig) -> Dict[str, Tuple[int, ...]]:

@@ -71,6 +71,10 @@ def _attn(cfg: ArchConfig, lp: Dict[str, Any], x: jax.Array, *, positions,
     """Attention sub-block; returns (out, new_cache).
 
     ``cache`` is (k, v) bf16 or (k, v, k_scale, v_scale) for the int8 cache.
+    ``pos`` is the cache write offset — scalar (lockstep batch) or ``(B,)``
+    (slot batch, one independent position per row).  With a cache present,
+    ``S`` may exceed 1: the chunk is written at ``[pos, pos + S)`` and
+    attended causally against the whole cache (chunked prefill).
     """
     B, S, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -92,11 +96,12 @@ def _attn(cfg: ArchConfig, lp: Dict[str, Any], x: jax.Array, *, positions,
         ck, cv = update_kv_cache(cache[0], cache[1], kq, vq, pos)
         cks, cvs = update_kv_cache(cache[2], cache[3], ks, vs, pos)
         attn = gqa_attention(q, dequantize_kv(ck, cks), dequantize_kv(cv, cvs),
-                             causal=False, kv_len=pos + 1)
+                             causal=S > 1, q_offset=pos, kv_len=pos + S)
         new_cache = (ck, cv, cks, cvs)
     else:
         ck, cv = update_kv_cache(cache[0], cache[1], k, v, pos)
-        attn = gqa_attention(q, ck, cv, causal=False, kv_len=pos + 1)
+        attn = gqa_attention(q, ck, cv, causal=S > 1, q_offset=pos,
+                             kv_len=pos + S)
         new_cache = (ck, cv)
     out = matmul(attn.reshape(B, S, H * hd), lp["wo"])
     return out, new_cache
@@ -165,15 +170,21 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
     }
 
 
-def cache_specs(cfg: ArchConfig, kv_bits: int = 16
+def cache_specs(cfg: ArchConfig, kv_bits: int = 16, layout: str = "batch"
                 ) -> Dict[str, Tuple[Optional[str], ...]]:
+    """Logical axes for the cache leaves.  ``layout="slot"`` names axis 1
+    "slot" instead of "batch": the slotted cache of continuous batching is
+    the same memory, but slots are rows of a resident pool (requests come
+    and go within them) rather than rows of one lockstep request batch, and
+    the sharding rules resolve the two independently."""
+    b = "slot" if layout == "slot" else "batch"
     s = {
-        "k": ("layers", "batch", "kv_seq", "kv", None),
-        "v": ("layers", "batch", "kv_seq", "kv", None),
+        "k": ("layers", b, "kv_seq", "kv", None),
+        "v": ("layers", b, "kv_seq", "kv", None),
     }
     if kv_bits == 8:
-        s["k_scale"] = ("layers", "batch", "kv_seq", "kv", None)
-        s["v_scale"] = ("layers", "batch", "kv_seq", "kv", None)
+        s["k_scale"] = ("layers", b, "kv_seq", "kv", None)
+        s["v_scale"] = ("layers", b, "kv_seq", "kv", None)
     return s
 
 
@@ -192,11 +203,48 @@ def prefill(cfg: ArchConfig, params, tokens, *, max_len: Optional[int] = None,
 
 
 def decode_step(cfg: ArchConfig, params, token, cache, pos, *, unroll: int = 1):
-    """One generation step.  token: (B, 1) int32; pos: scalar current position."""
+    """One generation step.  token: (B, 1) int32; pos: scalar position shared by
+    the whole batch (lockstep) or (B,) per-slot positions (continuous batch)."""
     from repro.distributed.ctx import constrain_activation
     B = token.shape[0]
     x = constrain_activation(take_rows(params["embed"], token))
-    positions = pos + jnp.arange(1)
+    positions = jnp.asarray(pos)[..., None] + jnp.arange(1)   # (1,) or (B, 1)
+    stack = _layer_stack(params)
+    q8 = "k_scale" in cache
+
+    def body(x, xs):
+        lp, *c = xs
+        x, c = _block(cfg, lp, x, positions=positions, cache=tuple(c), pos=pos)
+        return constrain_activation(x), c
+
+    keys = ("k", "v", "k_scale", "v_scale") if q8 else ("k", "v")
+    x, out = jax.lax.scan(body, x, (stack, *[cache[k] for k in keys]),
+                          unroll=unroll)
+    x = rms_norm(x, params["final_norm"])
+    return logits_fn(cfg, params, x), dict(zip(keys, out))
+
+
+def prefill_chunk(cfg: ArchConfig, params, tokens, cache, pos, *,
+                  unroll: int = 1):
+    """Chunked prefill: write one prompt chunk into an existing slotted cache.
+
+    tokens: (B, S) int32 chunk; cache: ``init_cache``-layout pytree; pos: (B,)
+    int32 per-slot write offsets (the chunk occupies cache rows
+    ``[pos, pos + S)``; the caller guarantees ``pos + S <= max_len``).
+    Returns (logits for every chunk position (B, S, V), cache) — the caller
+    picks the logit at the request's true last prompt position, so ragged
+    prompts ride in fixed-shape chunks (pad tokens land in the cache but stay
+    masked forever because ``kv_len`` never reaches them).
+
+    This is the admission path of continuous batching: a new request prefills
+    chunk by chunk through ONE compiled shape while the decode batch keeps
+    stepping between chunks, then the filled cache rows are spliced into a
+    free slot.
+    """
+    from repro.distributed.ctx import constrain_activation
+    B, S = tokens.shape
+    x = constrain_activation(take_rows(params["embed"], tokens))
+    positions = pos[:, None] + jnp.arange(S)                  # (B, S)
     stack = _layer_stack(params)
     q8 = "k_scale" in cache
 

@@ -207,12 +207,18 @@ def gqa_attention(
     v: jax.Array,              # (B, T, KV, hd)
     *,
     causal: bool,
-    q_offset: Any = 0,         # global position of q[0] (for causal masking vs cache)
-    kv_len: Optional[jax.Array] = None,   # valid cache length (decode)
+    q_offset: Any = 0,         # global position of q[0]: scalar, or (B,) per-slot
+    kv_len: Optional[jax.Array] = None,   # valid cache length: scalar, or (B,) per-slot
     q_block: int = 0,          # 0 = single block; else scan over q blocks
     unroll: int = 1,
 ) -> jax.Array:
     """Grouped-query attention with optional q-block chunking.
+
+    ``q_offset`` and ``kv_len`` accept either scalars (lockstep batch: every
+    row at the same position) or ``(B,)`` arrays (slot batch: each row is an
+    independent request with its own cache length — the continuous-batching
+    serving mode).  Per-slot offsets disable q-block chunking (the block scan
+    would need ragged bases); callers pass ``q_block=0`` on that path.
 
     SPMD formulation: KV heads are broadcast up to the full head count BEFORE
     the score einsum (MaxText-style "KV replication"), so every attention
@@ -240,7 +246,7 @@ def gqa_attention(
     v = constrain_heads(v, is_cache_side=True)
 
     def block(qb: jax.Array, qpos: jax.Array) -> jax.Array:
-        # qb: (B, Sb, H, hd); qpos: (Sb,) global positions
+        # qb: (B, Sb, H, hd); qpos: (Sb,) or (B, Sb) global positions
         # bf16 operands + f32 accumulation (MXU-style): keeps the KV-cache
         # read at 2 bytes/element — an f32 cast before the dot doubles the
         # cache wire/HBM traffic (EXPERIMENTS.md §Perf H1 iteration 2)
@@ -249,17 +255,25 @@ def gqa_attention(
                        preferred_element_type=jnp.float32)
         s = constrain_scores(s)                       # (B, H, Sq, T)
         tpos = jnp.arange(T)
-        mask = jnp.ones((qpos.shape[0], T), bool)
+        mask = jnp.ones(qpos.shape + (T,), bool)      # (Sb, T) or (B, Sb, T)
         if causal:
-            mask &= tpos[None, :] <= qpos[:, None]
+            mask &= tpos <= qpos[..., None]
         if kv_len is not None:
-            mask &= tpos[None, :] < kv_len
-        s = jnp.where(mask[None, None], s, NEG_INF)
+            kl = jnp.asarray(kv_len)
+            # scalar broadcasts; (B,) reshapes to (B, 1, 1) against (B, Sb, T)
+            if kl.ndim == 1:
+                mask = mask & (tpos < kl[:, None, None])
+            else:
+                mask &= tpos < kl
+        while mask.ndim < 3:                          # -> (B|1, Sb, T)
+            mask = mask[None]
+        s = jnp.where(mask[:, None], s, NEG_INF)      # (B|1, 1, Sq, T)
         p = jax.nn.softmax(s, axis=-1)
         return jnp.einsum("bnst,btnh->bsnh", p.astype(v.dtype), v)
 
-    if q_block <= 0 or q_block >= S:
-        return block(q, q_offset + jnp.arange(S))
+    qpos0 = jnp.asarray(q_offset)[..., None] + jnp.arange(S)  # (S,) or (B, S)
+    if q_block <= 0 or q_block >= S or qpos0.ndim > 1:
+        return block(q, qpos0)
 
     assert S % q_block == 0, (S, q_block)
     nb = S // q_block
@@ -276,7 +290,18 @@ def gqa_attention(
 
 def update_kv_cache(cache_k: jax.Array, cache_v: jax.Array, k: jax.Array, v: jax.Array,
                     pos: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Write step-k/v (B, 1, KV, hd) into preallocated (B, T, KV, hd) caches."""
+    """Write step-k/v (B, S, KV, hd) into preallocated (B, T, KV, hd) caches.
+
+    ``pos`` is the write offset along T: a scalar writes every batch row at
+    the same position (lockstep decode), a ``(B,)`` array writes each row at
+    its own position (slot batch — every slot tracks an independent
+    ``kv_len``, so a freshly admitted request and a request 100 tokens deep
+    share one fused cache update).
+    """
+    if jnp.ndim(pos) == 1:
+        def row(c, x, p):
+            return jax.lax.dynamic_update_slice(c, x.astype(c.dtype), (p, 0, 0))
+        return jax.vmap(row)(cache_k, k, pos), jax.vmap(row)(cache_v, v, pos)
     ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
     cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
     return ck, cv

@@ -292,7 +292,7 @@ def decode_step(cfg: ArchConfig, params, token, cache, pos, *, unroll: int = 1):
     from repro.distributed.ctx import constrain_activation
     B = token.shape[0]
     x = constrain_activation(take_rows(params["embed"], token))
-    positions = pos + jnp.arange(1)
+    positions = jnp.asarray(pos)[..., None] + jnp.arange(1)   # (1,) or (B, 1)
     stack = dense._layer_stack(params)
 
     def body(x, xs):
@@ -301,5 +301,33 @@ def decode_step(cfg: ArchConfig, params, token, cache, pos, *, unroll: int = 1):
         return constrain_activation(x), (ck, cv)
 
     x, (ck, cv) = jax.lax.scan(body, x, (stack, cache["k"], cache["v"]), unroll=unroll)
+    x = rms_norm(x, params["final_norm"])
+    return dense.logits_fn(cfg, params, x), {"k": ck, "v": cv}
+
+
+def prefill_chunk(cfg: ArchConfig, params, tokens, cache, pos, *,
+                  unroll: int = 1):
+    """Chunked prefill into a slotted cache; see :func:`dense.prefill_chunk`.
+
+    NOTE on dispatch capacity: the GShard capacity ``C`` is a function of the
+    number of tokens in flight, so a chunk and a full-prompt prefill route
+    identically only while no expert overflows — serve MoE with a
+    ``capacity_factor`` that admits the worst case (``>= E / top_k``) when
+    bit-reproducibility across batch packings matters.
+    """
+    from repro.distributed.ctx import constrain_activation
+    B, S = tokens.shape
+    x = constrain_activation(take_rows(params["embed"], tokens))
+    positions = pos[:, None] + jnp.arange(S)                  # (B, S)
+    stack = dense._layer_stack(params)
+
+    def body(x, xs):
+        lp, ck, cv = xs
+        x, (ck, cv), _ = _block(cfg, lp, x, positions=positions,
+                                cache=(ck, cv), pos=pos)
+        return constrain_activation(x), (ck, cv)
+
+    x, (ck, cv) = jax.lax.scan(body, x, (stack, cache["k"], cache["v"]),
+                               unroll=unroll)
     x = rms_norm(x, params["final_norm"])
     return dense.logits_fn(cfg, params, x), {"k": ck, "v": cv}

@@ -1,1 +1,1 @@
-from . import engine
+from . import batching, engine

@@ -1,0 +1,18 @@
+"""Continuous-batching serving subsystem.
+
+Request lifecycle (:mod:`.request`), bounded admission queue (:mod:`.queue`),
+slot-based KV cache pool (:mod:`.slots`), and the scheduler that fuses them
+over the shared jitted step functions (:mod:`.engine`).  See
+docs/ARCHITECTURE.md §"Serving".
+"""
+from .engine import ContinuousEngine
+from .queue import QueueFullError, RequestQueue
+from .request import Request, RequestState, SamplingParams
+from .slots import SlotBatchManager
+from .traffic import poisson_trace, replay
+
+__all__ = [
+    "ContinuousEngine", "QueueFullError", "Request", "RequestQueue",
+    "RequestState", "SamplingParams", "SlotBatchManager", "poisson_trace",
+    "replay",
+]

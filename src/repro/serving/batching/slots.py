@@ -1,0 +1,102 @@
+"""Slot-based KV cache pool for continuous batching.
+
+The manager owns ONE fixed-capacity batched cache pytree (the model family's
+``init_cache(cfg, n_slots, max_len)`` layout — axis 1 is the slot axis, see
+``cache_specs(cfg, layout="slot")``) plus the per-slot bookkeeping the jitted
+step cannot hold: ``kv_len`` per slot, the free list, and the slot → request
+map.  All device-side mutation goes through two jitted, donating helpers:
+
+* ``insert``  — splice a freshly prefilled request's cache rows into a slot
+  (one ``dynamic_update_slice`` per leaf; overwrites the whole slot, so
+  whatever a previous occupant or an idle decode step left there is gone);
+* ``release`` — free the slot and *compact* it (zero the slot's rows), so a
+  dead request's keys don't linger in cache memory until reuse.
+
+Slot alloc/free is O(1); there is no cross-slot copying — "compaction" here
+means reclaim-and-zero, not defragmentation, because slots are fixed-size
+rows of one preallocated pool and can never fragment.  Compaction is hygiene,
+not a correctness requirement: correctness rests on ``insert`` overwriting
+every row of the slot and on ``kv_len`` masking, and a freed slot does not
+stay pristine — idle lanes riding the engine's fused decode step deposit one
+garbage k/v row (at position 0) per step until the slot is reused.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import api
+from .request import Request
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _splice(cache, req_cache, slot):
+    def leaf(c, r):
+        return jax.lax.dynamic_update_slice_in_dim(c, r.astype(c.dtype),
+                                                   slot, axis=1)
+    return jax.tree.map(leaf, cache, req_cache)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _zero_slot(cache, slot):
+    def leaf(c):
+        blank = jnp.zeros(c.shape[:1] + (1,) + c.shape[2:], c.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(c, blank, slot, axis=1)
+    return jax.tree.map(leaf, cache)
+
+
+class SlotBatchManager:
+    """Fixed-capacity slotted KV cache + per-slot request bookkeeping."""
+
+    def __init__(self, cfg: ArchConfig, n_slots: int, max_len: int):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = api.build(cfg).init_cache(cfg, n_slots, max_len)
+        self.kv_len = np.zeros((n_slots,), np.int32)
+        self.requests: List[Optional[Request]] = [None] * n_slots
+        self._free: List[int] = list(range(n_slots - 1, -1, -1))  # pop() -> 0 first
+
+    # ------------------------------------------------------------- occupancy
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def active(self) -> List[int]:
+        return [s for s, r in enumerate(self.requests) if r is not None]
+
+    # ------------------------------------------------------------- lifecycle
+    def alloc(self, req: Request) -> Optional[int]:
+        """Claim a free slot for ``req``; None when the batch is full."""
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self.requests[slot] = req
+        self.kv_len[slot] = 0
+        return slot
+
+    def insert(self, slot: int, req_cache: Dict[str, Any], kv_len: int) -> None:
+        """Splice a prefilled single-request cache (batch dim 1) into ``slot``."""
+        assert self.requests[slot] is not None, f"insert into free slot {slot}"
+        assert kv_len <= self.max_len, (kv_len, self.max_len)
+        self.cache = _splice(self.cache, req_cache, jnp.int32(slot))
+        self.kv_len[slot] = kv_len
+
+    def release(self, slot: int, *, compact: bool = True) -> Request:
+        """Detach the slot's request; by default compact (zero) its rows."""
+        req = self.requests[slot]
+        assert req is not None, f"release of free slot {slot}"
+        self.requests[slot] = None
+        self.kv_len[slot] = 0
+        self._free.append(slot)
+        if compact:
+            self.cache = _zero_slot(self.cache, jnp.int32(slot))
+        return req

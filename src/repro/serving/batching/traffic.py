@@ -1,0 +1,72 @@
+"""Synthetic traffic generation + replay for continuous-batching serving.
+
+Shared by ``benchmarks/serving_traffic.py`` and ``repro.launch.serve
+--traffic`` so arrival pacing, ragged-request sampling, and the
+submit-when-due driver loop live in exactly one place.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .engine import ContinuousEngine
+from .queue import QueueFullError
+from .request import Request
+
+Trace = List[Tuple[float, np.ndarray, int]]     # (arrival_s, prompt, max_new)
+
+
+def poisson_trace(n_requests: int, *, rate_per_s: float, prompt_max: int,
+                  gen_max: int, vocab: int, seed: int = 0,
+                  prompt_min: int = 4, gen_min: int = 2) -> Trace:
+    """Seeded Poisson arrival trace with ragged prompt/gen lengths.
+
+    The ragged lower bounds clamp to the caller's maxima, so degenerate
+    settings (``prompt_max < prompt_min``) produce fixed-size requests
+    instead of crashing.
+    """
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_per_s, n_requests)
+    arrivals = np.cumsum(gaps) - gaps[0]            # first request at t=0
+    pmin = min(prompt_min, prompt_max)
+    gmin = min(gen_min, gen_max)
+    trace: Trace = []
+    for i in range(n_requests):
+        P = int(rng.integers(pmin, prompt_max + 1))
+        G = int(rng.integers(gmin, gen_max + 1))
+        trace.append((float(arrivals[i]),
+                      rng.integers(0, vocab, (P,)).astype(np.int32), G))
+    return trace
+
+
+def replay(ce: ContinuousEngine, trace: Trace, *, shed_on_full: bool = False
+           ) -> Tuple[List[Optional[Request]], int, float]:
+    """Feed ``trace`` through the engine as arrival timestamps come due.
+
+    Returns ``(requests, shed, makespan_s)`` — ``requests`` in trace order
+    (None where an arrival was shed), ``shed`` the number of arrivals
+    bounced by queue backpressure (only possible with ``shed_on_full=True``;
+    otherwise ``QueueFullError`` propagates), and the wall-clock makespan.
+    """
+    t0 = time.monotonic()
+    pending = list(trace)
+    requests: List[Optional[Request]] = []
+    shed = 0
+    while pending or ce.has_work:
+        now = time.monotonic() - t0
+        while pending and pending[0][0] <= now:
+            _, prompt, max_new = pending[0]
+            try:
+                requests.append(ce.submit(prompt, max_new))
+            except QueueFullError:
+                if not shed_on_full:
+                    raise
+                shed += 1
+                requests.append(None)
+            pending.pop(0)
+        if not ce.step() and pending:
+            time.sleep(max(0.0, min(pending[0][0] - (time.monotonic() - t0),
+                                    1e-3)))
+    return requests, shed, time.monotonic() - t0

@@ -125,13 +125,22 @@ def sample(logits: jax.Array, key: jax.Array, temperature: float) -> jax.Array:
     return jax.random.categorical(key, logits[:, -1] / temperature).astype(jnp.int32)
 
 
-class Engine:
-    """Holds jitted prefill/decode closures for one architecture."""
+class ServeSteps:
+    """Jitted per-architecture step functions — the ONE set of compiled
+    closures every serving front end drives.
 
-    def __init__(self, cfg: ArchConfig, params: Dict[str, Any], sc: ServeConfig,
+    :class:`Engine` (lockstep single batch) and
+    :class:`repro.serving.batching.ContinuousEngine` (slot batch) are both
+    thin clients of this object: prefill, decode, and (for attention-cache
+    families) chunked prefill are jitted here once, so the two engines can
+    never drift numerically and a model warm in one is warm in the other.
+    ``decode_fn`` accepts ``pos`` as a scalar (lockstep) or a ``(B,)`` array
+    (per-slot ragged positions) — same callable, two traced shapes.
+    """
+
+    def __init__(self, cfg: ArchConfig, sc: ServeConfig,
                  *, shardings: Optional[dict] = None):
         self.cfg = cfg
-        self.params = params
         self.sc = sc
         self.mod = api.build(cfg)
 
@@ -148,8 +157,37 @@ class Engine:
             return self.mod.decode_step(cfg, params, token, cache, pos,
                                         unroll=sc.unroll)
 
-        self.prefill_fn = jax.jit(_prefill)
+        self.prefill_fn = jax.jit(_prefill, **kw)
         self.decode_fn = jax.jit(_decode, donate_argnums=(2,))
+        self.prefill_chunk_fn = None
+        if hasattr(self.mod, "prefill_chunk"):
+            def _chunk(params, tokens, cache, pos):
+                return self.mod.prefill_chunk(cfg, params, tokens, cache, pos,
+                                              unroll=sc.unroll)
+
+            self.prefill_chunk_fn = jax.jit(_chunk, donate_argnums=(2,))
+
+
+class Engine:
+    """Lockstep serving: one fixed-shape batch per ``generate`` call.
+
+    A thin single-request-batch client of :class:`ServeSteps` — for
+    concurrent, independently-arriving requests use
+    :class:`repro.serving.batching.ContinuousEngine`, which drives the same
+    step functions with a slot batch.
+    """
+
+    def __init__(self, cfg: ArchConfig, params: Dict[str, Any], sc: ServeConfig,
+                 *, shardings: Optional[dict] = None,
+                 steps: Optional[ServeSteps] = None):
+        self.cfg = cfg
+        self.params = params
+        self.sc = sc
+        self.steps = steps if steps is not None else \
+            ServeSteps(cfg, sc, shardings=shardings)
+        self.mod = self.steps.mod
+        self.prefill_fn = self.steps.prefill_fn      # backwards-compat aliases
+        self.decode_fn = self.steps.decode_fn
 
     def generate(self, prompt, steps: int, *, key: Optional[jax.Array] = None,
                  echo_metrics: bool = False):
@@ -166,7 +204,11 @@ class Engine:
         else:
             B, S = prompt.shape
         toks = []
-        tok = sample(logits, key, self.sc.temperature)[:, None]
+        # one fresh split per sampled token, including token 0 — sampling the
+        # first token from the parent key and then re-splitting that same key
+        # in the loop would correlate token 0 with token 1
+        key, sub = jax.random.split(key)
+        tok = sample(logits, sub, self.sc.temperature)[:, None]
         tok.block_until_ready()
         t_first_token = time.perf_counter() - t0
         toks.append(tok)
@@ -181,9 +223,16 @@ class Engine:
         out.block_until_ready()
         t_decode = time.perf_counter() - t1
         if echo_metrics:
+            # t_decode covers the steps-1 loop tokens only (token 0 rides on
+            # the prefill timing), so the two rates are reported separately
+            # instead of pretending one number covers both
+            decode_tps = B * max(steps - 1, 1) / max(t_decode, 1e-9)
+            e2e_tps = B * steps / max(time.perf_counter() - t0, 1e-9)
             return out, {"prefill_s": t_prefill, "decode_s": t_decode,
                          "ttft_s": t_first_token,
-                         "tok_per_s": B * max(steps - 1, 1) / max(t_decode, 1e-9)}
+                         "decode_tok_per_s": decode_tps,
+                         "e2e_tok_per_s": e2e_tps,
+                         "tok_per_s": decode_tps}   # legacy alias
         return out
 
 
