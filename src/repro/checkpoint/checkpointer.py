@@ -19,10 +19,13 @@ Properties required at 1000-node scale, all implemented here:
   ``restore`` reassembles and re-shards onto the *current* mesh, which may
   have a different shape than the mesh at save time (elastic rescale).
 * **EntroLLM-compressed** (beyond-paper, themed): with ``compress="entro"``
-  parameter leaves are stored as quantized symbols + global Huffman streams
+  parameter leaves are stored as quantized symbols + entropy-coded streams
   via :class:`repro.core.store.CompressedModel` — cutting checkpoint bytes by
   the paper's Table-I ratios and hence restore-broadcast traffic at rescale
-  events.  Optimizer moments stay exact (fp32/uint8 as configured).
+  events.  ``entro_bits`` sets one uniform bit-width; ``entro_spec`` accepts
+  a :class:`repro.core.spec.CompressionSpec` (or its rule string) for
+  per-leaf bits / codec policy (DESIGN.md §7).  Optimizer moments stay exact
+  (fp32/uint8 as configured).
 """
 from __future__ import annotations
 
@@ -45,12 +48,32 @@ def _flatten(tree: PyTree) -> Tuple[Dict[str, np.ndarray], Any]:
     return {f"leaf_{i:05d}": np.asarray(l) for i, l in enumerate(leaves)}, treedef
 
 
+def _path_str(path) -> str:
+    """A pytree key path as a '/'-joined glob-matchable string
+    (``opt/mu/layers/wq``)."""
+    parts = []
+    for p in path:
+        for attr in ("key", "name", "idx"):
+            if hasattr(p, attr):
+                parts.append(str(getattr(p, attr)))
+                break
+        else:
+            parts.append(str(p).strip("[].'\""))
+    return "/".join(parts)
+
+
 @dataclasses.dataclass
 class CheckpointConfig:
     root: str
     keep: int = 3                      # retained committed checkpoints
     compress: Optional[str] = None     # None | "entro"
     entro_bits: int = 8                # quantization bits for "entro"
+    # optional CompressionSpec (instance or rule string) driving the "entro"
+    # path; overrides entro_bits.  Leaf names are "leaf_%05d/<pytree path>"
+    # (e.g. "leaf_00042/opt/mu/layers/wq"), so patterns match the tree path:
+    # "*/mu/*:bits=8;*/params/*:bits=auto,codec=rans".  The container is
+    # self-describing, so restore needs no spec.
+    entro_spec: Optional[object] = None
 
 
 class Checkpointer:
@@ -64,13 +87,14 @@ class Checkpointer:
     def save(self, step: int, tree: PyTree, *, blocking: bool = True) -> None:
         """Snapshot (sync) + write (optionally async)."""
         self.wait()                                    # one in-flight save max
-        leaves, treedef = jax.tree.flatten(tree)
+        paths_and_leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
         # synchronous part: device -> host copy (the only training stall)
-        host_leaves = [np.asarray(l) for l in leaves]
+        host_leaves = [np.asarray(l) for _, l in paths_and_leaves]
+        leaf_paths = [_path_str(p) for p, _ in paths_and_leaves]
 
         def write():
             try:
-                self._write(step, host_leaves, treedef)
+                self._write(step, host_leaves, treedef, leaf_paths)
             except BaseException as e:               # surfaced on next wait()
                 self._last_error = e
 
@@ -95,7 +119,7 @@ class Checkpointer:
             e, self._last_error = self._last_error, None
             raise RuntimeError("async checkpoint write failed") from e
 
-    def _write(self, step: int, host_leaves, treedef) -> None:
+    def _write(self, step: int, host_leaves, treedef, leaf_paths) -> None:
         name = f"step_{step:09d}"
         tmp = os.path.join(self.cfg.root, name + ".tmp")
         final = os.path.join(self.cfg.root, name)
@@ -113,15 +137,36 @@ class Checkpointer:
             "time": time.time(),
         }
         if self.cfg.compress == "entro":
+            from repro.core.spec import CompressionSpec
             from repro.core.store import CompressedModel
-            named = {f"leaf_{i:05d}": l.astype(np.float32)
+            # leaf names carry the pytree key path ("leaf_00042/opt/mu/…") so
+            # entro_spec name-pattern rules can actually match; restore keys
+            # on the leaf_%05d prefix, so old positional-only names still load
+            named = {f"leaf_{i:05d}/{leaf_paths[i]}" if leaf_paths[i]
+                     else f"leaf_{i:05d}":
+                     l.astype(np.float32)
                      if str(l.dtype) == "bfloat16" else l
                      for i, l in enumerate(host_leaves)}
             # compress float leaves; ints/bools stored raw
             floaty = {k: v for k, v in named.items()
                       if v.dtype in (np.float32, np.float64)}
             raw = {k: v for k, v in named.items() if k not in floaty}
-            cm = CompressedModel.compress(floaty, bits=self.cfg.entro_bits)
+            spec = self.cfg.entro_spec
+            if isinstance(spec, str):
+                spec = CompressionSpec.parse(spec)
+            if spec is not None:
+                manifest["entro_spec"] = spec.describe()
+                cm = CompressedModel.compress(floaty, spec=spec)
+            else:
+                # default path keeps its historical coverage: shape/size only.
+                # (Leaf names now embed the pytree path, which the default
+                # predicate's sensitive-name keys would newly match — an
+                # entro_spec opts into name-based policy; the bare config
+                # must not change which leaves get quantized.)
+                cm = CompressedModel.compress(
+                    floaty, bits=self.cfg.entro_bits,
+                    should_quantize=lambda n, w: w.ndim >= 2
+                    and w.size >= 4096)
             cm.save(os.path.join(tmp, "shard_00000_entro"))
             np.savez(os.path.join(tmp, "shard_00000_raw.npz"), **raw)
         else:
@@ -175,9 +220,12 @@ class Checkpointer:
             named = {k: z[k] for k in z.files}
 
         import ml_dtypes
+        # leaves are matched by the leaf_%05d prefix: new checkpoints carry
+        # 'leaf_00042/<pytree path>' names, old ones the bare prefix
+        by_idx = {k.split("/", 1)[0]: k for k in named}
         leaves = []
         for i in range(manifest["n_leaves"]):
-            arr = named[f"leaf_{i:05d}"]
+            arr = named[by_idx[f"leaf_{i:05d}"]]
             dt = manifest["dtypes"][i]
             if dt == "bfloat16":
                 arr = (arr.view(ml_dtypes.bfloat16) if arr.dtype == np.uint16

@@ -1,18 +1,22 @@
-"""EntroLLM core: mixed quantization + global Huffman coding + parallel decoding."""
-from . import (bitstream, decode_backends, decode_jax, entropy, quant,
-               scheduler, segmentation, store)
+"""EntroLLM core: mixed quantization + pluggable entropy coding + parallel decoding."""
+from . import (bitstream, codecs, decode_backends, decode_jax, entropy, quant,
+               scheduler, segmentation, spec, store)
+from .codecs import CodeTable, EntropyCodec, codec_names, get_codec, register_codec
 from .decode_backends import (DecoderBackend, available_backends,
                               backend_names, get_backend, register_backend)
 from .entropy import HuffmanTable
 from .quant import Granularity, QuantizedTensor, Scheme, dequantize, quantize
 from .scheduler import DEFAULT_CHUNK_SYMBOLS, DecodeScheduler
-from .store import CompressedModel, CompressionStats
+from .spec import CompressionRule, CompressionSpec, TensorPolicy
+from .store import CodecGroupStats, CompressedModel, CompressionStats
 
 __all__ = [
-    "bitstream", "decode_backends", "decode_jax", "entropy", "quant",
-    "scheduler", "segmentation", "store",
+    "bitstream", "codecs", "decode_backends", "decode_jax", "entropy",
+    "quant", "scheduler", "segmentation", "spec", "store",
     "HuffmanTable", "Granularity", "QuantizedTensor", "Scheme",
     "dequantize", "quantize", "CompressedModel", "CompressionStats",
+    "CodecGroupStats", "CompressionRule", "CompressionSpec", "TensorPolicy",
+    "CodeTable", "EntropyCodec", "codec_names", "get_codec", "register_codec",
     "DecoderBackend", "DecodeScheduler", "DEFAULT_CHUNK_SYMBOLS",
     "available_backends", "backend_names", "get_backend", "register_backend",
 ]

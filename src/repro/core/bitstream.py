@@ -1,17 +1,27 @@
-"""Bit-level encode / decode of Huffman symbol streams.
+"""Bit-level encode / decode of entropy-coded symbol streams.
 
 Layout: MSB-first bit order inside a byte stream (matches ``np.packbits``), each
 segment's stream byte-aligned and padded with >= 4 guard bytes so a decoder can always
 load a 32-bit window.
 
 Decoding is **multi-stream**: N independent segments advance in lock-step, one symbol
-per iteration, via a single gather into the canonical-code LUT.  This is the TPU-native
+per iteration, via a single gather into the code tables.  This is the TPU-native
 re-interpretation of the paper's thread-parallel decoding (§III-C): the paper gives each
 CPU thread one segment; we give each *vector lane* one segment (numpy / jnp / Pallas all
 share this structure).  Because segments hold a fixed number of SYMBOLS (not bits), every
 lane finishes in exactly the same number of iterations — the LUT decoder is perfectly
 load-balanced by construction, which subsumes the paper's shuffling heuristic (that
 heuristic targets bit-serial decoders whose per-segment time varies with encoded bits).
+
+Two lock-step loop families live here (DESIGN.md §7):
+
+* ``decode_streams`` — the **prefix** family (canonical Huffman and the raw
+  bit-packed baseline): peek ``max_len`` bits, gather (symbol, length),
+  advance by the length.
+* ``decode_streams_tans`` — the **tans** family (tANS / rANS): a carried
+  per-lane state indexes (symbol, nbits, base) tables; ``nbits`` fresh bits
+  are read per symbol and folded into the next state.  The 16-bit stream
+  header holds the initial state.
 """
 from __future__ import annotations
 
@@ -32,26 +42,39 @@ def pow2_bucket(n: int, floor: int) -> int:
     return b
 
 
+def pack_bit_chunks(vals: np.ndarray, nbits: np.ndarray) -> Tuple[np.ndarray, int]:
+    """Concatenate variable-width bit chunks MSB-first into a guard-padded stream.
+
+    ``vals[i]`` contributes its low ``nbits[i]`` bits (written MSB-first).
+    Returns (packed uint8 stream with guard padding, total bits).  This is the
+    one bit-packer every encoder shares: Huffman/raw code words and tANS
+    renormalization chunks differ only in how (vals, nbits) are produced.
+    """
+    vals = np.asarray(vals, dtype=np.uint64).reshape(-1)
+    nbits = np.asarray(nbits, dtype=np.int64).reshape(-1)
+    if vals.size == 0 or int(nbits.sum()) == 0:
+        return np.zeros(GUARD_BYTES, dtype=np.uint8), 0
+    offs = np.concatenate([[0], np.cumsum(nbits)])
+    total = int(offs[-1])
+    # bit i belongs to chunk reps[i], at position bitpos[i] within it (MSB first)
+    reps = np.repeat(np.arange(vals.size), nbits)
+    bitpos = np.arange(total, dtype=np.int64) - offs[reps]
+    bits = (vals[reps] >> (nbits[reps] - 1 - bitpos).astype(np.uint64)) & 1
+    packed = np.packbits(bits.astype(np.uint8))
+    packed = np.concatenate([packed, np.zeros(GUARD_BYTES, dtype=np.uint8)])
+    return packed, total
+
+
 def encode_symbols(symbols: np.ndarray, codes: np.ndarray, lengths: np.ndarray
                    ) -> Tuple[np.ndarray, int]:
-    """Vectorized Huffman encode of a flat uint8 symbol array.
+    """Vectorized prefix-code (Huffman / raw) encode of a flat uint8 symbol array.
 
     Returns (packed uint8 stream with guard padding, total bits).
     """
     symbols = symbols.reshape(-1)
     if symbols.size == 0:
         return np.zeros(GUARD_BYTES, dtype=np.uint8), 0
-    lens = lengths[symbols].astype(np.int64)
-    offs = np.concatenate([[0], np.cumsum(lens)])
-    total = int(offs[-1])
-    # bit i belongs to symbol reps[i], at position bitpos[i] within its code (MSB first)
-    reps = np.repeat(np.arange(symbols.size), lens)
-    bitpos = np.arange(total, dtype=np.int64) - offs[reps]
-    syms_r = symbols[reps]
-    bits = (codes[syms_r].astype(np.uint32) >> (lens[reps] - 1 - bitpos).astype(np.uint32)) & 1
-    packed = np.packbits(bits.astype(np.uint8))
-    packed = np.concatenate([packed, np.zeros(GUARD_BYTES, dtype=np.uint8)])
-    return packed, total
+    return pack_bit_chunks(codes[symbols], lengths[symbols])
 
 
 def decode_serial(stream: np.ndarray, count: int, lut_sym: np.ndarray, lut_len: np.ndarray,
@@ -115,4 +138,72 @@ def decode_streams(mat: np.ndarray, counts: np.ndarray, lut_sym: np.ndarray,
         sym = lut_sym[peek]
         out[active, k] = sym[active]
         bitpos = np.where(active, bitpos + lut_len[peek], bitpos)
+    return out
+
+
+TANS_STATE_HEADER_BITS = 16   # stream-leading initial decoder state (MSB-first)
+
+
+def decode_serial_tans(stream: np.ndarray, count: int, tab_sym: np.ndarray,
+                       tab_bits: np.ndarray, tab_base: np.ndarray,
+                       table_log: int) -> np.ndarray:
+    """Bit-serial tANS reference decoder (oracle for the vectorized paths).
+
+    ``tab_*`` are the (2^table_log,) state-indexed decode tables built by
+    :mod:`repro.core.codecs.rans`; the stream's first 16 bits hold the
+    initial state index.
+    """
+    out = np.zeros(count, dtype=np.int32)
+    s = stream.astype(np.uint32)
+    st = (int(s[0]) << 8) | int(s[1])          # 16-bit header
+    bitpos = TANS_STATE_HEADER_BITS
+    for k in range(count):
+        out[k] = tab_sym[st]
+        nb = int(tab_bits[st])
+        byte = bitpos >> 3
+        window = (int(s[byte]) << 24) | (int(s[byte + 1]) << 16) \
+            | (int(s[byte + 2]) << 8) | int(s[byte + 3])
+        peek = (window >> (32 - table_log - (bitpos & 7))) & ((1 << table_log) - 1)
+        st = int(tab_base[st]) + (peek >> (table_log - nb))
+        bitpos += nb
+    return out
+
+
+def decode_streams_tans(mat: np.ndarray, counts: np.ndarray, tab_sym: np.ndarray,
+                        tab_bits: np.ndarray, tab_base: np.ndarray,
+                        table_log: int) -> np.ndarray:
+    """Lock-step multi-stream tANS decode (numpy host path).
+
+    Same shape contract as :func:`decode_streams` — mat: (S, B) uint8
+    guard-padded streams, counts: (S,) symbols per segment — but the gather
+    target is the state-indexed (symbol, nbits, base) tables and each lane
+    carries its ANS state: ``sym = tab_sym[state]``, read ``tab_bits[state]``
+    fresh bits ``b``, ``state' = tab_base[state] + b``.  Lanes with zero
+    counts (bucket padding) idle on state 0 harmlessly.
+    """
+    S = mat.shape[0]
+    d = np.concatenate([mat, np.zeros((S, GUARD_BYTES), np.uint8)], axis=1).astype(np.uint32)
+    max_n = int(counts.max(initial=0))
+    out = np.zeros((S, max_n), dtype=np.int32)
+    rows = np.arange(S)
+    st = ((d[:, 0].astype(np.int64) << 8) | d[:, 1]).astype(np.int64)
+    bitpos = np.full(S, TANS_STATE_HEADER_BITS, dtype=np.int64)
+    mask = (1 << table_log) - 1
+    for k in range(max_n):
+        active = k < counts
+        sym = tab_sym[st]
+        nb = tab_bits[st]
+        byte = bitpos >> 3
+        window = (
+            (d[rows, byte] << 24)
+            | (d[rows, byte + 1] << 16)
+            | (d[rows, byte + 2] << 8)
+            | d[rows, byte + 3]
+        )
+        shift = (32 - table_log - (bitpos & 7)).astype(np.uint32)
+        peek = (window >> shift) & mask
+        fresh = peek >> (table_log - nb).astype(np.uint32)
+        out[active, k] = sym[active]
+        st = np.where(active, tab_base[st] + fresh, st)
+        bitpos = np.where(active, bitpos + nb, bitpos)
     return out

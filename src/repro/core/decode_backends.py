@@ -1,22 +1,33 @@
-"""Pluggable decoder backends for the multi-stream Huffman decode.
+"""Pluggable decoder backends for the multi-stream entropy decode.
 
 One decode *call* takes a packed stream matrix (S segments x B bytes, guard
-padded), per-segment symbol counts, and the canonical-code LUT, and returns
-the (S, max_count) int32 symbol matrix — the contract shared by
-``core.bitstream.decode_streams`` (numpy), ``core.decode_jax.decode_streams_jax``
-(jit), and ``kernels.huffman_decode.decode_streams_pallas`` (TPU kernel).
+padded), per-segment symbol counts, and a codec's decode tables, and returns
+the (S, max_count) int32 symbol matrix.  Two **kernel families** cover every
+registered codec (see :mod:`repro.core.codecs`, DESIGN.md §7):
 
-This module makes that choice a first-class, *named* decision instead of an
-ad-hoc per-call-site import:
+* ``"prefix"`` — canonical-code LUT loop (``huffman`` and the ``raw``
+  bit-packed baseline): ``core.bitstream.decode_streams`` (numpy),
+  ``core.decode_jax.decode_streams_jax`` (jit),
+  ``kernels.huffman_decode.decode_streams_pallas`` (TPU kernel).
+* ``"tans"`` — carried-state tANS loop (``rans``):
+  ``core.bitstream.decode_streams_tans``,
+  ``core.decode_jax.decode_streams_tans_jax``,
+  ``kernels.ans_decode.decode_streams_tans_pallas``.
+
+This module makes the implementation choice a first-class, *named* decision
+instead of an ad-hoc per-call-site import:
 
 * ``register_backend`` / ``get_backend`` — a string-keyed registry
   (``"numpy"``, ``"jax"``, ``"pallas"``, ``"pallas-interpret"``).
 * Capability probing — each backend reports :meth:`DecoderBackend.available`;
-  the ``pallas`` backend probes whether the kernel actually *compiles* on this
-  host (``interpret=False``).  Interpret mode is never auto-picked: it exists
-  only as the explicitly named ``"pallas-interpret"`` fallback.
+  the ``pallas`` backend probes whether the kernels actually *compile* on
+  this host (``interpret=False``).  Interpret mode is never auto-picked: it
+  exists only as the explicitly named ``"pallas-interpret"`` fallback.
 * ``auto_pick`` — capability-based default: compiled Pallas on TPU, the jit
   decoder when an accelerator is attached, the numpy host path otherwise.
+* :meth:`DecoderBackend.decode_table` — codec-aware entry point: a
+  :class:`repro.core.codecs.base.CodeTable` names its kernel family and
+  supplies the gather arrays; the backend routes to the right loop.
 
 The :class:`repro.core.scheduler.DecodeScheduler` drives whichever backend it
 is handed; see docs/ARCHITECTURE.md §"Streaming decode" for the data flow.
@@ -24,31 +35,39 @@ is handed; see docs/ARCHITECTURE.md §"Streaming decode" for the data flow.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Mapping, Optional
 
 import numpy as np
 
-from .bitstream import decode_streams
+from .bitstream import decode_streams, decode_streams_tans
 
 
 @dataclasses.dataclass(frozen=True)
 class DecoderBackend:
     """A named decode implementation + its capability probes.
 
-    ``fn(mat, counts, lut_sym, lut_len, max_len, max_count) -> (S, max_count)
-    int32 ndarray``.  ``probe`` answers "can this backend run here at all?"
-    (gates by-name requests); ``auto_probe`` answers "should auto-pick use it
-    here?" — e.g. the jit decoder runs fine on CPU but is only *preferred*
-    when an accelerator is attached, and the interpret fallback is runnable
+    ``fns`` maps kernel family -> callable:
+      ``fns["prefix"](mat, counts, lut_sym, lut_len, max_len, max_count)``
+      ``fns["tans"](mat, counts, tab_sym, tab_bits, tab_base, table_log,
+      max_count)`` — both return an (S, >=max_count) int32 ndarray.
+    ``probe`` answers "can this backend run here at all?" (gates by-name
+    requests); ``auto_probe`` answers "should auto-pick use it here?" — e.g.
+    the jit decoder runs fine on CPU but is only *preferred* when an
+    accelerator is attached, and the interpret fallback is runnable
     everywhere yet never auto-picked.  ``priority`` orders auto-pick
     (higher wins).
     """
 
     name: str
-    fn: Callable[..., np.ndarray]
+    fns: Mapping[str, Callable[..., np.ndarray]]
     probe: Callable[[], bool]
     priority: int = 0
     auto_probe: Optional[Callable[[], bool]] = None
+
+    @property
+    def fn(self) -> Callable[..., np.ndarray]:
+        """Legacy alias: the prefix-family decode callable."""
+        return self.fns["prefix"]
 
     def available(self) -> bool:
         try:
@@ -62,12 +81,40 @@ class DecoderBackend:
         except Exception:
             return False
 
+    def kernel_families(self) -> List[str]:
+        return sorted(self.fns)
+
     def decode(self, mat: np.ndarray, counts: np.ndarray, lut_sym: np.ndarray,
                lut_len: np.ndarray, *, max_len: int,
                max_count: Optional[int] = None) -> np.ndarray:
+        """Prefix-family decode (the pre-codec-registry contract, kept for
+        direct callers); codec-aware callers use :meth:`decode_table`."""
         counts = np.asarray(counts, dtype=np.int64)
         mc = int(counts.max(initial=0)) if max_count is None else int(max_count)
-        out = self.fn(mat, counts, lut_sym, lut_len, max_len, mc)
+        out = self.fns["prefix"](mat, counts, lut_sym, lut_len, max_len, mc)
+        return np.asarray(out)[:, :mc] if mc else np.asarray(out)
+
+    def decode_table(self, table, mat: np.ndarray, counts: np.ndarray, *,
+                     max_count: Optional[int] = None) -> np.ndarray:
+        """Decode streams encoded under ``table`` (a codecs.CodeTable): the
+        table names its kernel family and supplies the gather arrays."""
+        try:
+            fn = self.fns[table.kernel]
+        except KeyError:
+            raise RuntimeError(
+                f"decoder backend {self.name!r} has no {table.kernel!r} "
+                f"kernel (families: {self.kernel_families()})") from None
+        counts = np.asarray(counts, dtype=np.int64)
+        mc = int(counts.max(initial=0)) if max_count is None else int(max_count)
+        a = table.decode_arrays()
+        if table.kernel == "prefix":
+            out = fn(mat, counts, a["lut_sym"], a["lut_len"],
+                     table.peek_bits, mc)
+        elif table.kernel == "tans":
+            out = fn(mat, counts, a["tab_sym"], a["tab_bits"], a["tab_base"],
+                     table.table_log, mc)
+        else:
+            raise RuntimeError(f"unknown kernel family {table.kernel!r}")
         return np.asarray(out)[:, :mc] if mc else np.asarray(out)
 
 
@@ -120,8 +167,16 @@ def _numpy_decode(mat, counts, lut_sym, lut_len, max_len, max_count):
     return decode_streams(mat, counts, lut_sym, lut_len, max_len)
 
 
+def _numpy_decode_tans(mat, counts, tab_sym, tab_bits, tab_base, table_log,
+                       max_count):
+    return decode_streams_tans(mat, counts, tab_sym, tab_bits, tab_base,
+                               table_log)
+
+
 register_backend(DecoderBackend(
-    name="numpy", fn=_numpy_decode, probe=lambda: True, priority=0))
+    name="numpy",
+    fns={"prefix": _numpy_decode, "tans": _numpy_decode_tans},
+    probe=lambda: True, priority=0))
 
 
 # -------------------------------------------------------------------- jax
@@ -145,13 +200,30 @@ def _jax_decode(mat, counts, lut_sym, lut_len, max_len, max_count):
     return np.asarray(out)
 
 
+def _jax_decode_tans(mat, counts, tab_sym, tab_bits, tab_base, table_log,
+                     max_count):
+    import jax.numpy as jnp
+    from .decode_jax import bucket_streams, decode_streams_tans_jax
+    mat, counts, mc = bucket_streams(mat, counts, max_count)
+    out = decode_streams_tans_jax(
+        jnp.asarray(mat), jnp.asarray(counts, jnp.int32),
+        jnp.asarray(tab_sym), jnp.asarray(tab_bits), jnp.asarray(tab_base),
+        table_log=table_log, max_count=mc)
+    return np.asarray(out)
+
+
 register_backend(DecoderBackend(
-    name="jax", fn=_jax_decode, probe=_jax_ok, priority=10,
-    auto_probe=_jax_accelerated))
+    name="jax",
+    fns={"prefix": _jax_decode, "tans": _jax_decode_tans},
+    probe=_jax_ok, priority=10, auto_probe=_jax_accelerated))
 
 
 # ----------------------------------------------------------------- pallas
 def _pallas_supported() -> bool:
+    # availability keyed on the prefix kernel alone (the pre-registry
+    # contract): a host that compiles huffman but not the newer tANS kernel
+    # keeps its working 'pallas' prefix decode; the tans fn below probes its
+    # own kernel and fails loudly with a named fallback if it cannot compile
     from repro.kernels.huffman_decode import pallas_decode_supported
     return pallas_decode_supported()
 
@@ -170,12 +242,45 @@ def _pallas_decode(interpret: bool):
     return fn
 
 
+def _pallas_decode_tans(interpret: bool):
+    def fn(mat, counts, tab_sym, tab_bits, tab_base, table_log, max_count):
+        import warnings
+
+        import jax.numpy as jnp
+        from repro.kernels.ans_decode import (decode_streams_tans_pallas,
+                                              tans_decode_supported)
+        from .decode_jax import bucket_streams
+        if not interpret and not tans_decode_supported():
+            # availability is keyed on the prefix kernel, so auto may route a
+            # rans container here on a host where only the tANS kernel fails
+            # to compile: honor auto's silent-fallback contract (and spare a
+            # by-name user a crash) by delegating to the jit tans loop
+            warnings.warn(
+                "the pallas backend's tANS kernel does not compile on this "
+                "host; falling back to the jit tans decoder for this call",
+                stacklevel=2)
+            return _jax_decode_tans(mat, counts, tab_sym, tab_bits, tab_base,
+                                    table_log, max_count)
+        mat, counts, mc = bucket_streams(mat, counts, max_count)
+        out = decode_streams_tans_pallas(
+            jnp.asarray(mat), jnp.asarray(counts, jnp.int32),
+            jnp.asarray(tab_sym), jnp.asarray(tab_bits),
+            jnp.asarray(tab_base),
+            table_log=table_log, max_count=mc, interpret=interpret)
+        return np.asarray(out)
+    return fn
+
+
 register_backend(DecoderBackend(
-    name="pallas", fn=_pallas_decode(interpret=False),
+    name="pallas",
+    fns={"prefix": _pallas_decode(interpret=False),
+         "tans": _pallas_decode_tans(interpret=False)},
     probe=_pallas_supported, priority=20))
 
 # Interpret mode re-runs the kernel's Python trace per symbol step — orders of
 # magnitude slower than the numpy path.  Explicit opt-in only (never auto).
 register_backend(DecoderBackend(
-    name="pallas-interpret", fn=_pallas_decode(interpret=True),
+    name="pallas-interpret",
+    fns={"prefix": _pallas_decode(interpret=True),
+         "tans": _pallas_decode_tans(interpret=True)},
     probe=_jax_ok, priority=-10, auto_probe=lambda: False))

@@ -1,10 +1,12 @@
-"""Jittable multi-stream Huffman decoder (device path).
+"""Jittable multi-stream decoders (device path): prefix + tANS loop families.
 
-Identical structure to :func:`repro.core.bitstream.decode_streams` but expressed with
-``lax.fori_loop`` + vectorized gathers so it can run under ``jit`` / inside
+Identical structure to :func:`repro.core.bitstream.decode_streams` /
+:func:`repro.core.bitstream.decode_streams_tans` but expressed with
+``lax.fori_loop`` + vectorized gathers so they can run under ``jit`` / inside
 ``shard_map`` (each device decodes only its local segments — the pod-scale version of
-the paper's thread-parallel decode).  The Pallas kernel in
-``repro.kernels.huffman_decode`` implements the same loop with the LUT pinned in VMEM.
+the paper's thread-parallel decode).  The Pallas kernels in
+``repro.kernels.huffman_decode`` / ``repro.kernels.ans_decode`` implement the
+same loops with the tables pinned in VMEM.
 
 :func:`bucket_streams` is the host-side companion for *chunked* callers (the
 streaming :class:`~repro.core.scheduler.DecodeScheduler`): ``decode_streams_jax``
@@ -79,4 +81,45 @@ def decode_streams_jax(mat: jnp.ndarray, counts: jnp.ndarray, lut_sym: jnp.ndarr
     bitpos0 = jnp.zeros((S,), jnp.int32)
     out0 = jnp.zeros((S, max_count), jnp.int32)
     _, out = jax.lax.fori_loop(0, max_count, step, (bitpos0, out0))
+    return out
+
+
+@partial(jax.jit, static_argnames=("table_log", "max_count"))
+def decode_streams_tans_jax(mat: jnp.ndarray, counts: jnp.ndarray,
+                            tab_sym: jnp.ndarray, tab_bits: jnp.ndarray,
+                            tab_base: jnp.ndarray, *, table_log: int,
+                            max_count: int) -> jnp.ndarray:
+    """Lock-step tANS decode under jit — the carried-state twin of
+    :func:`decode_streams_jax`.  mat rows start with the 16-bit initial
+    state header (see ``bitstream.TANS_STATE_HEADER_BITS``)."""
+    from repro.core.bitstream import TANS_STATE_HEADER_BITS
+    S = mat.shape[0]
+    d = mat.astype(jnp.uint32)
+    rows = jnp.arange(S)
+    mask = jnp.uint32((1 << table_log) - 1)
+
+    def step(k, carry):
+        st, bitpos, out = carry
+        sym = tab_sym[st]
+        nb = tab_bits[st]
+        byte = (bitpos >> 3).astype(jnp.int32)
+        w = (
+            (d[rows, byte] << 24)
+            | (d[rows, byte + 1] << 16)
+            | (d[rows, byte + 2] << 8)
+            | d[rows, byte + 3]
+        )
+        shift = (32 - table_log - (bitpos & 7)).astype(jnp.uint32)
+        peek = (w >> shift) & mask
+        fresh = (peek >> (table_log - nb).astype(jnp.uint32)).astype(jnp.int32)
+        active = k < counts
+        out = out.at[:, k].set(jnp.where(active, sym, 0))
+        st = jnp.where(active, tab_base[st] + fresh, st)
+        bitpos = jnp.where(active, bitpos + nb, bitpos)
+        return st, bitpos, out
+
+    st0 = ((d[:, 0] << 8) | d[:, 1]).astype(jnp.int32)
+    bitpos0 = jnp.full((S,), TANS_STATE_HEADER_BITS, jnp.int32)
+    out0 = jnp.zeros((S, max_count), jnp.int32)
+    _, _, out = jax.lax.fori_loop(0, max_count, step, (st0, bitpos0, out0))
     return out

@@ -195,6 +195,12 @@ class HuffmanTable:
     def encoded_bits(self, q: np.ndarray) -> int:
         return int(self.lengths[q.reshape(-1)].sum())
 
+    def encode(self, symbols: np.ndarray):
+        """Encode flat symbols -> (guard-padded stream, payload bits) — the
+        shared per-segment encode contract of :mod:`repro.core.codecs`."""
+        from .bitstream import encode_symbols
+        return encode_symbols(symbols, self.codes, self.lengths)
+
     # serialization --------------------------------------------------------------
     def to_arrays(self) -> dict:
         return {"freqs": self.freqs, "max_len": np.int64(self.max_len)}

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import warnings
 from typing import Optional, Tuple
 
 import jax.numpy as jnp
@@ -69,10 +70,47 @@ def _minmax(w: np.ndarray, granularity: Granularity, group: int) -> Tuple[np.nda
         red = tuple(range(1, w.ndim))
         return w.min(axis=red, keepdims=True), w.max(axis=red, keepdims=True)
     if granularity is Granularity.PER_GROUP:
-        assert w.shape[-1] % group == 0, (w.shape, group)
+        if w.shape[-1] % group != 0:
+            raise ValueError(
+                f"PER_GROUP quantization needs group ({group}) to divide the "
+                f"last dim of shape {w.shape}; resolve_granularity() picks "
+                f"the per-channel fallback for ragged tails")
         wg = w.reshape(w.shape[:-1] + (w.shape[-1] // group, group))
         return wg.min(axis=-1, keepdims=True), wg.max(axis=-1, keepdims=True)
     raise ValueError(granularity)
+
+
+def resolve_granularity(w: np.ndarray, granularity: Granularity,
+                        group: int) -> Granularity:
+    """Validate a (granularity, group) request against a tensor's shape.
+
+    PER_GROUP with a group that does not divide the last dim used to crash in
+    an opaque reshape deep inside ``_minmax``; instead, warn and fall back to
+    the nearest coarser granularity (per-channel for matrices, per-tensor for
+    vectors) so ragged tails still quantize.  A non-positive ``group`` is a
+    plain misconfiguration and raises.  PER_CHANNEL on a 1-D tensor would
+    degenerate to one (scale, zero) pair per ELEMENT (8 metadata bytes per
+    parameter — larger than fp32): warn and fall back to per-tensor.
+    """
+    if granularity is Granularity.PER_CHANNEL and w.ndim < 2:
+        warnings.warn(
+            f"PER_CHANNEL on a 1-D tensor of shape {tuple(w.shape)} would "
+            f"store per-element scales; falling back to per_tensor",
+            stacklevel=3)
+        return Granularity.PER_TENSOR
+    if granularity is not Granularity.PER_GROUP:
+        return granularity
+    if group <= 0:
+        raise ValueError(f"PER_GROUP quantization needs group >= 1, got {group}")
+    if w.ndim >= 1 and w.shape[-1] % group == 0:
+        return granularity
+    fallback = (Granularity.PER_CHANNEL if w.ndim >= 2
+                else Granularity.PER_TENSOR)
+    warnings.warn(
+        f"PER_GROUP group={group} does not divide the last dim of shape "
+        f"{tuple(w.shape)}; falling back to {fallback.value} for this tensor",
+        stacklevel=3)
+    return fallback
 
 
 def choose_scheme(w: np.ndarray) -> Scheme:
@@ -99,6 +137,7 @@ def quantize(
     w = np.asarray(w, dtype=np.float32)
     if scheme is None:
         scheme = choose_scheme(w)
+    granularity = resolve_granularity(w, granularity, group)
     qmax = float((1 << bits) - 1)
     lo, hi = _minmax(w, granularity, group)
 

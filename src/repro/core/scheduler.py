@@ -123,37 +123,56 @@ class DecodeScheduler:
 
     # ------------------------------------------------------------------ plan
     def _ordered_names(self) -> List[str]:
+        """Container order, with ``first=`` prefixes pulled ahead and names
+        grouped by code table.  Table-major order matters for mixed v2
+        containers: chunks cannot straddle tables, so an order that
+        alternates tables tensor-by-tensor would fragment into tiny
+        lane-starved kernel calls (measured ~6x slower — see decode_all);
+        grouping yields one contiguous run (and, unbudgeted, one lock-step
+        call) per table."""
         names = list(self.model.tensors)
-        if not self.first:
-            return names
         rank = {n: i for i, n in enumerate(names)}
         early = lambda n: not any(n.startswith(p) for p in self.first)
-        return sorted(names, key=lambda n: (early(n), rank[n]))
+        table_rank = {t: i for i, t in enumerate(sorted(self.model.tables))}
+        return sorted(names, key=lambda n: (
+            early(n), table_rank[self.model.table_id_for(n)], rank[n]))
 
     def plan(self) -> List[DecodeChunk]:
-        """Group the container's segments into budgeted chunks."""
+        """Group the container's segments into budgeted chunks.
+
+        A chunk decodes through ONE code table (one lock-step kernel call),
+        so chunk boundaries fall on code-table changes as well as on the
+        symbol budget and the group key — a mixed 4/8-bit or mixed-codec
+        container (format v2) never packs two tables' segments together.
+        """
         budget = self.chunk_symbols
         chunks: List[DecodeChunk] = []
         cur: List[_Seg] = []
         cur_symbols = 0
         cur_group: Optional[str] = None
+        cur_table: Optional[str] = None
         for name in self._ordered_names():
             meta = self.model.tensors[name]
             group = self.group_key(name)
+            table_id = self.model.table_id_for(name)
             n_seg = len(meta.seg_offsets)
             for j, (o, nb, c) in enumerate(zip(meta.seg_offsets,
                                                meta.seg_nbytes,
                                                meta.seg_counts)):
                 seg = _Seg(tensor=name, index=j, is_last=(j == n_seg - 1),
                            offset=int(o), nbytes=int(nb), count=int(c))
-                boundary = budget is not None and cur and (
-                    cur_symbols + seg.count > budget or group != cur_group)
+                boundary = cur and (
+                    table_id != cur_table
+                    or (budget is not None and (
+                        cur_symbols + seg.count > budget
+                        or group != cur_group)))
                 if boundary:
                     chunks.append(DecodeChunk(cur))
                     cur, cur_symbols = [], 0
                 cur.append(seg)
                 cur_symbols += seg.count
                 cur_group = group
+                cur_table = table_id
         if cur:
             chunks.append(DecodeChunk(cur))
         return chunks
@@ -162,15 +181,16 @@ class DecodeScheduler:
     def _decode_chunk(self, chunk: DecodeChunk) -> List[np.ndarray]:
         """Decode one chunk; returns per-segment symbol arrays (trimmed)."""
         payload = self.model.payload
-        table = self.model.table
+        # plan() guarantees one code table per chunk; its kernel family
+        # (prefix / tans) picks the backend's matching lock-step loop
+        table = self.model.table_for(chunk.segs[0].tensor)
         streams = [payload[s.offset: s.offset + s.nbytes] for s in chunk.segs]
         counts = np.array([s.count for s in chunk.segs], dtype=np.int64)
         # pack straight onto the shape bucket the jit/Pallas backends would
         # otherwise re-pad to, so chunked decodes reuse one compile per bucket
         width = max(GUARD_BYTES, max(s.nbytes for s in chunk.segs))
         mat, _ = pack_streams(streams, min_width=pow2_bucket(width, 64))
-        dec = self.backend.decode(mat, counts, table.lut_sym, table.lut_len,
-                                  max_len=table.max_len)
+        dec = self.backend.decode_table(table, mat, counts)
         return [dec[i, : s.count] for i, s in enumerate(chunk.segs)]
 
     def iter_decode(self) -> Iterator[Tuple[str, np.ndarray]]:

@@ -19,9 +19,6 @@ from typing import List, Sequence, Tuple
 
 import numpy as np
 
-from .bitstream import encode_symbols, pack_streams
-from .entropy import HuffmanTable
-
 DEFAULT_SEGMENT_SYMBOLS = 64 * 1024
 
 
@@ -41,17 +38,23 @@ class SegmentedTensor:
 def segment_and_encode(
     name: str,
     q: np.ndarray,
-    table: HuffmanTable,
+    table,
     segment_symbols: int = DEFAULT_SEGMENT_SYMBOLS,
 ) -> Tuple[SegmentedTensor, List[np.ndarray]]:
-    """Encode one quantized tensor into independent byte-aligned segment streams."""
+    """Encode one quantized tensor into independent byte-aligned segment streams.
+
+    ``table`` is anything with the shared ``encode(flat_symbols) ->
+    (guard-padded stream, payload bits)`` contract — a
+    :class:`repro.core.codecs.base.CodeTable` or a bare
+    :class:`repro.core.entropy.HuffmanTable`.
+    """
     flat = q.reshape(-1)
     n = flat.size
     streams: List[np.ndarray] = []
     counts, bits = [], []
     for start in range(0, max(n, 1), segment_symbols):
         chunk = flat[start: start + segment_symbols]
-        stream, nbits = encode_symbols(chunk, table.codes, table.lengths)
+        stream, nbits = table.encode(chunk)
         streams.append(stream)
         counts.append(len(chunk))
         bits.append(nbits)

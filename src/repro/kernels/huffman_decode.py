@@ -112,7 +112,9 @@ def decode_streams_pallas(mat: jax.Array, counts: jax.Array, lut_sym: jax.Array,
     if Sp != S:
         mat = jnp.pad(mat, ((0, Sp - S), (0, 0)))
         counts = jnp.pad(counts, (0, Sp - S))
-    lut_size = 1 << max_len
+    # LUT block shape follows the array (the raw codec passes a 2^bits-entry
+    # identity LUT through this same kernel; peek masking uses max_len)
+    lut_size = lut_sym.shape[0]
 
     kernel = functools.partial(_decode_kernel, max_len=max_len,
                                max_count=max_count)

@@ -1,9 +1,11 @@
 """Serving launcher: EntroLLM end-to-end on this host.
 
-Pipeline: init weights -> mixed-quantize + Huffman-encode into the
-compressed container -> *streaming* parallel decode (chunked, double-buffered
-prefetch through a named decoder backend) -> serve with quantized (QT)
-weights resident, dequant fused into matmuls.
+Pipeline: init weights -> mixed-quantize + entropy-encode into the
+compressed container (``--codec`` picks the coder; ``--compress-spec`` sets
+per-tensor bits / codec / fp32 rules — see :mod:`repro.core.spec`) ->
+*streaming* parallel decode (chunked, double-buffered prefetch through a
+named decoder backend) -> serve with quantized (QT) weights resident,
+dequant fused into matmuls.
 
 Two serving modes:
 
@@ -32,7 +34,16 @@ import time
 def main(argv=None):
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--arch", required=True)
-    p.add_argument("--bits", type=int, default=8, choices=[4, 8])
+    p.add_argument("--bits", type=int, default=8,
+                   help="uniform quantization bit-width, 1..8 (subsumed by "
+                        "--compress-spec)")
+    p.add_argument("--codec", default="huffman",
+                   help="entropy codec for the whole model (huffman / rans / "
+                        "raw); subsumed by --compress-spec")
+    p.add_argument("--compress-spec", default=None, metavar="SPEC",
+                   help="per-tensor compression rules, e.g. "
+                        "'*norm*:fp32;layers/*:bits=4,codec=rans;*:bits=8' "
+                        "(see repro.core.spec); overrides --bits/--codec")
     p.add_argument("--batch", type=int, default=4)
     p.add_argument("--prompt-len", type=int, default=32)
     p.add_argument("--gen", type=int, default=16)
@@ -76,6 +87,32 @@ def main(argv=None):
                     f"available on this host; available: "
                     f"{available_backends()}")
 
+    # same contract for the encode side: spec / codec names fail upfront
+    # against the codec registry, not deep inside compress()
+    from repro.core.codecs import codec_names
+    from repro.core.quant import Granularity
+    from repro.core.spec import CompressionSpec, spec_from_legacy
+    if args.compress_spec is not None:
+        try:
+            # same PER_CHANNEL default as the --bits path: serving scale
+            # shapes assume per-leading-index (s, z) on layer-stacked tensors
+            compress_spec = CompressionSpec.parse(
+                args.compress_spec,
+                default_granularity=Granularity.PER_CHANNEL)
+        except (ValueError, KeyError) as e:
+            p.error(f"bad --compress-spec: {e}")
+    else:
+        if args.codec not in codec_names():
+            p.error(f"unknown codec {args.codec!r}; "
+                    f"registered: {codec_names()}")
+        if not 1 <= args.bits <= 8:
+            p.error(f"--bits must be in [1, 8], got {args.bits}")
+        # PER_CHANNEL = one (s, z) per leading index — for layer-stacked
+        # tensors that is exactly the paper's per-LAYER mixed scheme (Alg. 1
+        # line 5), and scanned layers need the leading scale dim to match
+        compress_spec = spec_from_legacy(args.bits, Granularity.PER_CHANNEL,
+                                         codec=args.codec)
+
     if args.production:
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
         from repro.launch import dryrun
@@ -96,19 +133,18 @@ def main(argv=None):
     host = {k: np.asarray(v, np.float32) for k, v in params.items()}
 
     t0 = time.perf_counter()
-    # PER_CHANNEL = one (s, z) per leading index — for layer-stacked tensors
-    # that is exactly the paper's per-LAYER mixed scheme (Alg. 1 line 5), and
-    # scanned layers need the leading scale dim to match the stack.
-    from repro.core.quant import Granularity
-    cm = CompressedModel.compress(host, bits=args.bits,
-                                  granularity=Granularity.PER_CHANNEL)
+    cm = CompressedModel.compress(host, spec=compress_spec)
     t_comp = time.perf_counter() - t0
     st = cm.stats()
     print(f"compressed {st.param_count/1e6:.1f}M params: "
-          f"{st.bits}b quant -> {st.effective_bits:.2f} effective bits "
+          f"{st.bits:.3g}b quant -> {st.effective_bits:.2f} effective bits "
           f"(entropy {st.entropy_bits:.2f}); "
           f"{st.reduction_vs_quant*100:.1f}% below quantized, "
           f"{st.reduction_vs_fp16*100:.1f}% below fp16  [{t_comp:.1f}s]")
+    for g in st.groups:
+        print(f"  [{g.table_id}] {g.param_count/1e6:.2f}M params: "
+              f"{g.bits}b {g.codec} -> {g.effective_bits:.2f} achieved bits "
+              f"(bound {g.entropy_bits:.2f}, {g.shannon_ratio:.3f}x)")
 
     load_metrics = {}
     load_kw = {}

@@ -74,16 +74,10 @@ def _batch_ways(mesh: Mesh) -> int:
 
 
 def _quantize_pred(name: str, shape: Tuple[int, ...]) -> bool:
-    """Shape-level twin of core.store.default_quantize_predicate."""
-    if len(shape) < 2:
-        return False
-    lname = name.lower()
-    if any(k in lname for k in ("norm", "scale", "bias", "a_log", "dt_", "conv_")):
-        return False
-    n = 1
-    for d in shape:
-        n *= int(d)
-    return n >= 4096
+    """The shared shape-level precision policy (core.spec): struct planning
+    here and serving residency must agree on which tensors are quantized."""
+    from repro.core.spec import quantizable_shape
+    return quantizable_shape(name, shape)
 
 
 def param_structs(cfg: ArchConfig, mesh: Mesh, rules: shd.Rules,

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.spec import quantizable_shape as _quantizable_shape
 from repro.core.store import _DEFAULT_CHUNK, CompressedModel
 from repro.models import api
 from repro.models.layers import QT
@@ -99,7 +100,16 @@ def load_params_from_compressed(model: CompressedModel, *,
         if quantized and name in model.qmeta:
             q, scale, zero = val
             bits = model.qmeta[name]["bits"]
-            if bits == 4 and pack_int4 and q.shape[-1] % 2 == 0:
+            if (not _quantizable_shape(name, model.tensors[name].shape)
+                    or model.qmeta[name]["granularity"] == "per_group"):
+                # Two cases the fused dequant-matmul path cannot host, so
+                # dequantize at load instead of packing a QT struct:
+                # * norm scales / biases / sensitive params (quantized via an
+                #   explicit spec rule) — model layers consume plain arrays;
+                # * per-group quantization — the (…, D/group, 1) scale does
+                #   not broadcast against the (…, D) weight in the kernels.
+                out[name] = jnp.asarray(model._dequantize_one(name, q))
+            elif bits == 4 and pack_int4 and q.shape[-1] % 2 == 0:
                 packed = (q[..., 0::2] | (q[..., 1::2] << 4)).astype(np.uint8)
                 out[name] = QT4(jnp.asarray(packed), jnp.asarray(scale),
                                 jnp.asarray(zero))

@@ -1,0 +1,310 @@
+"""Codec registry + CompressionSpec: round-trips, rates, rule precedence."""
+import numpy as np
+import pytest
+
+from repro.core import codecs, quant
+from repro.core.bitstream import (decode_serial_tans, decode_streams_tans,
+                                  pack_streams)
+from repro.core.codecs.rans import RansCodeTable, normalize_freqs
+from repro.core.entropy import shannon_entropy
+from repro.core.spec import (CompressionRule, CompressionSpec,
+                             default_quantize_predicate, spec_from_legacy)
+from repro.core.store import CompressedModel
+
+
+def _heavy_tailed(rng, shape, scale=0.02):
+    return (rng.standard_t(2.5, size=shape) * scale).astype(np.float32)
+
+
+# --------------------------------------------------------------------- registry
+def test_codec_registry_names_and_errors():
+    assert set(codecs.codec_names()) >= {"huffman", "rans", "raw"}
+    with pytest.raises(KeyError, match="registered"):
+        codecs.get_codec("no-such-codec")
+
+
+@pytest.mark.parametrize("codec", ["huffman", "rans", "raw"])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_codec_table_roundtrip_and_serialization(codec, bits):
+    rng = np.random.default_rng(bits)
+    syms = np.clip(np.abs(rng.standard_t(2.5, size=4000)) * (1 << bits) / 6,
+                   0, (1 << bits) - 1).astype(np.uint8)
+    freqs = np.bincount(syms, minlength=1 << bits)
+    table = codecs.get_codec(codec).build(freqs, bits)
+    stream, nbits = table.encode(syms)
+    # decode through the numpy backend's table dispatch
+    from repro.core.decode_backends import get_backend
+    mat, _ = pack_streams([stream])
+    out = get_backend("numpy").decode_table(
+        table, mat, np.array([len(syms)], np.int64))
+    assert (out[0, : len(syms)] == syms).all()
+    # deterministic rebuild from (manifest, arrays)
+    revived = codecs.table_from_container(table.to_manifest(),
+                                          table.to_arrays())
+    stream2, nbits2 = revived.encode(syms)
+    assert nbits2 == nbits
+    assert (stream2 == stream).all()
+
+
+# ------------------------------------------------------------------------ rates
+def test_rans_beats_huffman_on_both_bitwidths():
+    """Acceptance: rans achieved-bits <= huffman achieved-bits on 4-bit AND
+    8-bit histograms (fractional-bit coding closes the integer-bit gap)."""
+    rng = np.random.default_rng(0)
+    w = [_heavy_tailed(rng, (256, 256)) for _ in range(4)]
+    for bits in (4, 8):
+        qs = [quant.quantize(x, bits).q for x in w]
+        freqs = sum(np.bincount(q.reshape(-1), minlength=1 << bits)
+                    for q in qs)
+        syms = np.concatenate([q.reshape(-1) for q in qs])
+        achieved = {}
+        for codec in ("huffman", "rans"):
+            t = codecs.get_codec(codec).build(freqs, bits)
+            _, nbits = t.encode(syms)
+            achieved[codec] = nbits / syms.size
+        h = shannon_entropy(freqs)
+        assert h <= achieved["rans"] <= achieved["huffman"], (bits, achieved)
+        assert achieved["rans"] <= 1.02 * h, (bits, achieved["rans"], h)
+
+
+def test_rans_tiny_table_log_raises_clearly():
+    # L=8 makes the spread stride even (shares factor 2 with L): must refuse
+    # loudly instead of building a corrupt table
+    with pytest.raises(ValueError, match="table_log"):
+        RansCodeTable(np.array([3, 1], np.int64), bits=1, table_log=3)
+    # ...and states beyond the 16-bit stream header would truncate silently
+    with pytest.raises(ValueError, match="header"):
+        RansCodeTable(np.array([3, 1], np.int64), bits=1, table_log=17)
+    RansCodeTable(np.array([3, 1], np.int64), bits=1, table_log=16)  # fits
+
+
+def test_rans_normalization_sums_to_table_and_keeps_symbols():
+    rng = np.random.default_rng(1)
+    freqs = np.zeros(256, np.int64)
+    active = rng.choice(256, size=40, replace=False)
+    freqs[active] = rng.integers(1, 1_000_000, size=40)
+    norm = normalize_freqs(freqs, 12)
+    assert norm.sum() == 1 << 12
+    assert (norm[freqs > 0] >= 1).all()
+    assert (norm[freqs == 0] == 0).all()
+
+
+def test_tans_serial_matches_multistream():
+    rng = np.random.default_rng(2)
+    syms = rng.integers(0, 16, size=1000).astype(np.uint8)
+    t = RansCodeTable(np.bincount(syms, minlength=16), bits=4)
+    chunks = [c for c in np.array_split(syms, 5) if len(c)]
+    streams = [t.encode(c)[0] for c in chunks]
+    mat, _ = pack_streams(streams)
+    counts = np.array([len(c) for c in chunks], np.int64)
+    out = decode_streams_tans(mat, counts, t.tab_sym, t.tab_bits, t.tab_base,
+                              t.table_log)
+    for i, c in enumerate(chunks):
+        serial = decode_serial_tans(streams[i], len(c), t.tab_sym, t.tab_bits,
+                                    t.tab_base, t.table_log)
+        assert (serial == c).all()
+        assert (out[i, : len(c)] == c).all()
+
+
+# ------------------------------------------------ container round-trip property
+@pytest.mark.parametrize("codec", ["huffman", "rans", "raw"])
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("gran", [quant.Granularity.PER_TENSOR,
+                                  quant.Granularity.PER_CHANNEL,
+                                  quant.Granularity.PER_GROUP])
+def test_container_roundtrip_codec_bits_granularity(codec, bits, gran):
+    rng = np.random.default_rng(7)
+    params = {"a": _heavy_tailed(rng, (80, 64)),
+              "b": _heavy_tailed(rng, (2, 48, 64))}
+    spec = CompressionSpec(default_bits=bits, default_codec=codec,
+                           default_granularity=gran, default_group=32,
+                           segment_symbols=2048)
+    cm = CompressedModel.compress(params, spec=spec)
+    dec = cm.decode_all()
+    for name, w in params.items():
+        direct = quant.quantize(w, bits, gran, group=32)
+        assert (dec[name] == direct.q).all(), (name, codec, bits, gran)
+        # lossless w.r.t. the quantized model: dequantized values match too
+        got = cm._dequantize_one(name, dec[name])
+        assert np.array_equal(got, quant.dequantize(direct)), name
+
+
+# ------------------------------------------------------------------------- spec
+def test_spec_rule_precedence_first_match_wins():
+    spec = CompressionSpec.parse(
+        "layers/*norm*:fp32;"
+        "layers/*:bits=4,codec=rans;"
+        "*:bits=8,codec=huffman")
+    w = np.zeros((64, 64), np.float32)
+    assert spec.resolve("layers/q_norm", w).quantize is False
+    p4 = spec.resolve("layers/wq", w)
+    assert (p4.quantize, p4.bits, p4.codec) == (True, 4, "rans")
+    p8 = spec.resolve("embed", w)
+    assert (p8.quantize, p8.bits, p8.codec) == (True, 8, "huffman")
+    # order matters: flipping the rules hides the fp32 carve-out
+    flipped = CompressionSpec(rules=(spec.rules[1], spec.rules[0]))
+    assert flipped.resolve("layers/q_norm", w).bits == 4
+
+
+def test_spec_default_path_keeps_paper_predicate():
+    """Tensors no rule matches follow DESIGN.md §5 (norms/small stay fp32)."""
+    spec = spec_from_legacy(8, quant.Granularity.PER_TENSOR)
+    big = np.zeros((128, 64), np.float32)
+    assert spec.resolve("wq", big).quantize is True
+    assert spec.resolve("final_norm", np.zeros(64, np.float32)).quantize is False
+    assert default_quantize_predicate("wq", big) is True
+
+
+def test_spec_parse_validates_upfront():
+    with pytest.raises(KeyError, match="registered"):
+        CompressionSpec.parse("*:codec=lzma")
+    with pytest.raises(ValueError, match="bits"):
+        CompressionSpec.parse("*:bits=12")
+    with pytest.raises(ValueError, match="clause"):
+        CompressionSpec.parse("no-colon-here")
+    with pytest.raises(ValueError, match="granularity"):
+        CompressionSpec.parse("*:granularity=per_banana")
+    with pytest.raises(ValueError, match="group"):
+        CompressionSpec.parse("*:bits=4,granularity=group,group=0")
+
+
+def test_spec_defaults_clause_sets_defaults_not_a_rule():
+    spec = CompressionSpec.parse("defaults:bits=4,codec=rans,group=64")
+    assert spec.rules == ()
+    assert (spec.default_bits, spec.default_codec, spec.default_group) \
+        == (4, "rans", 64)
+    # defaults do NOT override the keep-fp32 predicate (unlike a '*' rule)
+    assert spec.resolve("bias", np.zeros(64, np.float32)).quantize is False
+    assert spec.resolve("wq", np.zeros((128, 64), np.float32)).bits == 4
+    with pytest.raises(ValueError, match="defaults"):
+        CompressionSpec.parse("defaults:fp32")
+
+
+def test_describe_of_legacy_spec_roundtrips_with_same_semantics():
+    """Provenance regression: describe() must not turn spec DEFAULTS into a
+    '*' catch-all rule, which would override the keep-fp32 predicate when a
+    loaded container's spec is reused for re-compression."""
+    rng = np.random.default_rng(9)
+    params = {"wq": _heavy_tailed(rng, (128, 64)),
+              "bias": rng.normal(size=(64,)).astype(np.float32)}
+    spec = spec_from_legacy(8, quant.Granularity.PER_CHANNEL)
+    revived = CompressionSpec.parse(spec.describe())
+    cm1 = CompressedModel.compress(params, spec=spec)
+    cm2 = CompressedModel.compress(params, spec=revived)
+    assert set(cm1.unquantized) == set(cm2.unquantized) == {"bias"}
+    assert cm2.qmeta["wq"]["bits"] == 8
+
+
+def test_spec_auto_bits_policy():
+    rng = np.random.default_rng(3)
+    spec = CompressionSpec.parse("*:bits=auto,codec=huffman")
+    # tightly clustered weights quantize to 4 bits almost losslessly
+    smooth = (rng.normal(0, 1, (64, 128)) * 0.01).astype(np.float32)
+    smooth = np.tanh(smooth)  # bounded, no outliers
+    # huge outliers blow up the 4-bit relative error -> 8 bits
+    spiky = smooth.copy()
+    spiky[0, 0] = 50.0
+    p4 = spec.resolve("smooth", smooth)
+    assert p4.bits == 4
+    # the probe's 4-bit quantization rides along for compress() to reuse,
+    # and it matches a direct quantize call exactly
+    assert p4.qt is not None
+    direct = quant.quantize(smooth, 4, p4.granularity, group=p4.group)
+    assert (p4.qt.q == direct.q).all()
+    p8 = spec.resolve("spiky", spiky)
+    assert p8.bits == 8 and p8.qt is None
+    # end-to-end: an auto container decodes to the direct 4-bit symbols
+    cm = CompressedModel.compress({"smooth": smooth}, spec=spec)
+    assert (cm.decode_all()["smooth"] == direct.q).all()
+
+
+def test_legacy_should_quantize_predicate_still_overrides():
+    rng = np.random.default_rng(8)
+    params = {"keep_me": _heavy_tailed(rng, (64, 64)),
+              "skip_me": _heavy_tailed(rng, (64, 64))}
+    cm = CompressedModel.compress(
+        params, bits=8, should_quantize=lambda n, w: n == "keep_me")
+    assert set(cm.qmeta) == {"keep_me"}
+    assert set(cm.unquantized) == {"skip_me"}
+    # spec rules still take precedence over the predicate where they match
+    spec = CompressionSpec.parse("skip_me:bits=4,codec=raw")
+    cm2 = CompressedModel.compress(
+        params, spec=spec, should_quantize=lambda n, w: n == "keep_me")
+    assert cm2.qmeta["skip_me"]["bits"] == 4
+    assert cm2.qmeta["keep_me"]["bits"] == 8
+
+
+def test_spec_describe_roundtrips_through_parse():
+    text = "layers/*:bits=4,codec=rans;*:bits=8"
+    spec = CompressionSpec.parse(text)
+    spec2 = CompressionSpec.parse(spec.describe())
+    assert spec2.rules == spec.rules
+    assert spec2.default_bits == spec.default_bits
+    assert spec2.default_granularity is spec.default_granularity
+    # out-of-band parse() defaults (serve.py passes per-channel) must be
+    # recorded in describe() so provenance round-trips semantically
+    spec3 = CompressionSpec.parse("layers/*:bits=4",
+                                  default_granularity=quant.Granularity.PER_CHANNEL)
+    revived = CompressionSpec.parse(spec3.describe())
+    assert revived.default_granularity is quant.Granularity.PER_CHANNEL
+    assert revived.rules == spec3.rules
+    # encoder-wide params survive the round-trip too (non-defaults emitted)
+    spec4 = CompressionSpec(rules=spec3.rules, max_code_len=10, auto_tol=0.1,
+                            segment_symbols=4096)
+    revived4 = CompressionSpec.parse(spec4.describe())
+    assert (revived4.max_code_len, revived4.auto_tol,
+            revived4.segment_symbols) == (10, 0.1, 4096)
+    # ...and are rejected outside a defaults: clause
+    with pytest.raises(ValueError, match="spec-wide"):
+        CompressionSpec.parse("layers/*:bits=4,max_code_len=10")
+
+
+# ---------------------------------------------------------- quant PER_GROUP fix
+def test_per_group_ragged_tail_falls_back_per_channel():
+    w = np.random.default_rng(4).normal(size=(8, 100)).astype(np.float32)
+    with pytest.warns(UserWarning, match="does not divide"):
+        qt = quant.quantize(w, 8, quant.Granularity.PER_GROUP, group=64)
+    assert qt.granularity is quant.Granularity.PER_CHANNEL
+    err = np.abs(quant.dequantize(qt) - w)
+    assert np.all(err <= 0.5 * np.abs(qt.scale) + 1e-6)
+
+
+def test_per_group_ragged_vector_falls_back_per_tensor():
+    w = np.random.default_rng(5).normal(size=(100,)).astype(np.float32)
+    with pytest.warns(UserWarning, match="does not divide"):
+        qt = quant.quantize(w, 8, quant.Granularity.PER_GROUP, group=64)
+    assert qt.granularity is quant.Granularity.PER_TENSOR
+
+
+def test_per_channel_1d_falls_back_per_tensor():
+    # one (scale, zero) pair per ELEMENT would be larger than fp32
+    w = np.random.default_rng(12).normal(size=(200,)).astype(np.float32)
+    with pytest.warns(UserWarning, match="per-element"):
+        qt = quant.quantize(w, 8, quant.Granularity.PER_CHANNEL)
+    assert qt.granularity is quant.Granularity.PER_TENSOR
+    assert qt.scale.size == 1
+
+
+def test_per_group_invalid_group_raises_clearly():
+    w = np.zeros((8, 64), np.float32)
+    with pytest.raises(ValueError, match="group >= 1"):
+        quant.quantize(w, 8, quant.Granularity.PER_GROUP, group=0)
+
+
+def test_per_group_divisible_unchanged():
+    w = np.random.default_rng(6).normal(size=(8, 128)).astype(np.float32)
+    qt = quant.quantize(w, 8, quant.Granularity.PER_GROUP, group=64)
+    assert qt.granularity is quant.Granularity.PER_GROUP
+    assert qt.scale.shape == (8, 2, 1)
+
+
+# -------------------------------------------------------------- CLI validation
+def test_serve_cli_rejects_unknown_codec_and_spec_upfront():
+    from repro.launch.serve import main
+    with pytest.raises(SystemExit) as e:
+        main(["--arch", "qwen3-1.7b", "--codec", "lzma"])
+    assert e.value.code == 2
+    with pytest.raises(SystemExit):
+        main(["--arch", "qwen3-1.7b", "--compress-spec", "*:codec=nope"])
+    with pytest.raises(SystemExit):
+        main(["--arch", "qwen3-1.7b", "--bits", "12"])

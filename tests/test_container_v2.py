@@ -1,0 +1,262 @@
+"""Container format v2: v1 back-compat bit-identity, mixed-precision
+round-trips across every decode backend, and the per-group stats contract."""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import decode_backends as db
+from repro.core import quant
+from repro.core.spec import CompressionSpec
+from repro.core.store import CompressedModel
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+
+
+def _params(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "embed": (rng.standard_t(3, size=(300, 128)) * 0.02).astype(np.float32),
+        "layers/wq": (rng.standard_t(3, size=(3, 96, 128)) * 0.02).astype(np.float32),
+        "layers/w_up": (rng.standard_t(3, size=(3, 128, 160)) * 0.02).astype(np.float32),
+        "lm_head": (rng.standard_t(3, size=(128, 300)) * 0.02).astype(np.float32),
+        "final_norm": rng.normal(size=(128,)).astype(np.float32),
+    }
+
+
+MIXED_SPEC = CompressionSpec.parse(
+    "layers/*:bits=4,codec=rans,granularity=channel;"
+    "*:bits=8,codec=rans,granularity=channel")
+
+
+# ------------------------------------------------------------- v1 back-compat
+def test_v1_container_loads_and_decodes_bit_identically():
+    """Acceptance: a container written BEFORE the codec-registry redesign
+    (committed fixture) loads through the v2 reader and reproduces the
+    symbols and dequantized values bit-for-bit."""
+    cm = CompressedModel.load(os.path.join(FIXTURES, "container_v1_8bit.npz"))
+    expected = np.load(os.path.join(FIXTURES,
+                                    "container_v1_8bit_expected.npz"))
+    dec = cm.decode_all()
+    names = {k.split("::", 1)[1] for k in expected.files
+             if k.startswith("sym::")}
+    assert set(dec) == names
+    for k in dec:
+        assert dec[k].dtype == np.uint8
+        assert (dec[k] == expected[f"sym::{k}"]).all(), k
+    deq = cm.dequantize_all()
+    for k in deq:
+        assert np.array_equal(deq[k], expected[f"deq::{k}"]), k
+    # revived as the single-huffman-table degenerate case of v2
+    assert list(cm.tables) == ["huffman8"]
+    assert cm.table.codec_name == "huffman"
+    assert all(m["codec"] == "huffman" for m in cm.qmeta.values())
+
+
+def test_v1_fixture_streams_through_scheduler():
+    cm = CompressedModel.load(os.path.join(FIXTURES, "container_v1_8bit.npz"))
+    mono = cm.decode_all()
+    streamed = dict(cm.iter_decode(chunk_symbols=1024))
+    assert set(mono) == set(streamed)
+    for k in mono:
+        assert (mono[k] == streamed[k]).all(), k
+
+
+# ----------------------------------------------------------- v2 mixed rans/4+8
+def test_mixed_container_groups_and_decode():
+    cm = CompressedModel.compress(_params(), spec=MIXED_SPEC)
+    assert set(cm.tables) == {"rans4", "rans8"}
+    assert cm.qmeta["layers/wq"]["bits"] == 4
+    assert cm.qmeta["embed"]["bits"] == 8
+    with pytest.raises(AttributeError, match="tables"):
+        cm.table                      # legacy accessor refuses mixed
+    dec = cm.decode_all()
+    for name in dec:
+        bits = cm.qmeta[name]["bits"]
+        direct = quant.quantize(_params()[name], bits,
+                                quant.Granularity.PER_CHANNEL)
+        assert (dec[name] == direct.q).all(), name
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax", "pallas",
+                                     "pallas-interpret"])
+def test_mixed_rans_container_roundtrips_every_backend(backend):
+    """Acceptance: a v2 mixed 4/8-bit rans container round-trips bit-exactly
+    through every decode backend available on this host."""
+    if backend not in db.available_backends():
+        pytest.skip(f"{backend} unavailable here")
+    cm = CompressedModel.compress(_params(), spec=MIXED_SPEC)
+    mono = cm.decode_all(backend="numpy")
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "m.npz")
+        cm.save(path)
+        cm2 = CompressedModel.load(path)
+        streamed = dict(cm2.iter_decode(backend=backend,
+                                        chunk_symbols=12_000))
+        mono2 = cm2.decode_all(backend=backend)
+    assert set(mono) == set(streamed) == set(mono2)
+    for k in mono:
+        assert (mono[k] == streamed[k]).all(), (backend, k)
+        assert (mono[k] == mono2[k]).all(), (backend, k)
+
+
+def test_mixed_codec_huffman_plus_rans_one_container():
+    spec = CompressionSpec.parse(
+        "layers/*:bits=8,codec=huffman,granularity=channel;"
+        "*:bits=8,codec=rans,granularity=channel")
+    cm = CompressedModel.compress(_params(), spec=spec)
+    assert set(cm.tables) == {"huffman8", "rans8"}
+    dec = cm.decode_all()
+    for name in dec:
+        direct = quant.quantize(_params()[name], 8,
+                                quant.Granularity.PER_CHANNEL)
+        assert (dec[name] == direct.q).all(), name
+
+
+def test_scheduler_chunks_never_straddle_tables():
+    cm = CompressedModel.compress(_params(), spec=MIXED_SPEC)
+    for chunk in cm.scheduler(backend="numpy", chunk_symbols=10_000).plan():
+        tables = {cm.table_id_for(s.tensor) for s in chunk.segs}
+        assert len(tables) == 1
+    # monolithic plan groups table-major: exactly ONE batched lock-step call
+    # per table, no matter how tensor order alternates between tables
+    mono = cm.scheduler(backend="numpy", chunk_symbols=None).plan()
+    assert len(mono) == len(cm.tables)
+    for chunk in mono:
+        tables = {cm.table_id_for(s.tensor) for s in chunk.segs}
+        assert len(tables) == 1
+
+
+def test_mixed_container_serving_load_packs_qt4():
+    from repro.models.layers import QT4
+    from repro.serving import engine
+    cm = CompressedModel.compress(_params(), spec=MIXED_SPEC)
+    loaded = engine.load_params_from_compressed(cm, quantized=True)
+    assert isinstance(loaded["layers/wq"], QT4)      # 4-bit -> nibble-packed
+    assert not isinstance(loaded["embed"], QT4)      # 8-bit stays QT
+    mono = engine.load_params_from_compressed(cm, quantized=True,
+                                              stream=False)
+    for k in mono:
+        ms, mm = loaded[k], mono[k]
+        if hasattr(ms, "q"):
+            assert (np.asarray(ms.q) == np.asarray(mm.q)).all(), k
+        else:
+            assert (np.asarray(ms) == np.asarray(mm)).all(), k
+
+
+def test_serving_load_dequantizes_per_group_tensors():
+    """Per-group scales (…, D/group, 1) cannot broadcast in the fused
+    dequant-matmul path: the serving loader must hand such tensors over
+    dense instead of packing QT/QT4."""
+    from repro.serving import engine
+    spec = CompressionSpec.parse("*:bits=8,granularity=group,group=32")
+    cm = CompressedModel.compress(_params(), spec=spec)
+    per_group = [n for n, m in cm.qmeta.items()
+                 if m["granularity"] == "per_group"]
+    assert per_group                              # the guard is exercised
+    loaded = engine.load_params_from_compressed(cm, quantized=True)
+    for name in per_group:
+        assert not hasattr(loaded[name], "q"), name
+        want = cm._dequantize_one(name, cm.decode_tensor(name))
+        assert np.array_equal(np.asarray(loaded[name]), want), name
+    # ragged tensors fell back to per-channel, whose scales QT hosts fine
+    ragged = set(cm.qmeta) - set(per_group)
+    assert all(cm.qmeta[n]["granularity"] == "per_channel" for n in ragged)
+
+
+def test_serving_load_dequantizes_rule_quantized_norms():
+    """A spec rule may quantize norm/bias tensors into the container, but the
+    serving loader must hand them to the model as plain arrays — layer code
+    (rms_norm etc.) cannot host QT/QT4 structs."""
+    from repro.serving import engine
+    rng = np.random.default_rng(11)
+    params = dict(_params(),
+                  **{"layers/attn_norm":
+                     rng.normal(size=(3, 128)).astype(np.float32)})
+    spec = CompressionSpec.parse(
+        "layers/*:bits=4,codec=rans,granularity=channel;"
+        "*:bits=8,codec=rans,granularity=channel")
+    cm = CompressedModel.compress(params, spec=spec)
+    assert cm.qmeta["layers/attn_norm"]["bits"] == 4   # stored quantized...
+    loaded = engine.load_params_from_compressed(cm, quantized=True)
+    norm = loaded["layers/attn_norm"]
+    assert not hasattr(norm, "q")                      # ...served dense
+    got = np.asarray(norm)
+    want = quant.dequantize(quant.quantize(
+        params["layers/attn_norm"], 4, quant.Granularity.PER_CHANNEL))
+    assert np.array_equal(got, want)
+
+
+# ------------------------------------------------------------------ stats v2
+def test_stats_per_group_breakdown_and_weighted_effective_bits():
+    cm = CompressedModel.compress(_params(), spec=MIXED_SPEC)
+    st = cm.stats()
+    assert {g.table_id for g in st.groups} == {"rans4", "rans8"}
+    by_id = {g.table_id: g for g in st.groups}
+    n4, n8 = by_id["rans4"].param_count, by_id["rans8"].param_count
+    assert n4 > 0 and n8 > 0
+    # the weighted aggregate is exactly the symbol-weighted group mean
+    want = (by_id["rans4"].effective_bits * n4
+            + by_id["rans8"].effective_bits * n8) / (n4 + n8)
+    assert st.effective_bits == pytest.approx(want)
+    assert st.bits == pytest.approx((4 * n4 + 8 * n8) / (n4 + n8))
+    # quant_bytes reflects per-group widths, not one uniform bits field
+    n_u = st.unquantized_params
+    assert st.quant_bytes == (n4 * 4) // 8 + (n8 * 8) // 8 + 2 * n_u
+    # achieved >= the group Shannon bound, and close to it for rans
+    for g in st.groups:
+        assert g.entropy_bits <= g.effective_bits <= 1.02 * g.entropy_bits
+
+
+def test_stats_uniform_container_matches_legacy_contract():
+    cm = CompressedModel.compress(_params(), bits=8,
+                                  granularity=quant.Granularity.PER_CHANNEL)
+    st = cm.stats()
+    assert len(st.groups) == 1
+    assert st.bits == 8
+    assert st.entropy_bits <= st.effective_bits <= st.entropy_bits + 1.0
+    assert 0.0 < st.reduction_vs_fp16 < 1.0
+
+
+def test_stats_survive_save_load():
+    cm = CompressedModel.compress(_params(), spec=MIXED_SPEC)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "m.npz")
+        cm.save(path)
+        st2 = CompressedModel.load(path).stats()
+    st = cm.stats()
+    assert st2.effective_bits == pytest.approx(st.effective_bits)
+    assert [g.table_id for g in st2.groups] == [g.table_id for g in st.groups]
+
+
+def test_v2_manifest_records_spec_provenance():
+    import json
+    cm = CompressedModel.compress(_params(), spec=MIXED_SPEC)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "m.npz")
+        cm.save(path)
+        z = np.load(path)
+        manifest = json.loads(bytes(z["__manifest__"]).decode())
+        assert manifest["version"] == 2
+        assert "rans4" in manifest["tables"] and "rans8" in manifest["tables"]
+        assert manifest["spec"] == MIXED_SPEC.describe()
+        # provenance survives a load -> save round-trip (e.g. repack) with
+        # identical semantics (canonical text incl. the defaults clause)
+        cm2 = CompressedModel.load(path)
+        assert cm2.spec is not None
+        assert cm2.spec.describe() == MIXED_SPEC.describe()
+        assert cm2.spec.rules == MIXED_SPEC.rules
+        path2 = os.path.join(d, "m2.npz")
+        cm2.save(path2)
+        manifest2 = json.loads(bytes(np.load(path2)["__manifest__"]).decode())
+        assert manifest2["spec"] == MIXED_SPEC.describe()
+
+
+def test_unknown_future_format_version_raises():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "future.npz")
+        np.savez(path, __format_version__=np.array([99], np.int64),
+                 __manifest__=np.frombuffer(b"{}", dtype=np.uint8))
+        with pytest.raises(ValueError, match="unsupported container format"):
+            CompressedModel.load(path)

@@ -217,6 +217,32 @@ def test_entro_checkpoint_roundtrip_bounded_error():
     assert err < 0.02 * 256 / 255 / 2 + 1e-5   # half quantization step
 
 
+def test_entro_checkpoint_spec_patterns_match_tree_paths():
+    """entro_spec rules match the pytree key path (leaf names carry it), so a
+    carve-out like '*/mu/*:fp32' actually protects the optimizer moments."""
+    from repro.checkpoint.checkpointer import Checkpointer, CheckpointConfig
+    from repro.core.store import CompressedModel
+    rng = np.random.default_rng(1)
+    tree = {"params": {"wq": jnp.asarray(rng.normal(0, 0.02, (64, 256)),
+                                         jnp.float32)},
+            "opt": {"mu": {"wq": jnp.asarray(rng.normal(0, 0.001, (64, 256)),
+                                             jnp.float32)}}}
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(CheckpointConfig(
+            root=d, compress="entro",
+            entro_spec="*/mu/*:fp32; */params/*:bits=8,codec=rans"))
+        ck.save(1, tree)
+        step_dir = os.path.join(d, "step_000000001")
+        cm = CompressedModel.load(os.path.join(step_dir,
+                                               "shard_00000_entro.npz"))
+        # the fp32 carve-out fired for the moment leaf: exact round-trip
+        assert any("opt/mu/wq" in n for n in cm.unquantized), cm.unquantized
+        assert any("params/wq" in n for n in cm.qmeta), list(cm.qmeta)
+        _, out = ck.restore(like=tree)
+    assert np.array_equal(np.asarray(out["opt"]["mu"]["wq"]),
+                          np.asarray(tree["opt"]["mu"]["wq"]))
+
+
 def test_ef_gradient_compression_unbiased():
     from repro.distributed import grad_compress as gc
     rng = np.random.default_rng(0)
