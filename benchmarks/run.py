@@ -5,6 +5,7 @@
   decode  — parallel-decoding scaling (paper §IV-C / Fig. 3)
   streaming — monolithic vs streamed weight decode (load-path of Table II)
   traffic — continuous batching vs lockstep under Poisson arrivals
+  sharded — multi-device sharded residency vs single-device (bit-identity)
   roofline — render §Roofline from dry-run JSON (if present)
 
 ``python -m benchmarks.run [name ...]`` runs all by default.
@@ -17,7 +18,8 @@ import sys
 
 def main(argv=None) -> int:
     which = (argv or sys.argv[1:]) or ["table1", "table2", "decode",
-                                       "streaming", "traffic", "roofline"]
+                                       "streaming", "traffic", "sharded",
+                                       "roofline"]
     from . import (decode_streaming, decode_throughput, table1_storage,
                    table2_latency)
 
@@ -41,6 +43,19 @@ def main(argv=None) -> int:
         print("== Continuous batching vs lockstep (Poisson traffic) ==")
         from . import serving_traffic
         serving_traffic.run()
+        print()
+    if "sharded" in which:
+        print("== Multi-device sharded serving (weights sharded in HBM) ==")
+        # earlier harnesses already initialized the jax backend, so the
+        # forced-device-count flag sharded_serving sets for standalone runs
+        # cannot take effect here — skip cleanly when the host is short
+        from . import sharded_serving
+        try:
+            sharded_serving.run()
+        except ValueError as e:
+            print(f"(skip sharded: {e} — run it standalone: "
+                  f"XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+                  f"python -m benchmarks.sharded_serving)")
         print()
     if "roofline" in which:
         path = "results/dryrun_baseline.json"

@@ -22,7 +22,7 @@ import dataclasses
 from typing import Optional, Tuple
 
 import jax
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,6 +35,15 @@ class ShardingHints:
     feature_axes: Tuple[str, ...] = ()        # weight-stationary decode: the
     #   FSDP axes ride the activation FEATURE dim, forcing partial-dot + tiny
     #   psum instead of weight all-gathers (EXPERIMENTS.md §Perf H1)
+    exact_tp: bool = False                    # bit-identical sharded serving:
+    #   weights stay sharded at REST (per-device HBM divided along output
+    #   channels) and are constrained replicated at their USE site — an
+    #   all-gather, pure data movement — so every compute op runs with
+    #   reference shapes and rounds exactly like the single-device engine.
+    #   Activation constraints are skipped entirely: partitioning activation
+    #   rows changes XLA's emitted reduction loops (fusion/row-count
+    #   dependent accumulation order, measured at ~1 ulp per rms_norm), which
+    #   is what breaks greedy-token identity under classic sharded-compute TP.
 
 
 _HINTS: list = [None]
@@ -57,10 +66,24 @@ def _fits(dim: int, mesh, axes: Tuple[str, ...]) -> bool:
     return dim % n == 0
 
 
+def constrain_replicated(x: jax.Array) -> jax.Array:
+    """Exact sharded serving: gather a HBM-sharded WEIGHT to every device at
+    its use site.  The all-gather is pure data movement — the consuming op
+    then reads a full-shape buffer exactly like the single-device program
+    reads the parameter buffer, so its emitted kernel (and therefore its
+    rounding) is identical.  No-op unless ``exact_tp`` hints are installed.
+    """
+    h = get_hints()
+    if h is None or not h.exact_tp:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(h.mesh, P(*([None] * x.ndim))))
+
+
 def constrain_heads(x: jax.Array, *, is_cache_side: bool = False) -> jax.Array:
     """Constrain (B, T, H, hd): batch/B, model/H, cache sharding on T."""
     h = get_hints()
-    if h is None:
+    if h is None or h.exact_tp:     # exact serving: no activation constraints
         return x
     B, T, H, _ = x.shape
     batch = h.batch_axes if _fits(B, h.mesh, h.batch_axes) else None
@@ -70,13 +93,14 @@ def constrain_heads(x: jax.Array, *, is_cache_side: bool = False) -> jax.Array:
     m = h.model_axis
     if m and _fits(H, h.mesh, (m,)) and (seq is None or m not in seq):
         heads = m
-    return jax.lax.with_sharding_constraint(x, P(batch, seq, heads, None))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(h.mesh, P(batch, seq, heads, None)))
 
 
 def constrain_scores(s: jax.Array) -> jax.Array:
     """Constrain (B, H, Sq, T) attention scores."""
     h = get_hints()
-    if h is None:
+    if h is None or h.exact_tp:     # exact serving: no activation constraints
         return s
     B, H, Sq, T = s.shape
     batch = h.batch_axes if _fits(B, h.mesh, h.batch_axes) else None
@@ -85,7 +109,8 @@ def constrain_scores(s: jax.Array) -> jax.Array:
     m = h.model_axis
     if m and _fits(H, h.mesh, (m,)) and (seq is None or m not in seq):
         heads = m
-    return jax.lax.with_sharding_constraint(s, P(batch, heads, None, seq))
+    return jax.lax.with_sharding_constraint(
+        s, NamedSharding(h.mesh, P(batch, heads, None, seq)))
 
 
 def constrain_activation(x: jax.Array) -> jax.Array:
@@ -99,17 +124,18 @@ def constrain_activation(x: jax.Array) -> jax.Array:
     divide (decode steps).
     """
     h = get_hints()
-    if h is None or x.ndim < 3:
+    if h is None or h.exact_tp or x.ndim < 3:
         return x
     if h.feature_axes:
         if not _fits(x.shape[-1], h.mesh, h.feature_axes):
             return x
         return jax.lax.with_sharding_constraint(
-            x, P(*([None] * (x.ndim - 1)), h.feature_axes))
+            x, NamedSharding(h.mesh, P(*([None] * (x.ndim - 1)),
+                                       h.feature_axes)))
     batch = h.batch_axes if _fits(x.shape[0], h.mesh, h.batch_axes) else None
     m = h.model_axis
     seq = m if (h.seq_sp and m and _fits(x.shape[1], h.mesh, (m,))) else None
     if batch is None and seq is None:
         return x
     return jax.lax.with_sharding_constraint(
-        x, P(batch, seq, *([None] * (x.ndim - 2))))
+        x, NamedSharding(h.mesh, P(batch, seq, *([None] * (x.ndim - 2)))))

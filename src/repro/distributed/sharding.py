@@ -54,23 +54,52 @@ class Rules:
         return _as_tuple(self.table.get(logical))
 
 
+def _mesh_prod(mesh: Mesh, axes: Sequence[str]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
 def resolve_spec(axes: Sequence[Optional[str]], shape: Sequence[int],
                  rules: Rules, mesh: Mesh) -> P:
-    """Build a PartitionSpec for one tensor, honoring divisibility + uniqueness."""
+    """Build a PartitionSpec for one tensor, honoring divisibility + uniqueness.
+
+    Tuple candidates keep prefix semantics: shortening drops mesh axes from
+    the RIGHT until the surviving product divides the dim.  The dedup filter
+    against ``used`` is re-applied after every shortening step (not just once
+    upfront): a rule table may name the same mesh axis twice — within one
+    tuple, or in tuples claimed by two dims of the same tensor (e.g. a
+    ``("pod", "data")`` batch rule colliding with a ``"data"`` embed rule) —
+    and a surviving prefix must never resurrect an axis an earlier dim
+    already claimed, which would emit an illegal duplicate-axis
+    PartitionSpec.
+    """
     assert len(axes) == len(shape), (axes, shape)
     used: set = set()
     entries = []
     for logical, dim in zip(axes, shape):
-        cand = [a for a in rules.lookup(logical)
-                if a not in used and a in mesh.shape]
-        # shorten from the right until the product divides the dim
-        while cand and (dim % int(np.prod([mesh.shape[a] for a in cand])) != 0):
+        # dedup WITHIN the candidate tuple (first occurrence wins) and drop
+        # axes this mesh does not have
+        cand, seen = [], set()
+        for a in rules.lookup(logical):
+            if a in seen or a not in mesh.shape:
+                continue
+            seen.add(a)
+            cand.append(a)
+        # interleave the `used` filter with prefix shortening: re-check the
+        # surviving prefix after every pop so cross-dim claims stay disjoint
+        while True:
+            cand = [a for a in cand if a not in used]
+            if not cand or dim % _mesh_prod(mesh, cand) == 0:
+                break
             cand.pop()
         if cand:
             used.update(cand)
             entries.append(tuple(cand) if len(cand) > 1 else cand[0])
         else:
             entries.append(None)
+    flat = [a for e in entries if e is not None
+            for a in (e if isinstance(e, tuple) else (e,))]
+    assert len(flat) == len(set(flat)), \
+        f"duplicate mesh axes in resolved spec {entries} for {axes}/{shape}"
     # trim trailing Nones (canonical form)
     while entries and entries[-1] is None:
         entries.pop()
@@ -85,6 +114,69 @@ def tree_shardings(schema_axes: Dict[str, Sequence[Optional[str]]],
                                                schema_shapes[name], rules, mesh))
         for name in schema_axes
     }
+
+
+# -------------------------------------------------------- quantized (QT) leaves
+
+def follower_spec(qspec: P, q_shape: Sequence[int],
+                  follower_shape: Sequence[int], mesh: Mesh) -> P:
+    """Sharding for a QT ``scale``/``zero`` that FOLLOWS the resolved ``q``
+    spec: a follower dim inherits q's mesh axes on that dim iff the sizes
+    line up (size-1 broadcast dims replicate; a per-group dim whose group
+    count the axis product does not divide replicates — the per-group
+    granularity divisibility check).
+
+    Consistency invariant: wherever the follower is sharded, it is sharded by
+    exactly the mesh axes sharding the same dim of ``q`` — each device holds
+    the (s, z) rows of precisely its own output-channel slice, so the fused
+    dequant never reads remote quantization metadata.
+    """
+    entries = list(qspec) + [None] * (len(q_shape) - len(qspec))
+    out = []
+    for dim, qdim, e in zip(follower_shape, q_shape, entries):
+        if e is None or dim == 1:
+            out.append(None)
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        n = _mesh_prod(mesh, axes)
+        # dim == qdim: per-channel metadata, always divisible when q is;
+        # dim != qdim: per-group metadata — keep the axes only if the group
+        # count still divides (each shard must own whole groups)
+        out.append(e if dim % n == 0 else None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def leaf_shardings(axes: Sequence[Optional[str]], value: Any, rules: Rules,
+                   mesh: Mesh):
+    """NamedSharding (pytree) for one parameter leaf.
+
+    Plain arrays resolve through :func:`resolve_spec`.  Quantized triples
+    (:class:`~repro.models.layers.QT` / ``QT4``) resolve the ``q`` symbols
+    against the schema axes (QT4's nibble-packed last dim is checked for
+    divisibility at its packed size) and derive ``scale``/``zero`` shardings
+    with :func:`follower_spec`, so the whole triple lands consistently
+    sharded along the output-channel axis.
+    """
+    from repro.models.layers import QT, QT4, QTG
+    if isinstance(value, (QT, QT4, QTG)):
+        q_shape = tuple(value.q.shape)
+        qspec = resolve_spec(axes, q_shape, rules, mesh)
+        qns = NamedSharding(mesh, qspec)
+        sns = NamedSharding(mesh, follower_spec(qspec, q_shape,
+                                                tuple(value.scale.shape), mesh))
+        zns = NamedSharding(mesh, follower_spec(qspec, q_shape,
+                                                tuple(value.zero.shape), mesh))
+        if isinstance(value, QTG):
+            mns = NamedSharding(mesh, resolve_spec(
+                axes, tuple(value.master.shape), rules, mesh))
+            return QTG(qns, sns, zns, mns)
+        return type(value)(qns, sns, zns)
+    return NamedSharding(mesh, resolve_spec(axes, tuple(value.shape),
+                                            rules, mesh))
+
+
 
 
 # ------------------------------------------------------------------- profiles
@@ -143,6 +235,51 @@ def serve_rules(mesh: Mesh, *, long_context: bool = False) -> Rules:
     })
 
 
+def serve_tp_table(cfg, mesh: Mesh, axes: Sequence[Optional[str]]) -> Rules:
+    """Exact serving TP: the rule table for ONE weight tensor that shards
+    only its output-channel axis (the last dim) over model.
+
+    Contraction dims stay whole everywhere, and the model layers constrain
+    their reduction inputs feature-replicated under ``exact_tp`` hints
+    (:func:`repro.distributed.ctx.constrain_replicated`), so the sharded
+    compute never psums a floating-point reduction — greedy decode is
+    bit-identical to the single-device engine.  Specifics:
+
+    * the embedding table / lm_head shard over ``vocab`` (output channels of
+      the logits matmul; token gathers over sharded rows are exact);
+    * ``heads`` / ``kv`` output columns shard only when whole heads divide
+      the model axis — a split inside a head resurfaces as a sharded
+      head_dim contraction after the (B, S, H*hd) -> (B, S, H, hd) reshape;
+    * everything else (norms, 1-D params, contraction-dim axes) replicates.
+    """
+    table: Dict[str, AxesSpec] = {a: None for a in axes if a}
+    if "vocab" in axes:
+        table["vocab"] = "model"
+        return Rules(table)
+    out = axes[-1] if len(axes) >= 2 else None
+    if out is not None:
+        m = mesh.shape.get("model", 1)
+        ok = {"heads": bool(cfg.n_heads) and cfg.n_heads % m == 0,
+              "kv": kv_divisible(cfg, mesh)}.get(out, True)
+        if ok:
+            table[out] = "model"
+    return Rules(table)
+
+
+def kv_divisible(cfg, mesh: Mesh) -> bool:
+    m = mesh.shape.get("model", 1)
+    return bool(cfg.n_kv_heads) and cfg.n_kv_heads % m == 0
+
+
+def arch_rules(cfg, mesh: Mesh, base: Rules) -> Rules:
+    """KV weight columns shard over model only when whole KV heads divide the
+    axis; otherwise wk/wv stay replicated over model (Megatron GQA practice —
+    splitting inside a head produces degenerate reshape shardings)."""
+    table = dict(base.table)
+    table["kv"] = "model" if kv_divisible(cfg, mesh) else None
+    return Rules(table)
+
+
 # ------------------------------------------------------------- tensor helpers
 
 def param_shardings(cfg, mesh: Mesh, rules: Rules) -> Dict[str, NamedSharding]:
@@ -152,12 +289,20 @@ def param_shardings(cfg, mesh: Mesh, rules: Rules) -> Dict[str, NamedSharding]:
                           {n: s.shape for n, s in sch.items()}, rules, mesh)
 
 
-def cache_shardings(cfg, mesh: Mesh, rules: Rules, batch: int, max_len: int
-                    ) -> Dict[str, NamedSharding]:
+def cache_shardings(cfg, mesh: Mesh, rules: Rules, batch: int, max_len: int,
+                    **cache_kw) -> Dict[str, NamedSharding]:
+    """Shardings for the KV-cache pytree.  ``cache_kw`` forwards family
+    cache options (``layout="slot"`` for the continuous-batching pool,
+    ``kv_bits=8`` for the int8 cache) through :func:`api.cache_specs`, which
+    drops kwargs a family does not understand."""
+    import inspect
     from repro.models import api
     mod = api.build(cfg)
-    specs = mod.cache_specs(cfg)
-    shapes = jax.eval_shape(lambda: mod.init_cache(cfg, batch, max_len))
+    specs = api.cache_specs(cfg, **cache_kw)
+    accepted = inspect.signature(mod.init_cache).parameters
+    init_kw = {k: v for k, v in cache_kw.items() if k in accepted}
+    shapes = jax.eval_shape(lambda: mod.init_cache(cfg, batch, max_len,
+                                                   **init_kw))
     return tree_shardings(specs, {k: shapes[k].shape for k in specs}, rules, mesh)
 
 

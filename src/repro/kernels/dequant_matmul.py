@@ -41,15 +41,18 @@ def _mm_kernel(x_ref, wq_ref, scale_ref, zero_ref, o_ref, acc_ref, *,
     x = x_ref[...]                                 # (bm, bk) bf16
     if int4:
         packed = wq_ref[...]                       # (bk//2, bn) uint8
-        lo = (packed & 0x0F).astype(jnp.bfloat16)  # even k
-        hi = (packed >> 4).astype(jnp.bfloat16)    # odd k
+        lo = (packed & 0x0F).astype(jnp.float32)   # even k
+        hi = (packed >> 4).astype(jnp.float32)     # odd k
         half, bn = packed.shape
         wsym = jnp.stack([lo, hi], axis=1).reshape(half * 2, bn)
     else:
-        wsym = wq_ref[...].astype(jnp.bfloat16)    # (bk, bn)
-    scale = scale_ref[...].astype(jnp.bfloat16)    # (1, bn) or (1, 1)
-    zero = zero_ref[...].astype(jnp.bfloat16)
-    w = wsym * scale + zero                        # fused dequant in VMEM
+        wsym = wq_ref[...].astype(jnp.float32)     # (bk, bn)
+    scale = scale_ref[...]                         # (1, bn) or (1, 1) f32
+    zero = zero_ref[...]
+    # dequant in f32 (matches kernels/ref.py); only the MXU operand is bf16 —
+    # the quantization grid q*scale+zero is not exactly representable in bf16
+    # and per-term bf16 rounding drifts past the kernel-vs-oracle tolerance
+    w = (wsym * scale + zero).astype(jnp.bfloat16)  # fused dequant in VMEM
     acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
     @pl.when(k == n_k - 1)

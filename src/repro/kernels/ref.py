@@ -18,8 +18,9 @@ def dequant_matmul_ref(x: jax.Array, wq: jax.Array, scale, zero, *,
         wsym = wq
     scale = jnp.asarray(scale, jnp.float32).reshape(1, -1)
     zero = jnp.asarray(zero, jnp.float32).reshape(1, -1)
-    w = wsym.astype(jnp.bfloat16) * scale.astype(jnp.bfloat16) \
-        + zero.astype(jnp.bfloat16)
+    # dequant in f32, bf16 only as the dot operand — the exact contract the
+    # Pallas kernel implements (kernels/dequant_matmul.py)
+    w = (wsym.astype(jnp.float32) * scale + zero).astype(jnp.bfloat16)
     return jnp.dot(x.astype(jnp.bfloat16), w,
                    preferred_element_type=jnp.float32).astype(out_dtype)
 

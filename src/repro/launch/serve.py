@@ -68,10 +68,26 @@ def main(argv=None):
                    help="with --batch-slots: replay R synthetic Poisson "
                         "arrivals (ragged prompts/gen) instead of one "
                         "uniform request wave")
+    p.add_argument("--mesh", default=None, metavar="DxM",
+                   help="serve on a (data, model) device mesh, e.g. 2x4: "
+                        "weights tensor-parallel over model (QT q/scale/zero "
+                        "sharded consistently along output channels), KV "
+                        "cache batch/slot-sharded over data, placement at "
+                        "load-stream time; needs data*model local devices "
+                        "(CPU hosts: XLA_FLAGS=--xla_force_host_platform_"
+                        "device_count=N)")
     p.add_argument("--production", action="store_true")
     p.add_argument("--shape", default="decode_32k")
     p.add_argument("--multi-pod", action="store_true")
     args = p.parse_args(argv)
+
+    mesh_dims = None
+    if args.mesh:
+        from repro.launch.mesh import parse_mesh_spec
+        try:
+            mesh_dims = parse_mesh_spec(args.mesh)
+        except ValueError as e:
+            p.error(f"--mesh: {e}")
 
     # validate the backend against the registry BEFORE any expensive work, so
     # a typo fails with the list of choices, not a deep KeyError mid-load
@@ -146,10 +162,23 @@ def main(argv=None):
               f"{g.bits}b {g.codec} -> {g.effective_bits:.2f} achieved bits "
               f"(bound {g.entropy_bits:.2f}, {g.shannon_ratio:.3f}x)")
 
+    mesh = rules = None
+    if mesh_dims is not None:
+        from repro.launch import mesh as mesh_lib
+        try:
+            mesh = mesh_lib.make_serve_mesh(*mesh_dims)
+        except ValueError as e:
+            p.error(str(e))
+        rules = engine.serve_mesh_rules(cfg, mesh)
+
     load_metrics = {}
     load_kw = {}
     if args.chunk_symbols is not None:      # absent flag -> scheduler default
         load_kw["chunk_symbols"] = args.chunk_symbols
+    if mesh is not None:
+        # default placer profile: per-tensor output-channel TP (exact
+        # numerics); `rules` only steers cache/batch placement in the engines
+        load_kw["placer"] = engine.make_param_placer(cfg, mesh)
     serve_params = engine.load_params_from_compressed(
         cm, quantized=not args.no_quantized_serving,
         backend=args.decode_backend, stream=not args.no_stream,
@@ -160,6 +189,13 @@ def main(argv=None):
           f"(first weight resident after "
           f"{load_metrics['time_to_first_weight_s']*1e3:.0f}ms; "
           f"quantized residency: {not args.no_quantized_serving})")
+    if mesh is not None:
+        pb = engine.per_device_bytes(serve_params)
+        lo, hi = min(pb.values()), max(pb.values())
+        print(f"mesh {mesh_dims[0]}x{mesh_dims[1]} (data x model): weights "
+              f"placed over {len(pb)} devices, "
+              f"{lo/2**20:.1f}-{hi/2**20:.1f} MiB/device "
+              f"({sum(pb.values())/2**20:.1f} MiB total)")
 
     # slot mode pads prompts to a prefill-chunk multiple, so its cache needs
     # that much headroom; the lockstep path keeps the exact footprint
@@ -169,9 +205,9 @@ def main(argv=None):
 
     if args.batch_slots > 0:
         return _serve_continuous(cfg, serve_params, sc, args, rng,
-                                 load_metrics)
+                                 load_metrics, mesh=mesh, rules=rules)
 
-    eng = engine.Engine(cfg, serve_params, sc)
+    eng = engine.Engine(cfg, serve_params, sc, mesh=mesh, rules=rules)
     if cfg.family == "encdec":
         prompt = {
             "tokens": jnp.asarray(rng.integers(0, cfg.vocab,
@@ -195,7 +231,8 @@ def main(argv=None):
     return 0
 
 
-def _serve_continuous(cfg, serve_params, sc, args, rng, load_metrics):
+def _serve_continuous(cfg, serve_params, sc, args, rng, load_metrics,
+                      mesh=None, rules=None):
     """--batch-slots path: slot-batched serving of independent requests."""
     import numpy as np
     from repro.serving.batching import (ContinuousEngine, QueueFullError,
@@ -203,7 +240,8 @@ def _serve_continuous(cfg, serve_params, sc, args, rng, load_metrics):
 
     ce = ContinuousEngine(cfg, serve_params, sc, n_slots=args.batch_slots,
                           max_queue=args.max_queue,
-                          prefill_chunk=args.prefill_chunk)
+                          prefill_chunk=args.prefill_chunk,
+                          mesh=mesh, rules=rules)
     n = args.traffic if args.traffic > 0 else args.batch
     shed = 0
     t0 = time.monotonic()

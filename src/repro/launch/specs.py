@@ -136,18 +136,11 @@ def _install_contexts(cfg: ArchConfig, mesh: Mesh, *, batch_sharded: bool,
         seq_sp=cfg.family != "hybrid"))
 
 
-def _kv_divisible(cfg: ArchConfig, mesh: Mesh) -> bool:
-    m = mesh.shape.get("model", 1)
-    return bool(cfg.n_kv_heads) and cfg.n_kv_heads % m == 0
-
-
-def _arch_rules(cfg: ArchConfig, mesh: Mesh, base: shd.Rules) -> shd.Rules:
-    """KV weight columns shard over model only when whole KV heads divide the
-    axis; otherwise wk/wv stay replicated over model (Megatron GQA practice —
-    splitting inside a head produces degenerate reshape shardings)."""
-    table = dict(base.table)
-    table["kv"] = "model" if _kv_divisible(cfg, mesh) else None
-    return shd.Rules(table)
+# KV-head-aware rule adjustment now lives with the other rule machinery in
+# distributed/sharding.py (the serving engines need it without importing the
+# launch layer); these aliases keep the cell builders reading as before.
+_kv_divisible = shd.kv_divisible
+_arch_rules = shd.arch_rules
 
 
 def clear_contexts() -> None:

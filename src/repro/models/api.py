@@ -47,6 +47,17 @@ def supports_continuous_batching(cfg: ArchConfig) -> bool:
     return hasattr(build(cfg), "prefill_chunk")
 
 
+def cache_specs(cfg: ArchConfig, **kw) -> Dict[str, Tuple]:
+    """Family ``cache_specs`` with kwarg filtering: callers pass the full
+    option set (``layout="slot"``, ``kv_bits=8``, ...) and families that do
+    not take an option simply don't see it — the sharding layer can resolve
+    any family's cache without per-family dispatch."""
+    import inspect
+    fn = build(cfg).cache_specs
+    accepted = inspect.signature(fn).parameters
+    return fn(cfg, **{k: v for k, v in kw.items() if k in accepted})
+
+
 def param_shapes(cfg: ArchConfig) -> Dict[str, Tuple[int, ...]]:
     return {n: s.shape for n, s in build(cfg).schema(cfg).items()}
 

@@ -118,7 +118,21 @@ def _ste_deq_bwd(_, g):
 _ste_deq.defvjp(_ste_deq_fwd, _ste_deq_bwd)
 
 
+def gather_weight(w: Any) -> Any:
+    """Exact sharded serving: all-gather a HBM-sharded weight (or each part
+    of a QT/QT4/QTG triple) at its use site.  Identity unless ``exact_tp``
+    serving hints are installed (training / single-device paths unchanged)."""
+    from repro.distributed.ctx import constrain_replicated, get_hints
+    h = get_hints()
+    if h is None or not h.exact_tp:
+        return w
+    if isinstance(w, (QT, QT4, QTG)):
+        return type(w)(*(constrain_replicated(p) for p in w))
+    return constrain_replicated(w)
+
+
 def deq(w: Any, dtype=jnp.bfloat16) -> jax.Array:
+    w = gather_weight(w)
     if isinstance(w, QT):
         return w.q.astype(dtype) * w.scale.astype(dtype) + w.zero.astype(dtype)
     if isinstance(w, QT4):
@@ -130,7 +144,12 @@ def deq(w: Any, dtype=jnp.bfloat16) -> jax.Array:
 
 
 def matmul(x: jax.Array, w: Any, dim_nums: Optional[str] = None) -> jax.Array:
-    """x @ w with on-the-fly dequantization (fused by XLA into the dot)."""
+    """x @ w with on-the-fly dequantization (fused by XLA into the dot).
+
+    Under exact-TP serving hints ``deq`` all-gathers the HBM-sharded weight
+    first, so the dot reads a full-shape buffer and rounds exactly like the
+    single-device program (sharded residency, replicated compute).
+    """
     wd = deq(w, x.dtype)
     if dim_nums is None:
         return x @ wd
@@ -139,6 +158,7 @@ def matmul(x: jax.Array, w: Any, dim_nums: Optional[str] = None) -> jax.Array:
 
 def take_rows(w: Any, idx: jax.Array) -> jax.Array:
     """Embedding lookup honoring quantized tables (dequantize only gathered rows)."""
+    w = gather_weight(w)
     if isinstance(w, QTG):
         rows = jnp.take(w.q, idx, axis=0)
         master_rows = jnp.take(w.master, idx, axis=0)

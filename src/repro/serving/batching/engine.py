@@ -86,6 +86,7 @@ class ContinuousEngine:
     def __init__(self, cfg: ArchConfig, params: Dict[str, Any],
                  sc: ServeConfig, *, n_slots: int = 8, max_queue: int = 64,
                  prefill_chunk: int = 32, admit_chunks_per_step: int = 4,
+                 mesh=None, rules=None,
                  steps: Optional[ServeSteps] = None):
         if not api.supports_continuous_batching(cfg):
             raise NotImplementedError(
@@ -115,8 +116,18 @@ class ContinuousEngine:
         self.cfg = cfg
         self.params = params
         self.sc = sc
-        self.steps = steps if steps is not None else ServeSteps(cfg, sc)
+        self.steps = steps if steps is not None else \
+            ServeSteps(cfg, sc, mesh=mesh, rules=rules)
         self.slots = SlotBatchManager(cfg, n_slots, sc.max_len)
+        if self.steps.mesh is not None:
+            # the resident slot pool lives sharded on the serve mesh ("slot"
+            # resolves like lockstep batch rows — serve_rules); the donating
+            # _splice/_zero_slot helpers then keep that placement step over
+            # step, and scratch prefill caches (batch 1, unshardable) splice
+            # in through GSPMD without ever re-laying-out the pool
+            self.slots.cache = jax.device_put(
+                self.slots.cache,
+                self.steps.cache_shardings(n_slots, layout="slot"))
         self.queue = RequestQueue(max_queue)
         self.prefill_chunk = prefill_chunk
         self.admit_chunks_per_step = admit_chunks_per_step

@@ -49,12 +49,69 @@ class ServeConfig:
     quantized_weights: bool = True     # keep QT triples in HBM (EntroLLM mode)
 
 
+def serve_mesh_rules(cfg: ArchConfig, mesh) -> "Any":
+    """The default rule profile for the multi-device serving path: serve
+    rules (weights TP over model + FSDP over data, cache batch/slot over
+    data) with the KV-head divisibility adjustment."""
+    from repro.distributed import sharding as shd
+    return shd.arch_rules(cfg, mesh, shd.serve_rules(mesh))
+
+
+def make_param_placer(cfg: ArchConfig, mesh, rules=None) -> Callable:
+    """``(name, host_value) -> placed device value`` for the streaming load.
+
+    Each decoded tensor is ``jax.device_put`` onto the serve mesh the moment
+    it leaves the decoder — placement overlaps the prefetch-decode of the
+    next chunk exactly like the single-device transfer did, so sharded
+    serving keeps the bounded-host-memory property of the streaming loader.
+    QT/QT4 triples get consistent q/scale/zero shardings
+    (:func:`repro.distributed.sharding.leaf_shardings`); names the schema
+    does not know replicate.
+
+    Default layout (``rules=None``): per-tensor output-channel TP
+    (:func:`repro.distributed.sharding.serve_tp_table`) for the families the
+    exact-TP serving constraints cover (dense, moe) — the bit-identical
+    profile the multi-device suite asserts; other families keep weights
+    replicated (batch/cache still shard over data).  Pass an explicit
+    ``rules`` profile to override both.
+    """
+    from repro.distributed import sharding as shd
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    axes = api.param_specs(cfg)
+    exact_tp = rules is None and cfg.family in ("dense", "moe")
+    replicate_all = shd.Rules({})
+    rep = NamedSharding(mesh, P())
+
+    def place(name: str, val: Any) -> Any:
+        if name in axes:
+            r = (shd.serve_tp_table(cfg, mesh, axes[name]) if exact_tp
+                 else (rules if rules is not None else replicate_all))
+            sh = shd.leaf_shardings(axes[name], val, r, mesh)
+        else:
+            sh = jax.tree.map(lambda _: rep, val)
+        return jax.device_put(val, sh)
+
+    return place
+
+
+def per_device_bytes(tree) -> Dict[str, int]:
+    """Resident bytes per device for a placed pytree (the sharded-serving
+    analogue of the paper's weight-footprint accounting)."""
+    out: Dict[str, int] = {}
+    for leaf in jax.tree.leaves(tree):
+        for sh in getattr(leaf, "addressable_shards", ()):
+            key = str(sh.device)
+            out[key] = out.get(key, 0) + sh.data.nbytes
+    return out
+
+
 def load_params_from_compressed(model: CompressedModel, *,
                                 quantized: bool = True,
                                 pack_int4: bool = True,
                                 backend: Optional[str] = None,
                                 chunk_symbols: Optional[int] = _DEFAULT_CHUNK,
                                 stream: bool = True,
+                                placer: Optional[Callable] = None,
                                 metrics: Optional[dict] = None) -> Dict[str, Any]:
     """Decode the container into serving weights, streaming by default.
 
@@ -72,6 +129,11 @@ def load_params_from_compressed(model: CompressedModel, *,
     ``backend`` is a decoder-registry name (``numpy`` / ``jax`` / ``pallas``
     / ``pallas-interpret``; None = auto) and is honored on both paths.
 
+    ``placer`` overrides how a decoded host tensor becomes a device tensor:
+    ``(name, host_value) -> device value`` — :func:`make_param_placer` builds
+    the multi-device one (``jax.device_put`` with the serve-rule shardings at
+    load-stream time); the default is a plain single-device transfer.
+
     When a ``metrics`` dict is passed it is filled with
     ``time_to_first_weight_s`` (start -> first decoded tensor resident),
     ``decode_load_s`` (total), and the resolved ``decode_backend`` name.
@@ -81,6 +143,8 @@ def load_params_from_compressed(model: CompressedModel, *,
     t0 = time.perf_counter()
     ttfw: Optional[float] = None
     resolved = get_backend(backend)
+    place = placer if placer is not None else \
+        (lambda _name, v: jax.tree.map(jnp.asarray, v))
 
     if stream:
         kw = dict(backend=resolved, first=("embed",),
@@ -95,7 +159,7 @@ def load_params_from_compressed(model: CompressedModel, *,
     out: Dict[str, Any] = {}
     if quantized:
         for k, v in model.unquantized.items():
-            out[k] = jnp.asarray(v)
+            out[k] = place(k, v)
     for name, val in pairs:
         if quantized and name in model.qmeta:
             q, scale, zero = val
@@ -108,16 +172,16 @@ def load_params_from_compressed(model: CompressedModel, *,
                 #   explicit spec rule) — model layers consume plain arrays;
                 # * per-group quantization — the (…, D/group, 1) scale does
                 #   not broadcast against the (…, D) weight in the kernels.
-                out[name] = jnp.asarray(model._dequantize_one(name, q))
+                out[name] = place(name, model._dequantize_one(name, q))
             elif bits == 4 and pack_int4 and q.shape[-1] % 2 == 0:
                 packed = (q[..., 0::2] | (q[..., 1::2] << 4)).astype(np.uint8)
-                out[name] = QT4(jnp.asarray(packed), jnp.asarray(scale),
-                                jnp.asarray(zero))
+                out[name] = place(name, QT4(packed, np.asarray(scale),
+                                            np.asarray(zero)))
             else:
-                out[name] = QT(jnp.asarray(q), jnp.asarray(scale),
-                               jnp.asarray(zero))
+                out[name] = place(name, QT(np.asarray(q), np.asarray(scale),
+                                           np.asarray(zero)))
         else:
-            out[name] = jnp.asarray(val)
+            out[name] = place(name, val)
         if ttfw is None:
             jax.block_until_ready(jax.tree.leaves(out[name]))
             ttfw = time.perf_counter() - t0
@@ -146,18 +210,35 @@ class ServeSteps:
     never drift numerically and a model warm in one is warm in the other.
     ``decode_fn`` accepts ``pos`` as a scalar (lockstep) or a ``(B,)`` array
     (per-slot ragged positions) — same callable, two traced shapes.
+
+    Multi-device: pass ``mesh`` (and optionally ``rules``) and the steps
+    carry the serve sharding profile — engines call :meth:`cache_shardings`
+    to pin their KV cache (lockstep batch layout or the continuous-batching
+    slot pool) onto the mesh; params arrive already placed by the streaming
+    loader (:func:`make_param_placer`), and GSPMD propagates the
+    tensor-parallel layout through the jitted steps from the operand
+    shardings alone.
     """
 
     def __init__(self, cfg: ArchConfig, sc: ServeConfig,
-                 *, shardings: Optional[dict] = None):
+                 *, shardings: Optional[dict] = None,
+                 mesh=None, rules=None):
         self.cfg = cfg
         self.sc = sc
         self.mod = api.build(cfg)
+        self.mesh = mesh
+        self.rules = None
+        self._cache_shardings_memo: dict = {}
+        if mesh is not None:
+            self.rules = rules if rules is not None \
+                else serve_mesh_rules(cfg, mesh)
 
         kw = {}
         if shardings:
             kw["in_shardings"] = shardings.get("in")
             kw["out_shardings"] = shardings.get("out")
+
+        scoped = self._scoped_tracer()
 
         def _prefill(params, prompt):
             return self.mod.prefill(cfg, params, prompt, max_len=sc.max_len,
@@ -167,15 +248,62 @@ class ServeSteps:
             return self.mod.decode_step(cfg, params, token, cache, pos,
                                         unroll=sc.unroll)
 
-        self.prefill_fn = jax.jit(_prefill, **kw)
-        self.decode_fn = jax.jit(_decode, donate_argnums=(2,))
+        self.prefill_fn = jax.jit(scoped(_prefill), **kw)
+        self.decode_fn = jax.jit(scoped(_decode), donate_argnums=(2,))
         self.prefill_chunk_fn = None
         if hasattr(self.mod, "prefill_chunk"):
             def _chunk(params, tokens, cache, pos):
                 return self.mod.prefill_chunk(cfg, params, tokens, cache, pos,
                                               unroll=sc.unroll)
 
-            self.prefill_chunk_fn = jax.jit(_chunk, donate_argnums=(2,))
+            self.prefill_chunk_fn = jax.jit(scoped(_chunk), donate_argnums=(2,))
+
+    def _scoped_tracer(self) -> Callable:
+        """Identity on one device.  With a mesh: wrap each step body so its
+        TRACE runs under the ambient mesh + exact-TP sharding hints — the
+        model's ``constrain_replicated``/``constrain_heads`` hooks fire only
+        inside these closures, and the process-global hints are restored
+        afterwards so co-resident training/lowering traces never see them."""
+        if self.mesh is None:
+            return lambda fn: fn
+        from repro.distributed.ctx import ShardingHints, get_hints, set_hints
+        # exact profile: weights gathered at use (layers.gather_weight), NO
+        # activation constraints — every compute op keeps reference shapes,
+        # which is what makes sharded greedy decode bit-identical
+        hints = ShardingHints(
+            mesh=self.mesh, batch_axes=(), model_axis=None,
+            kv_seq_axes=(), seq_sp=False, exact_tp=True)
+
+        def scoped(fn):
+            def run(*args):
+                prev = get_hints()
+                set_hints(hints)
+                try:
+                    # no ambient-mesh context needed: every constraint the
+                    # hints drive builds an explicit NamedSharding from
+                    # hints.mesh (works on 0.4.x and new jax alike)
+                    return fn(*args)
+                finally:
+                    set_hints(prev)
+            return run
+
+        return scoped
+
+    def cache_shardings(self, batch: int, *, layout: str = "batch",
+                        **cache_kw) -> Optional[dict]:
+        """NamedShardings for this config's cache pytree on the serve mesh
+        (None when the steps are single-device).  Memoized — resolution runs
+        an eval_shape trace of the cache, and ``Engine.generate`` asks once
+        per call on the serving hot path."""
+        if self.mesh is None:
+            return None
+        key = (batch, layout, tuple(sorted(cache_kw.items())))
+        if key not in self._cache_shardings_memo:
+            from repro.distributed import sharding as shd
+            self._cache_shardings_memo[key] = shd.cache_shardings(
+                self.cfg, self.mesh, self.rules, batch, self.sc.max_len,
+                layout=layout, **cache_kw)
+        return self._cache_shardings_memo[key]
 
 
 class Engine:
@@ -189,12 +317,13 @@ class Engine:
 
     def __init__(self, cfg: ArchConfig, params: Dict[str, Any], sc: ServeConfig,
                  *, shardings: Optional[dict] = None,
+                 mesh=None, rules=None,
                  steps: Optional[ServeSteps] = None):
         self.cfg = cfg
         self.params = params
         self.sc = sc
         self.steps = steps if steps is not None else \
-            ServeSteps(cfg, sc, shardings=shardings)
+            ServeSteps(cfg, sc, shardings=shardings, mesh=mesh, rules=rules)
         self.mod = self.steps.mod
         self.prefill_fn = self.steps.prefill_fn      # backwards-compat aliases
         self.decode_fn = self.steps.decode_fn
@@ -213,6 +342,11 @@ class Engine:
             B = prompt["tokens"].shape[0]
         else:
             B, S = prompt.shape
+        if self.steps.mesh is not None:
+            # pin the cache layout once per generate: propagation out of
+            # prefill is free to pick any layout, the decode loop then runs
+            # against the deterministic serve-rule shardings
+            cache = jax.device_put(cache, self.steps.cache_shardings(B))
         toks = []
         # one fresh split per sampled token, including token 0 — sampling the
         # first token from the parent key and then re-splitting that same key

@@ -1,0 +1,17 @@
+"""Session-wide test environment.
+
+Force 8 host-platform CPU devices BEFORE jax initializes its backend, so the
+multi-device suite (``tests/test_sharded_serving.py``) runs under plain
+``pytest`` with no special invocation.  The flag only takes effect at first
+backend init; conftest imports before any test module, which is early enough.
+An operator-provided device count (XLA_FLAGS already naming the option) wins.
+
+Single-device tests are unaffected: jit without shardings still places
+everything on device 0, exactly as on a one-device host.
+"""
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = \
+        (_flags + " --xla_force_host_platform_device_count=8").strip()

@@ -153,8 +153,8 @@ def test_elastic_reshard_restore():
     """Restore a checkpoint onto a different device layout (1-dev host mesh)."""
     from repro.checkpoint.checkpointer import Checkpointer, CheckpointConfig
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch import mesh as mesh_lib
+    mesh = mesh_lib.make_mesh((1, 1), ("data", "model"))
     tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
     with tempfile.TemporaryDirectory() as d:
         ck = Checkpointer(CheckpointConfig(root=d))

@@ -1,0 +1,151 @@
+"""Multi-device tensor-parallel serving of compressed weights.
+
+Runs on 8 forced host-platform CPU devices (tests/conftest.py sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for the whole
+session).  Three contracts:
+
+* **placement** — the streaming loader's ``make_param_placer`` lands every
+  QT/QT4 leaf with *consistent* q/scale/zero shardings (scale follows q's
+  output-channel axes wherever sizes line up, size-1 broadcast dims
+  replicate) and actually distributes bytes across the mesh;
+* **numerics** — greedy decode through the sharded engine is bit-identical
+  (token-for-token) to the single-device engine, dense AND moe;
+* **slot pool** — the continuous-batching engine's resident cache lands with
+  the ``layout="slot"`` shardings and serves requests identically to its
+  single-device twin.
+"""
+import os
+
+# Standalone safety: when this file is run outside the repo conftest the flag
+# must still be set before jax's backend initializes.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = \
+        (_flags + " --xla_force_host_platform_device_count=8").strip()
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core.quant import Granularity
+from repro.core.store import CompressedModel
+from repro.distributed import sharding as shd
+from repro.launch import mesh as mesh_lib
+from repro.models import api
+from repro.models.layers import QT, QT4
+from repro.serving import engine
+
+needs8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 devices (XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+def _compressed(arch: str, bits: int = 8):
+    cfg = registry.reduced(registry.get(arch))
+    mod = api.build(cfg)
+    params = mod.init(cfg, jax.random.PRNGKey(0))
+    host = {k: np.asarray(v, np.float32) for k, v in params.items()}
+    return cfg, CompressedModel.compress(host, bits=bits,
+                                         granularity=Granularity.PER_CHANNEL)
+
+
+@pytest.fixture(scope="module")
+def dense_cm():
+    return _compressed("qwen3-1.7b")
+
+
+@pytest.fixture(scope="module")
+def moe_cm():
+    return _compressed("qwen2-moe-a2.7b")
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return mesh_lib.make_serve_mesh(2, 4)
+
+
+def _spec_entries(sharding, ndim):
+    e = list(sharding.spec)
+    return e + [None] * (ndim - len(e))
+
+
+@needs8
+def test_qt_leaves_land_consistently_sharded(dense_cm, mesh):
+    cfg, cm = dense_cm
+    params = engine.load_params_from_compressed(
+        cm, quantized=True, placer=engine.make_param_placer(cfg, mesh))
+    qt_leaves = {n: v for n, v in params.items() if isinstance(v, (QT, QT4))}
+    assert qt_leaves, "8-bit container must produce QT residency"
+    model_sharded = 0
+    for name, qt in qt_leaves.items():
+        # committed on the serve mesh
+        for part in qt:
+            assert set(part.sharding.device_set) <= set(mesh.devices.flat), name
+        qe = _spec_entries(qt.q.sharding, qt.q.ndim)
+        for part in (qt.scale, qt.zero):
+            pe = _spec_entries(part.sharding, part.ndim)
+            for dim, (size, got, want) in enumerate(
+                    zip(part.shape, pe, qe)):
+                if size == 1:
+                    assert got is None, (name, dim, got)
+                else:
+                    assert got == want, \
+                        f"{name} dim {dim}: scale/zero sharded {got}, q {want}"
+        if any("model" in ((e,) if isinstance(e, str) else (e or ()))
+               for e in qe):
+            model_sharded += 1
+    assert model_sharded, "no QT leaf sharded over the model axis"
+    # the placement actually spreads bytes: every device holds a strict
+    # subset of the total
+    pb = engine.per_device_bytes(params)
+    assert len(pb) == 8
+    assert max(pb.values()) < sum(pb.values())
+
+
+@needs8
+@pytest.mark.parametrize("fixture", ["dense_cm", "moe_cm"])
+def test_sharded_greedy_decode_bit_identical(fixture, mesh, request):
+    cfg, cm = request.getfixturevalue(fixture)
+    sc = engine.ServeConfig(max_len=24, temperature=0.0)
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (4, 8), 0, cfg.vocab)
+
+    ref_params = engine.load_params_from_compressed(cm, quantized=True)
+    ref = engine.Engine(cfg, ref_params, sc).generate(prompt, 10)
+
+    sh_params = engine.load_params_from_compressed(
+        cm, quantized=True, placer=engine.make_param_placer(cfg, mesh))
+    out = engine.Engine(cfg, sh_params, sc, mesh=mesh).generate(prompt, 10)
+
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+
+@needs8
+def test_continuous_engine_slot_cache_sharded_and_identical(dense_cm, mesh):
+    from repro.serving.batching import ContinuousEngine
+    cfg, cm = dense_cm
+    sc = engine.ServeConfig(max_len=32, temperature=0.0)
+    sh_params = engine.load_params_from_compressed(
+        cm, quantized=True, placer=engine.make_param_placer(cfg, mesh))
+    ce = ContinuousEngine(cfg, sh_params, sc, n_slots=4, prefill_chunk=8,
+                          mesh=mesh)
+    want = shd.cache_shardings(cfg, mesh, engine.serve_mesh_rules(cfg, mesh),
+                               4, sc.max_len, layout="slot")
+    for k, leaf in ce.slots.cache.items():
+        assert leaf.sharding.is_equivalent_to(want[k], leaf.ndim), k
+        # slot axis (dim 1) of the resident pool is data-sharded
+        assert _spec_entries(leaf.sharding, leaf.ndim)[1] is not None, k
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, (int(n),)).astype(np.int32)
+               for n in (5, 8, 3)]
+    reqs = [ce.submit(p, 6) for p in prompts]
+    ce.run()
+
+    # single-device lockstep reference, one request at a time
+    ref_params = engine.load_params_from_compressed(cm, quantized=True)
+    ref_eng = engine.Engine(cfg, ref_params, sc)
+    for p, req in zip(prompts, reqs):
+        ref = ref_eng.generate(jnp.asarray(p)[None, :], 6)
+        assert req.output == list(np.asarray(ref)[0]), req.rid
