@@ -1,0 +1,135 @@
+"""Compressed-resident vs dense-resident serving: resident bytes vs tok/s.
+
+The paper's Table 2 argument is a bandwidth-vs-compute tradeoff: keeping
+weights entropy-coded in memory moves fewer bytes per layer but spends
+decode work per inference step.  This harness makes that tradeoff measurable
+on a CPU host by serving the SAME container through three residency modes:
+
+  bf16        — dense fp32/bf16 weights (the no-compression baseline;
+                resident bytes only, no timing row of its own)
+  dense-QT    — decode once at load, QT triples resident in HBM, dequant
+                fused into the matmuls (the default engine)
+  compressed  — the container stays entropy-coded; each layer's QT triples
+                are decoded just before its matmuls, double-buffered against
+                the previous layer's compute (docs/SERVING.md
+                §"Compressed-resident serving")
+
+One row per mode: peak resident weight bytes, decode tok/s, e2e tok/s.
+Asserted on every run: greedy tokens are bit-identical across the modes,
+and the compressed mode's peak resident bytes stay strictly below the
+dense bf16 footprint.
+
+The container is compressed with ``segment_symbols`` small enough that a
+layer slice spans many segments — per-layer decode parallelism (lock-step
+lanes) is ``chunk_symbols / segment_symbols``, so the paper-default 64k
+segments would leave the tiny CPU config lane-starved.
+
+Usage:  PYTHONPATH=src python -m benchmarks.resident_serving [--quick]
+        (or `python -m benchmarks.run resident`)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _fmt_bytes(n: float) -> str:
+    return f"{n / 2**20:.2f} MiB"
+
+
+def run(arch: str = "qwen3-1.7b", bits: int = 8, batch: int = 2,
+        prompt_len: int = 16, gen: int = 16, segment_symbols: int = 1024,
+        chunk_symbols: int = 64 * 1024) -> dict:
+    import jax
+    import numpy as np
+    from repro.configs import registry
+    from repro.core.quant import Granularity
+    from repro.core.spec import spec_from_legacy
+    from repro.core.store import CompressedModel
+    from repro.models import api
+    from repro.serving import engine
+    from repro.serving.resident import CompressedResidentWeights
+
+    cfg = registry.reduced(registry.get(arch))
+    mod = api.build(cfg)
+    params = mod.init(cfg, jax.random.PRNGKey(0))
+    host = {k: np.asarray(v, np.float32) for k, v in params.items()}
+    cm = CompressedModel.compress(host, spec=spec_from_legacy(
+        bits, Granularity.PER_CHANNEL, segment_symbols=segment_symbols))
+
+    sc = engine.ServeConfig(max_len=prompt_len + gen)
+    prompt = np.random.default_rng(0).integers(
+        0, cfg.vocab, (batch, prompt_len)).astype(np.int32)
+
+    weights = CompressedResidentWeights(cm, cfg,
+                                        chunk_symbols=chunk_symbols)
+    bf16 = weights.dense_bf16_bytes()
+    modes = {
+        "dense-QT": dict(
+            params=engine.load_params_from_compressed(cm, quantized=True),
+            resident="dense", bytes=weights.dense_resident_bytes()),
+        "compressed": dict(
+            params=weights, resident="compressed",
+            bytes=weights.peak_resident_bytes()),
+    }
+
+    print(f"{cfg.name}: {bits}b {cm.stats().effective_bits:.2f} effective "
+          f"bits; dense bf16 footprint {_fmt_bytes(bf16)}")
+    print(f"{'mode':12s} {'resident weights':>18s} {'vs bf16':>8s} "
+          f"{'decode tok/s':>13s} {'e2e tok/s':>10s}")
+    print(f"{'bf16':12s} {_fmt_bytes(bf16):>18s} {'1.00x':>8s} "
+          f"{'-':>13s} {'-':>10s}")
+
+    results: dict = {"bf16_bytes": bf16}
+    outs = {}
+    for mode, m in modes.items():
+        eng = engine.Engine(cfg, m["params"], sc, resident=m["resident"])
+        out, metrics = eng.generate(prompt, gen, echo_metrics=True)
+        outs[mode] = np.asarray(out)
+        results[mode] = dict(
+            resident_bytes=m["bytes"],
+            decode_tok_per_s=metrics["decode_tok_per_s"],
+            e2e_tok_per_s=metrics["e2e_tok_per_s"])
+        print(f"{mode:12s} {_fmt_bytes(m['bytes']):>18s} "
+              f"{m['bytes'] / bf16:>7.2f}x "
+              f"{metrics['decode_tok_per_s']:>13.1f} "
+              f"{metrics['e2e_tok_per_s']:>10.1f}")
+
+    assert np.array_equal(outs["dense-QT"], outs["compressed"]), \
+        "compressed-resident greedy decode must be bit-identical to dense"
+    print(f"greedy bit-identity: OK ({outs['dense-QT'].shape[0]}x"
+          f"{outs['dense-QT'].shape[1]} tokens)")
+    peak = results["compressed"]["resident_bytes"]
+    assert peak < bf16, (
+        f"compressed-resident peak {peak} must stay below the dense bf16 "
+        f"footprint {bf16}")
+    rb = weights.resident_bytes()
+    print(f"compressed peak breakdown: payload {_fmt_bytes(rb['payload'])} "
+          f"+ tables/qmeta {_fmt_bytes(rb['tables'] + rb['qmeta'])} "
+          f"+ globals {_fmt_bytes(rb['globals'] + rb['stacked'])} "
+          f"+ 2x layer slot {_fmt_bytes(rb['layer_slot'])} "
+          f"+ scratch {_fmt_bytes(rb['scratch'])}")
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--bits", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--segment-symbols", type=int, default=1024)
+    ap.add_argument("--chunk-symbols", type=int, default=64 * 1024)
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes for CI smoke")
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.prompt_len, args.gen, args.batch = 8, 6, 1
+    run(args.arch, args.bits, args.batch, args.prompt_len, args.gen,
+        args.segment_symbols, args.chunk_symbols)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

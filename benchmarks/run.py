@@ -6,6 +6,8 @@
   streaming — monolithic vs streamed weight decode (load-path of Table II)
   traffic — continuous batching vs lockstep under Poisson arrivals
   sharded — multi-device sharded residency vs single-device (bit-identity)
+  resident — compressed-resident vs dense-resident serving (Table II's
+             bandwidth-vs-compute tradeoff: resident bytes vs tok/s)
   roofline — render §Roofline from dry-run JSON (if present)
 
 ``python -m benchmarks.run [name ...]`` runs all by default.
@@ -19,7 +21,7 @@ import sys
 def main(argv=None) -> int:
     which = (argv or sys.argv[1:]) or ["table1", "table2", "decode",
                                        "streaming", "traffic", "sharded",
-                                       "roofline"]
+                                       "resident", "roofline"]
     from . import (decode_streaming, decode_throughput, table1_storage,
                    table2_latency)
 
@@ -56,6 +58,11 @@ def main(argv=None) -> int:
             print(f"(skip sharded: {e} — run it standalone: "
                   f"XLA_FLAGS=--xla_force_host_platform_device_count=8 "
                   f"python -m benchmarks.sharded_serving)")
+        print()
+    if "resident" in which:
+        print("== Compressed-resident vs dense-resident serving ==")
+        from . import resident_serving
+        resident_serving.run()
         print()
     if "roofline" in which:
         path = "results/dryrun_baseline.json"

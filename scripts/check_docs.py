@@ -1,0 +1,137 @@
+#!/usr/bin/env python
+"""Docs consistency checks (the CI ``docs-check`` job).
+
+Two gates, no dependencies beyond the stdlib:
+
+1. **Markdown link check** — every relative link in README.md, DESIGN.md,
+   EXPERIMENTS.md, PAPER.md, PAPERS.md, docs/*.md, and benchmarks/README.md
+   must resolve to an existing file, and a ``#fragment`` into a markdown
+   file must match one of its headings (GitHub slug rules).
+
+2. **§-reference audit** — every ``§`` reference in ``src/repro/serving/``
+   and ``src/repro/core/scheduler.py`` must resolve to a real section:
+
+   * ``§"Some Title"``         -> a heading of docs/ARCHITECTURE.md,
+                                  docs/SERVING.md, or DESIGN.md containing
+                                  the quoted title;
+   * ``ARCHITECTURE[.md] §N``  -> the ``## N.`` section of ARCHITECTURE.md;
+   * ``§N`` / ``DESIGN §N``    -> the ``## §N`` numbered design note;
+   * ``§IV`` / ``§III-C`` ...  -> roman numerals are PAPER sections, exempt
+                                  (the paper is not a repo file).
+
+Run:  python scripts/check_docs.py        (exit 1 on any failure)
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+LINK_DOCS = ["README.md", "DESIGN.md", "EXPERIMENTS.md", "PAPER.md",
+             "PAPERS.md", "benchmarks/README.md"]
+SECTION_DOCS = ["docs/ARCHITECTURE.md", "docs/SERVING.md", "DESIGN.md"]
+AUDIT_GLOBS = ["src/repro/serving/**/*.py", "src/repro/core/scheduler.py"]
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^(#{1,6})\s+(.*?)\s*$", re.M)
+_QUOTED_REF = re.compile(r"§\\?\"([^\"\\]+)\\?\"")
+_NUM_REF = re.compile(r"§\s*(\d+)")
+_ROMAN_REF = re.compile(r"§\s*[IVX]+(?:-[A-Z])?\b")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, spaces -> hyphens, drop the rest."""
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def headings(path: Path) -> list[str]:
+    return [m.group(2) for m in _HEADING.finditer(path.read_text())]
+
+
+def check_links() -> list[str]:
+    errors: list[str] = []
+    docs = [ROOT / d for d in LINK_DOCS] + sorted((ROOT / "docs").glob("*.md"))
+    for doc in docs:
+        if not doc.exists():
+            continue
+        for m in _LINK.finditer(doc.read_text()):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, frag = target.partition("#")
+            dest = (doc.parent / path_part).resolve() if path_part \
+                else doc.resolve()
+            rel = doc.relative_to(ROOT)
+            if not dest.exists():
+                errors.append(f"{rel}: broken link -> {target}")
+                continue
+            if frag and dest.suffix == ".md":
+                slugs = {github_slug(h) for h in headings(dest)}
+                if frag not in slugs:
+                    errors.append(f"{rel}: dead anchor -> {target}")
+    return errors
+
+
+def check_section_refs() -> list[str]:
+    arch, serving, design = (ROOT / p for p in SECTION_DOCS)
+    all_headings = [h for p in (arch, serving, design) if p.exists()
+                    for h in headings(p)]
+    arch_nums = {m.group(1) for m in
+                 re.finditer(r"^##\s+(\d+)\.", arch.read_text(), re.M)}
+    design_nums = {m.group(1) for m in
+                   re.finditer(r"^##\s+§(\d+)", design.read_text(), re.M)}
+
+    errors: list[str] = []
+    files: list[Path] = []
+    for g in AUDIT_GLOBS:
+        files.extend(sorted(ROOT.glob(g)))
+    for f in files:
+        rel = f.relative_to(ROOT)
+        lines = f.read_text().splitlines()
+        for i, line in enumerate(lines, 1):
+            if "§" not in line:
+                continue
+            # a wrapped docstring can put the doc name at the end of the
+            # PREVIOUS line ("...see ARCHITECTURE.md\n§6 ..."), so the
+            # doc-name context window spans both lines; quoted titles may
+            # not wrap (the regex is line-local by design — keep §"..."
+            # on one line)
+            context = (lines[i - 2] + " " + line) if i > 1 else line
+            for m in _QUOTED_REF.finditer(line):
+                title = m.group(1)
+                if not any(title in h for h in all_headings):
+                    errors.append(
+                        f"{rel}:{i}: §\"{title}\" matches no heading of "
+                        f"{', '.join(SECTION_DOCS)}")
+            stripped = _QUOTED_REF.sub("", line)
+            if _ROMAN_REF.search(stripped):
+                stripped = _ROMAN_REF.sub("", stripped)   # paper sections
+            for m in _NUM_REF.finditer(stripped):
+                n = m.group(1)
+                if "ARCHITECTURE" in context:
+                    if n not in arch_nums:
+                        errors.append(f"{rel}:{i}: ARCHITECTURE §{n} has no "
+                                      f"'## {n}.' section")
+                elif n not in design_nums:
+                    errors.append(f"{rel}:{i}: §{n} has no '## §{n}' note "
+                                  f"in DESIGN.md")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_section_refs()
+    for e in errors:
+        print(f"FAIL {e}")
+    if errors:
+        print(f"{len(errors)} docs-check failure(s)")
+        return 1
+    print("docs-check: links and §-references all resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

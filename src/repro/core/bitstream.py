@@ -109,18 +109,38 @@ def pack_streams(streams: Sequence[np.ndarray], *, min_width: int = 0
     return mat, lens
 
 
+def _decode_out(S: int, max_n: int, out: "np.ndarray | None") -> np.ndarray:
+    """Resolve the output buffer of a lock-step decode: allocate when ``out``
+    is None, else validate and zero a ``(S, max_n)`` view of the caller's
+    preallocated buffer (the decode-into-buffer serving path — the
+    compressed-resident per-layer decode reuses ONE scratch buffer instead of
+    allocating per layer)."""
+    if out is None:
+        return np.zeros((S, max_n), dtype=np.int32)
+    if out.dtype != np.int32 or out.shape[0] < S or out.shape[1] < max_n:
+        raise ValueError(
+            f"decode out buffer {out.dtype}{out.shape} too small for "
+            f"({S}, {max_n}) int32")
+    view = out[:S, :max_n]
+    view[:] = 0
+    return view
+
+
 def decode_streams(mat: np.ndarray, counts: np.ndarray, lut_sym: np.ndarray,
-                   lut_len: np.ndarray, max_len: int) -> np.ndarray:
+                   lut_len: np.ndarray, max_len: int, *,
+                   out: "np.ndarray | None" = None) -> np.ndarray:
     """Lock-step multi-stream LUT decode (numpy host path).
 
     mat: (S, B) uint8, each row an independent segment stream (guard-padded).
     counts: (S,) symbols per segment.  Returns (S, max(counts)) int32, rows
-    zero-padded past their count.
+    zero-padded past their count.  ``out`` (optional) is a preallocated
+    int32 buffer at least that big: symbols are written in place and the
+    trimmed view is returned (no per-call allocation).
     """
     S = mat.shape[0]
     d = np.concatenate([mat, np.zeros((S, GUARD_BYTES), np.uint8)], axis=1).astype(np.uint32)
     max_n = int(counts.max(initial=0))
-    out = np.zeros((S, max_n), dtype=np.int32)
+    out = _decode_out(S, max_n, out)
     bitpos = np.zeros(S, dtype=np.int64)
     rows = np.arange(S)
     mask = (1 << max_len) - 1
@@ -171,7 +191,8 @@ def decode_serial_tans(stream: np.ndarray, count: int, tab_sym: np.ndarray,
 
 def decode_streams_tans(mat: np.ndarray, counts: np.ndarray, tab_sym: np.ndarray,
                         tab_bits: np.ndarray, tab_base: np.ndarray,
-                        table_log: int) -> np.ndarray:
+                        table_log: int, *,
+                        out: "np.ndarray | None" = None) -> np.ndarray:
     """Lock-step multi-stream tANS decode (numpy host path).
 
     Same shape contract as :func:`decode_streams` — mat: (S, B) uint8
@@ -179,12 +200,13 @@ def decode_streams_tans(mat: np.ndarray, counts: np.ndarray, tab_sym: np.ndarray
     target is the state-indexed (symbol, nbits, base) tables and each lane
     carries its ANS state: ``sym = tab_sym[state]``, read ``tab_bits[state]``
     fresh bits ``b``, ``state' = tab_base[state] + b``.  Lanes with zero
-    counts (bucket padding) idle on state 0 harmlessly.
+    counts (bucket padding) idle on state 0 harmlessly.  ``out`` is the
+    same optional preallocated-buffer contract as :func:`decode_streams`.
     """
     S = mat.shape[0]
     d = np.concatenate([mat, np.zeros((S, GUARD_BYTES), np.uint8)], axis=1).astype(np.uint32)
     max_n = int(counts.max(initial=0))
-    out = np.zeros((S, max_n), dtype=np.int32)
+    out = _decode_out(S, max_n, out)
     rows = np.arange(S)
     st = ((d[:, 0].astype(np.int64) << 8) | d[:, 1]).astype(np.int64)
     bitpos = np.full(S, TANS_STATE_HEADER_BITS, dtype=np.int64)

@@ -47,9 +47,15 @@ class DecoderBackend:
     """A named decode implementation + its capability probes.
 
     ``fns`` maps kernel family -> callable:
-      ``fns["prefix"](mat, counts, lut_sym, lut_len, max_len, max_count)``
+      ``fns["prefix"](mat, counts, lut_sym, lut_len, max_len, max_count,
+      out=None)``
       ``fns["tans"](mat, counts, tab_sym, tab_bits, tab_base, table_log,
-      max_count)`` — both return an (S, >=max_count) int32 ndarray.
+      max_count, out=None)`` — both return an (S, >=max_count) int32 ndarray.
+    ``out`` is an optional preallocated int32 host buffer (the
+    decode-into-buffer serving contract): the numpy family decodes straight
+    into it, device-returning families (jax / pallas) copy their result into
+    it — either way the caller's buffer holds the symbols on return, so a
+    per-layer decode loop reuses one scratch allocation.
     ``probe`` answers "can this backend run here at all?" (gates by-name
     requests); ``auto_probe`` answers "should auto-pick use it here?" — e.g.
     the jit decoder runs fine on CPU but is only *preferred* when an
@@ -86,18 +92,23 @@ class DecoderBackend:
 
     def decode(self, mat: np.ndarray, counts: np.ndarray, lut_sym: np.ndarray,
                lut_len: np.ndarray, *, max_len: int,
-               max_count: Optional[int] = None) -> np.ndarray:
+               max_count: Optional[int] = None,
+               out: Optional[np.ndarray] = None) -> np.ndarray:
         """Prefix-family decode (the pre-codec-registry contract, kept for
         direct callers); codec-aware callers use :meth:`decode_table`."""
         counts = np.asarray(counts, dtype=np.int64)
         mc = int(counts.max(initial=0)) if max_count is None else int(max_count)
-        out = self.fns["prefix"](mat, counts, lut_sym, lut_len, max_len, mc)
-        return np.asarray(out)[:, :mc] if mc else np.asarray(out)
+        res = self.fns["prefix"](mat, counts, lut_sym, lut_len, max_len, mc,
+                                 out=out)
+        return np.asarray(res)[:, :mc] if mc else np.asarray(res)
 
     def decode_table(self, table, mat: np.ndarray, counts: np.ndarray, *,
-                     max_count: Optional[int] = None) -> np.ndarray:
+                     max_count: Optional[int] = None,
+                     out: Optional[np.ndarray] = None) -> np.ndarray:
         """Decode streams encoded under ``table`` (a codecs.CodeTable): the
-        table names its kernel family and supplies the gather arrays."""
+        table names its kernel family and supplies the gather arrays.
+        ``out`` is the optional decode-into-preallocated-buffer contract
+        shared by both kernel families (see the class docstring)."""
         try:
             fn = self.fns[table.kernel]
         except KeyError:
@@ -108,14 +119,14 @@ class DecoderBackend:
         mc = int(counts.max(initial=0)) if max_count is None else int(max_count)
         a = table.decode_arrays()
         if table.kernel == "prefix":
-            out = fn(mat, counts, a["lut_sym"], a["lut_len"],
-                     table.peek_bits, mc)
+            res = fn(mat, counts, a["lut_sym"], a["lut_len"],
+                     table.peek_bits, mc, out=out)
         elif table.kernel == "tans":
-            out = fn(mat, counts, a["tab_sym"], a["tab_bits"], a["tab_base"],
-                     table.table_log, mc)
+            res = fn(mat, counts, a["tab_sym"], a["tab_bits"], a["tab_base"],
+                     table.table_log, mc, out=out)
         else:
             raise RuntimeError(f"unknown kernel family {table.kernel!r}")
-        return np.asarray(out)[:, :mc] if mc else np.asarray(out)
+        return np.asarray(res)[:, :mc] if mc else np.asarray(res)
 
 
 _REGISTRY: Dict[str, DecoderBackend] = {}
@@ -162,15 +173,35 @@ def get_backend(name: Optional[str] = None) -> DecoderBackend:
     return b
 
 
+def _fill_out(out, res, rows, max_count):
+    """Decode-into-buffer fallback for kernels that return fresh (possibly
+    bucket-padded) arrays: copy the ``rows`` real streams' symbols into the
+    caller's buffer and return the written view.  Same contract — including
+    the undersized-buffer ValueError — as the numpy family's in-place path
+    (``bitstream._decode_out``); ``rows`` is the pre-bucketing stream count,
+    so bucket-padding rows are never copied and never required to fit."""
+    if out is None:
+        return res
+    if out.dtype != np.int32 or out.shape[0] < rows \
+            or out.shape[1] < max_count:
+        raise ValueError(
+            f"decode out buffer {out.dtype}{out.shape} too small for "
+            f"({rows}, {max_count}) int32")
+    res = np.asarray(res)
+    out[:rows, :max_count] = res[:rows, :max_count]
+    return out[:rows, :max_count]
+
+
 # ------------------------------------------------------------------ numpy
-def _numpy_decode(mat, counts, lut_sym, lut_len, max_len, max_count):
-    return decode_streams(mat, counts, lut_sym, lut_len, max_len)
+def _numpy_decode(mat, counts, lut_sym, lut_len, max_len, max_count,
+                  out=None):
+    return decode_streams(mat, counts, lut_sym, lut_len, max_len, out=out)
 
 
 def _numpy_decode_tans(mat, counts, tab_sym, tab_bits, tab_base, table_log,
-                       max_count):
+                       max_count, out=None):
     return decode_streams_tans(mat, counts, tab_sym, tab_bits, tab_base,
-                               table_log)
+                               table_log, out=out)
 
 
 register_backend(DecoderBackend(
@@ -190,26 +221,28 @@ def _jax_accelerated() -> bool:
     return jax.default_backend() != "cpu"
 
 
-def _jax_decode(mat, counts, lut_sym, lut_len, max_len, max_count):
+def _jax_decode(mat, counts, lut_sym, lut_len, max_len, max_count, out=None):
     import jax.numpy as jnp
     from .decode_jax import bucket_streams, decode_streams_jax
+    rows = mat.shape[0]
     mat, counts, mc = bucket_streams(mat, counts, max_count)
-    out = decode_streams_jax(jnp.asarray(mat), jnp.asarray(counts, jnp.int32),
+    res = decode_streams_jax(jnp.asarray(mat), jnp.asarray(counts, jnp.int32),
                              jnp.asarray(lut_sym), jnp.asarray(lut_len),
                              max_len=max_len, max_count=mc)
-    return np.asarray(out)
+    return _fill_out(out, res, rows, max_count)
 
 
 def _jax_decode_tans(mat, counts, tab_sym, tab_bits, tab_base, table_log,
-                     max_count):
+                     max_count, out=None):
     import jax.numpy as jnp
     from .decode_jax import bucket_streams, decode_streams_tans_jax
+    rows = mat.shape[0]
     mat, counts, mc = bucket_streams(mat, counts, max_count)
-    out = decode_streams_tans_jax(
+    res = decode_streams_tans_jax(
         jnp.asarray(mat), jnp.asarray(counts, jnp.int32),
         jnp.asarray(tab_sym), jnp.asarray(tab_bits), jnp.asarray(tab_base),
         table_log=table_log, max_count=mc)
-    return np.asarray(out)
+    return _fill_out(out, res, rows, max_count)
 
 
 register_backend(DecoderBackend(
@@ -229,21 +262,23 @@ def _pallas_supported() -> bool:
 
 
 def _pallas_decode(interpret: bool):
-    def fn(mat, counts, lut_sym, lut_len, max_len, max_count):
+    def fn(mat, counts, lut_sym, lut_len, max_len, max_count, out=None):
         import jax.numpy as jnp
         from repro.kernels.huffman_decode import decode_streams_pallas
         from .decode_jax import bucket_streams
+        rows = mat.shape[0]
         mat, counts, mc = bucket_streams(mat, counts, max_count)
-        out = decode_streams_pallas(
+        res = decode_streams_pallas(
             jnp.asarray(mat), jnp.asarray(counts, jnp.int32),
             jnp.asarray(lut_sym), jnp.asarray(lut_len),
             max_len=max_len, max_count=mc, interpret=interpret)
-        return np.asarray(out)
+        return _fill_out(out, res, rows, max_count)
     return fn
 
 
 def _pallas_decode_tans(interpret: bool):
-    def fn(mat, counts, tab_sym, tab_bits, tab_base, table_log, max_count):
+    def fn(mat, counts, tab_sym, tab_bits, tab_base, table_log, max_count,
+           out=None):
         import warnings
 
         import jax.numpy as jnp
@@ -260,14 +295,15 @@ def _pallas_decode_tans(interpret: bool):
                 "host; falling back to the jit tans decoder for this call",
                 stacklevel=2)
             return _jax_decode_tans(mat, counts, tab_sym, tab_bits, tab_base,
-                                    table_log, max_count)
+                                    table_log, max_count, out=out)
+        rows = mat.shape[0]
         mat, counts, mc = bucket_streams(mat, counts, max_count)
-        out = decode_streams_tans_pallas(
+        res = decode_streams_tans_pallas(
             jnp.asarray(mat), jnp.asarray(counts, jnp.int32),
             jnp.asarray(tab_sym), jnp.asarray(tab_bits),
             jnp.asarray(tab_base),
             table_log=table_log, max_count=mc, interpret=interpret)
-        return np.asarray(out)
+        return _fill_out(out, res, rows, max_count)
     return fn
 
 

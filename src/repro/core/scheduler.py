@@ -152,15 +152,9 @@ class DecodeScheduler:
         cur_group: Optional[str] = None
         cur_table: Optional[str] = None
         for name in self._ordered_names():
-            meta = self.model.tensors[name]
             group = self.group_key(name)
             table_id = self.model.table_id_for(name)
-            n_seg = len(meta.seg_offsets)
-            for j, (o, nb, c) in enumerate(zip(meta.seg_offsets,
-                                               meta.seg_nbytes,
-                                               meta.seg_counts)):
-                seg = _Seg(tensor=name, index=j, is_last=(j == n_seg - 1),
-                           offset=int(o), nbytes=int(nb), count=int(c))
+            for seg in tensor_segments(self.model, name):
                 boundary = cur and (
                     table_id != cur_table
                     or (budget is not None and (
@@ -180,16 +174,10 @@ class DecodeScheduler:
     # ---------------------------------------------------------------- decode
     def _decode_chunk(self, chunk: DecodeChunk) -> List[np.ndarray]:
         """Decode one chunk; returns per-segment symbol arrays (trimmed)."""
-        payload = self.model.payload
         # plan() guarantees one code table per chunk; its kernel family
         # (prefix / tans) picks the backend's matching lock-step loop
         table = self.model.table_for(chunk.segs[0].tensor)
-        streams = [payload[s.offset: s.offset + s.nbytes] for s in chunk.segs]
-        counts = np.array([s.count for s in chunk.segs], dtype=np.int64)
-        # pack straight onto the shape bucket the jit/Pallas backends would
-        # otherwise re-pad to, so chunked decodes reuse one compile per bucket
-        width = max(GUARD_BYTES, max(s.nbytes for s in chunk.segs))
-        mat, _ = pack_streams(streams, min_width=pow2_bucket(width, 64))
+        mat, counts = pack_segments(self.model.payload, chunk.segs)
         dec = self.backend.decode_table(table, mat, counts)
         return [dec[i, : s.count] for i, s in enumerate(chunk.segs)]
 
@@ -230,3 +218,171 @@ class DecodeScheduler:
                 flat = np.concatenate(parts) if len(parts) > 1 else parts[0]
                 yield seg.tensor, flat.astype(np.uint8).reshape(meta.shape)
         assert not pieces, f"incomplete tensors at end of plan: {list(pieces)}"
+
+
+# ---------------------------------------------------------------------------
+# Execution-order plans (compressed-resident serving, paper §IV "parallel
+# decoding strategy"): instead of decoding the container in STORAGE order
+# once at load, plan the decode in LAYER EXECUTION order so a serving step
+# can materialize exactly layer l's weights just before layer l's matmuls —
+# and decode layer l+1 on a worker thread while layer l computes (the
+# decode/compute overlap documented in docs/SERVING.md §"Compressed-resident
+# serving").
+
+
+def tensor_segments(model: "CompressedModel", name: str) -> List[_Seg]:
+    """The container's segment coordinates for one tensor, in symbol order
+    (the one place segment-table columns become :class:`_Seg` records —
+    both the storage-order and the execution-order planner consume it)."""
+    meta = model.tensors[name]
+    n_seg = len(meta.seg_offsets)
+    return [
+        _Seg(tensor=name, index=j, is_last=(j == n_seg - 1),
+             offset=int(o), nbytes=int(nb), count=int(c))
+        for j, (o, nb, c) in enumerate(zip(meta.seg_offsets, meta.seg_nbytes,
+                                           meta.seg_counts))
+    ]
+
+
+def pack_segments(payload: np.ndarray,
+                  segs: Sequence[_Seg]) -> Tuple[np.ndarray, np.ndarray]:
+    """Pack a segment run's payload slices into one decode-call matrix.
+
+    The one pack rule every lock-step decode call shares: rows are the
+    segments' byte streams, counts their symbol counts, and the width
+    buckets to a power of two so shape-specialized (jit / Pallas) backends
+    reuse one compile per bucket instead of one per call geometry.
+    """
+    streams = [payload[s.offset: s.offset + s.nbytes] for s in segs]
+    counts = np.array([s.count for s in segs], dtype=np.int64)
+    width = max(GUARD_BYTES, max(s.nbytes for s in segs))
+    mat, _ = pack_streams(streams, min_width=pow2_bucket(width, 64))
+    return mat, counts
+
+
+@dataclasses.dataclass
+class ExecutionSpan:
+    """One stacked tensor's layer-l slice, as container segments.
+
+    Segments hold fixed symbol counts and know nothing about layer
+    boundaries, so a layer's symbol range ``[l*P, (l+1)*P)`` may start and
+    end mid-segment: ``segs`` are the overlapping segments in order, ``trim``
+    is the slice start within their concatenated decode, ``count`` the
+    symbols belonging to the layer (``P = n_symbols / n_layers``).  Boundary
+    segments are decoded by both adjacent layers and trimmed — the price of
+    planning over an unmodified container.
+    """
+
+    tensor: str
+    segs: List[_Seg]
+    trim: int
+    count: int
+
+
+@dataclasses.dataclass
+class ExecutionStep:
+    """All spans one layer decodes through ONE code table (one lock-step
+    kernel call, same no-straddling rule as :meth:`DecodeScheduler.plan`)."""
+
+    layer: int
+    table_id: str
+    spans: List[ExecutionSpan]
+
+    @property
+    def segs(self) -> List[_Seg]:
+        return [s for sp in self.spans for s in sp.segs]
+
+
+def plan_execution(model: "CompressedModel", n_layers: int,
+                   names: Sequence[str]) -> List[List[ExecutionStep]]:
+    """Plan per-layer decode of layer-stacked tensors in execution order.
+
+    ``names`` are container tensors whose leading axis is the layer axis
+    (``shape[0] == n_layers``); returns one list of :class:`ExecutionStep`
+    per layer (usually a single step; mixed-codec containers get one step
+    per code table).  The plan holds only coordinates into the resident
+    payload — the bitstream itself is never copied or reordered.
+    """
+    spans: List[List[ExecutionSpan]] = [[] for _ in range(n_layers)]
+    for name in names:
+        meta = model.tensors[name]
+        if len(meta.shape) == 0 or meta.shape[0] != n_layers:
+            raise ValueError(
+                f"{name}: shape {meta.shape} is not stacked over "
+                f"{n_layers} layers")
+        per_layer, rem = divmod(meta.n_symbols, n_layers)
+        assert rem == 0, (name, meta.n_symbols, n_layers)
+        segs = tensor_segments(model, name)
+        starts = np.concatenate([[0], np.cumsum(meta.seg_counts)])
+        for l in range(n_layers):
+            a, b = l * per_layer, (l + 1) * per_layer
+            idx = np.nonzero((starts[:-1] < b) & (starts[1:] > a))[0]
+            spans[l].append(ExecutionSpan(
+                tensor=name, segs=[segs[i] for i in idx],
+                trim=a - int(starts[idx[0]]), count=per_layer))
+    plan: List[List[ExecutionStep]] = []
+    for l, layer_spans in enumerate(spans):
+        by_table: Dict[str, List[ExecutionSpan]] = {}
+        for sp in layer_spans:
+            by_table.setdefault(model.table_id_for(sp.tensor), []).append(sp)
+        plan.append([ExecutionStep(layer=l, table_id=t, spans=s)
+                     for t, s in sorted(by_table.items())])
+    return plan
+
+
+def iter_seg_runs(segs: Sequence[_Seg],
+                  chunk_symbols: Optional[int]) -> Iterator[List[_Seg]]:
+    """Split a segment sequence into consecutive runs of at most
+    ``chunk_symbols`` symbols (at least one segment per run; ``None`` ->
+    one run).  The per-layer decode uses this exactly like
+    :meth:`DecodeScheduler.plan` uses its budget: it bounds the int32
+    decode scratch to O(chunk) instead of O(layer)."""
+    if chunk_symbols is None:
+        yield list(segs)
+        return
+    run: List[_Seg] = []
+    n = 0
+    for s in segs:
+        if run and n + s.count > chunk_symbols:
+            yield run
+            run, n = [], 0
+        run.append(s)
+        n += s.count
+    if run:
+        yield run
+
+
+def decode_execution_step(model: "CompressedModel", step: ExecutionStep,
+                          backend: DecoderBackend, *,
+                          out: Optional[np.ndarray] = None,
+                          chunk_symbols: Optional[int] = None
+                          ) -> Dict[str, np.ndarray]:
+    """Decode one layer-step; returns ``{tensor: flat uint8 layer slice}``.
+
+    Lock-step multi-stream calls through the step's code table, one per
+    budgeted segment run (``chunk_symbols=None`` -> a single call); ``out``
+    is the optional preallocated (streams, max_count) int32 scratch shared
+    across layers (:meth:`DecoderBackend.decode_table`'s decode-into-buffer
+    contract).  Decoded symbols are narrowed to uint8 per segment as they
+    land, so the live int32 footprint never exceeds one run.
+    """
+    table = model.tables[step.table_id]
+    pieces: Dict[str, List[np.ndarray]] = {}
+    for run in iter_seg_runs(step.segs, chunk_symbols):
+        mat, counts = pack_segments(model.payload, run)
+        dec = backend.decode_table(table, mat, counts, out=out)
+        for j, s in enumerate(run):
+            pieces.setdefault(s.tensor, []).append(
+                dec[j, : s.count].astype(np.uint8))
+    result: Dict[str, np.ndarray] = {}
+    for sp in step.spans:
+        parts = pieces[sp.tensor]
+        flat = np.concatenate(parts) if len(parts) > 1 else parts[0]
+        if sp.trim == 0 and sp.count == flat.size:
+            result[sp.tensor] = flat
+        else:
+            # copy so the layer slot never pins a boundary segment's
+            # over-decode (the slice would otherwise keep the whole
+            # segment's buffer alive for the slot's lifetime)
+            result[sp.tensor] = flat[sp.trim: sp.trim + sp.count].copy()
+    return result

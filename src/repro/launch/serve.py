@@ -7,6 +7,14 @@ per-tensor bits / codec / fp32 rules — see :mod:`repro.core.spec`) ->
 named decoder backend) -> serve with quantized (QT) weights resident,
 dequant fused into matmuls.
 
+``--resident compressed`` skips the load-time decode entirely: the
+entropy-coded container stays resident and each layer is decoded just
+before its matmuls, double-buffered against the previous layer's compute
+(the paper's §IV serving scenario; docs/SERVING.md §"Compressed-resident
+serving").  Greedy outputs are bit-identical to the default
+``--resident dense`` engine; the launcher reports peak resident weight
+bytes for both so the bandwidth-vs-compute tradeoff is visible.
+
 Two serving modes:
 
 * lockstep (default) — one fixed-shape batch through ``Engine.generate``:
@@ -49,6 +57,13 @@ def main(argv=None):
     p.add_argument("--gen", type=int, default=16)
     p.add_argument("--no-quantized-serving", action="store_true",
                    help="dequantize to dense fp32 at load (baseline mode)")
+    p.add_argument("--resident", choices=("dense", "compressed"),
+                   default="dense",
+                   help="weight residency: 'dense' decodes the container "
+                        "into HBM-resident QT params at load; 'compressed' "
+                        "keeps the entropy-coded payload resident and "
+                        "decodes each layer just before its matmuls "
+                        "(bit-identical greedy outputs; see docs/SERVING.md)")
     p.add_argument("--decode-backend", default=None,
                    help="decoder backend name (numpy / jax / pallas / "
                         "pallas-interpret); default: capability auto-pick")
@@ -89,6 +104,21 @@ def main(argv=None):
         except ValueError as e:
             p.error(f"--mesh: {e}")
 
+    if args.resident == "compressed":
+        # same upfront-validation contract as the other flags: incompatible
+        # mode combinations fail here with the documented alternative
+        if args.mesh:
+            p.error("--resident compressed is single-device (per-layer "
+                    "decode targets the bandwidth-bound single-accelerator "
+                    "regime); drop --mesh or use --resident dense")
+        if args.no_quantized_serving:
+            p.error("--resident compressed always serves QT weights "
+                    "(the fused-dequant path hosts the per-layer slots); "
+                    "drop --no-quantized-serving")
+        if args.no_stream:
+            p.error("--no-stream only applies to the load-time decode of "
+                    "--resident dense")
+
     # validate the backend against the registry BEFORE any expensive work, so
     # a typo fails with the list of choices, not a deep KeyError mid-load
     if args.decode_backend is not None and args.decode_backend != "auto":
@@ -126,8 +156,16 @@ def main(argv=None):
         # PER_CHANNEL = one (s, z) per leading index — for layer-stacked
         # tensors that is exactly the paper's per-LAYER mixed scheme (Alg. 1
         # line 5), and scanned layers need the leading scale dim to match
+        legacy_kw = {}
+        if args.resident == "compressed":
+            # per-layer decode parallelism is chunk/segment lanes, so the
+            # storage-default 64k segments would lane-starve small layers;
+            # finer segments keep every layer many-laned (SERVING.md
+            # §"Tuning: segments, chunks, lanes").  An explicit
+            # --compress-spec (defaults:segment_symbols=...) overrides.
+            legacy_kw["segment_symbols"] = 4096
         compress_spec = spec_from_legacy(args.bits, Granularity.PER_CHANNEL,
-                                         codec=args.codec)
+                                         codec=args.codec, **legacy_kw)
 
     if args.production:
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
@@ -175,20 +213,47 @@ def main(argv=None):
     load_kw = {}
     if args.chunk_symbols is not None:      # absent flag -> scheduler default
         load_kw["chunk_symbols"] = args.chunk_symbols
-    if mesh is not None:
-        # default placer profile: per-tensor output-channel TP (exact
-        # numerics); `rules` only steers cache/batch placement in the engines
-        load_kw["placer"] = engine.make_param_placer(cfg, mesh)
-    serve_params = engine.load_params_from_compressed(
-        cm, quantized=not args.no_quantized_serving,
-        backend=args.decode_backend, stream=not args.no_stream,
-        metrics=load_metrics, **load_kw)
-    print(f"{'streamed' if not args.no_stream else 'monolithic'} decode + "
-          f"load [{load_metrics['decode_backend']}]: "
-          f"{load_metrics['decode_load_s']:.2f}s "
-          f"(first weight resident after "
-          f"{load_metrics['time_to_first_weight_s']*1e3:.0f}ms; "
-          f"quantized residency: {not args.no_quantized_serving})")
+    if args.resident == "compressed":
+        from repro.serving.resident import CompressedResidentWeights
+        # absent --chunk-symbols: a tighter budget than the storage-default
+        # 512k — the int32 scratch is part of the resident peak, and on the
+        # reduced configs this launcher serves, the storage default alone
+        # would push peak past the dense bf16 footprint (SERVING.md
+        # §"Tuning: segments, chunks, lanes"; explicit flag overrides)
+        load_kw.setdefault("chunk_symbols", 64 * 1024)
+        t0 = time.perf_counter()
+        serve_params = CompressedResidentWeights(
+            cm, cfg, backend=args.decode_backend, **load_kw)
+        load_metrics["decode_load_s"] = time.perf_counter() - t0
+        load_metrics["decode_backend"] = serve_params.backend.name
+        rb = serve_params.resident_bytes()
+        peak = serve_params.peak_resident_bytes()
+        print(f"compressed-resident load [{load_metrics['decode_backend']}]: "
+              f"{load_metrics['decode_load_s']:.2f}s (globals + carve-outs "
+              f"decoded; {len(serve_params.plan)} layers stay entropy-coded)")
+        print(f"  peak resident weights {peak/2**20:.2f} MiB "
+              f"(payload {rb['payload']/2**20:.2f} + tables/qmeta "
+              f"{(rb['tables']+rb['qmeta'])/2**20:.2f} + globals "
+              f"{(rb['globals']+rb['stacked'])/2**20:.2f} + 2x layer slot "
+              f"{rb['layer_slot']/2**20:.2f} + scratch "
+              f"{rb['scratch']/2**20:.2f}) vs dense-resident QT "
+              f"{serve_params.dense_resident_bytes()/2**20:.2f} MiB, "
+              f"dense bf16 {serve_params.dense_bf16_bytes()/2**20:.2f} MiB")
+    else:
+        if mesh is not None:
+            # default placer profile: per-tensor output-channel TP (exact
+            # numerics); `rules` only steers cache/batch placement in engines
+            load_kw["placer"] = engine.make_param_placer(cfg, mesh)
+        serve_params = engine.load_params_from_compressed(
+            cm, quantized=not args.no_quantized_serving,
+            backend=args.decode_backend, stream=not args.no_stream,
+            metrics=load_metrics, **load_kw)
+        print(f"{'streamed' if not args.no_stream else 'monolithic'} decode + "
+              f"load [{load_metrics['decode_backend']}]: "
+              f"{load_metrics['decode_load_s']:.2f}s "
+              f"(first weight resident after "
+              f"{load_metrics['time_to_first_weight_s']*1e3:.0f}ms; "
+              f"quantized residency: {not args.no_quantized_serving})")
     if mesh is not None:
         pb = engine.per_device_bytes(serve_params)
         lo, hi = min(pb.values()), max(pb.values())
@@ -207,7 +272,8 @@ def main(argv=None):
         return _serve_continuous(cfg, serve_params, sc, args, rng,
                                  load_metrics, mesh=mesh, rules=rules)
 
-    eng = engine.Engine(cfg, serve_params, sc, mesh=mesh, rules=rules)
+    eng = engine.Engine(cfg, serve_params, sc, mesh=mesh, rules=rules,
+                        resident=args.resident)
     if cfg.family == "encdec":
         prompt = {
             "tokens": jnp.asarray(rng.integers(0, cfg.vocab,
@@ -241,7 +307,7 @@ def _serve_continuous(cfg, serve_params, sc, args, rng, load_metrics,
     ce = ContinuousEngine(cfg, serve_params, sc, n_slots=args.batch_slots,
                           max_queue=args.max_queue,
                           prefill_chunk=args.prefill_chunk,
-                          mesh=mesh, rules=rules)
+                          mesh=mesh, rules=rules, resident=args.resident)
     n = args.traffic if args.traffic > 0 else args.batch
     shed = 0
     t0 = time.monotonic()

@@ -47,6 +47,14 @@ def supports_continuous_batching(cfg: ArchConfig) -> bool:
     return hasattr(build(cfg), "prefill_chunk")
 
 
+def supports_resident_serving(cfg: ArchConfig) -> bool:
+    """True when the family implements the per-layer weight-slot contract
+    of compressed-resident serving (``embed_step`` / ``head_step`` /
+    ``resident_prefill_block`` / ``resident_block`` — see
+    docs/SERVING.md §"Compressed-resident serving"); dense and moe today."""
+    return hasattr(build(cfg), "resident_block")
+
+
 def cache_specs(cfg: ArchConfig, **kw) -> Dict[str, Tuple]:
     """Family ``cache_specs`` with kwarg filtering: callers pass the full
     option set (``layout="slot"``, ``kv_bits=8``, ...) and families that do

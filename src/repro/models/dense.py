@@ -224,6 +224,66 @@ def decode_step(cfg: ArchConfig, params, token, cache, pos, *, unroll: int = 1):
     return logits_fn(cfg, params, x), dict(zip(keys, out))
 
 
+# ------------------------------------------------- compressed-resident serving
+#
+# Per-layer weight-slot entry points (docs/SERVING.md §"Compressed-resident
+# serving"): the same math as `prefill` / `decode_step` / `prefill_chunk`,
+# but one layer at a time with the layer's weights passed as a slot dict
+# (the keys `_layer_stack` would produce) instead of sliced from the stacked
+# params by `lax.scan`.  The driver in `serving.engine.ServeSteps` loops the
+# layers in execution order, so entropy-decoding layer l+1 can overlap layer
+# l's compute.  Each function mirrors one scan iteration of its whole-tree
+# twin op for op — that is the bit-identity contract
+# `tests/test_resident_serving.py` pins.
+
+
+def embed_step(cfg: ArchConfig, params, tokens):
+    """Token embedding against the resident globals (the pre-loop line of
+    `forward` / `decode_step`).  tokens: (B, S) int32."""
+    from repro.distributed.ctx import constrain_activation
+    return constrain_activation(take_rows(params["embed"], tokens))
+
+
+def head_step(cfg: ArchConfig, params, x, *, last_only: bool = False):
+    """Final norm + logits (the post-loop lines of the step functions).
+    ``last_only`` reproduces `prefill`'s last-position slice."""
+    x = rms_norm(x, params["final_norm"])
+    if last_only:
+        x = x[:, -1:, :]
+    return logits_fn(cfg, params, x)
+
+
+def resident_prefill_block(cfg: ArchConfig, lp, x, *, positions,
+                           q_block: int = 0, unroll: int = 1):
+    """One `forward`-collect-cache scan iteration: full causal attention over
+    the prompt, returning the layer's (k, v) for the caller to write into
+    the zero-padded cache at its layer row."""
+    from repro.distributed.ctx import constrain_activation
+    x, kv = _block(cfg, lp, x, positions=positions, q_block=q_block,
+                   unroll=unroll)
+    return constrain_activation(x), kv
+
+
+def resident_block(cfg: ArchConfig, lp, x, cache, l, pos):
+    """One `decode_step` / `prefill_chunk` scan iteration against the
+    layer-stacked cache: slice layer ``l``'s rows, run the block, write them
+    back.  ``pos`` follows the step functions' contract (scalar lockstep or
+    (B,) per-slot); S comes from ``x``, so the same callable serves decode
+    (S=1) and chunked prefill."""
+    from repro.distributed.ctx import constrain_activation
+    S = x.shape[1]
+    positions = jnp.asarray(pos)[..., None] + jnp.arange(S)   # (S,) or (B, S)
+    keys = ("k", "v", "k_scale", "v_scale") if "k_scale" in cache \
+        else ("k", "v")
+    c = tuple(jax.lax.dynamic_index_in_dim(cache[k], l, 0, keepdims=False)
+              for k in keys)
+    x, c = _block(cfg, lp, x, positions=positions, cache=c, pos=pos)
+    out = dict(cache)
+    for k, ci in zip(keys, c):
+        out[k] = jax.lax.dynamic_update_index_in_dim(cache[k], ci, l, 0)
+    return constrain_activation(x), out
+
+
 def prefill_chunk(cfg: ArchConfig, params, tokens, cache, pos, *,
                   unroll: int = 1):
     """Chunked prefill: write one prompt chunk into an existing slotted cache.

@@ -85,6 +85,25 @@ def _unpack4(q: jax.Array) -> jax.Array:
     return jnp.stack([lo, hi], axis=-1).reshape(*q.shape[:-1], q.shape[-1] * 2)
 
 
+def pack_qt(q: np.ndarray, scale: np.ndarray, zero: np.ndarray, *,
+            bits: int, pack_int4: bool = True) -> "QT | QT4":
+    """Host ``(q, scale, zero)`` symbols -> the serving-resident triple.
+
+    The ONE packing rule both weight loaders share (whole-model
+    ``load_params_from_compressed`` and the per-layer compressed-resident
+    decode): 4-bit symbols with an even last dim pack nibble pairs into
+    :class:`QT4` (0.5 bytes/param resident), everything else stays a
+    :class:`QT` of uint8 symbols.  Packing a full stacked tensor and then
+    slicing a layer is byte-identical to packing the layer's slice, which is
+    what keeps the two residency modes interchangeable.
+    """
+    q = np.asarray(q)
+    if bits == 4 and pack_int4 and q.shape[-1] % 2 == 0:
+        packed = (q[..., 0::2] | (q[..., 1::2] << 4)).astype(np.uint8)
+        return QT4(packed, np.asarray(scale), np.asarray(zero))
+    return QT(q, np.asarray(scale), np.asarray(zero))
+
+
 class QTG(NamedTuple):
     """Quantized weight with a gradient path to the bf16 master (training's
     compressed-FSDP-gather mode): forward computes from the uint8 symbols

@@ -305,6 +305,46 @@ def decode_step(cfg: ArchConfig, params, token, cache, pos, *, unroll: int = 1):
     return dense.logits_fn(cfg, params, x), {"k": ck, "v": cv}
 
 
+# ------------------------------------------------- compressed-resident serving
+#
+# Per-layer weight-slot twins of the step functions, mirroring the dense
+# family's contract (see dense.resident_block and docs/SERVING.md
+# §"Compressed-resident serving").  The slot dict carries the `moe/*`-
+# prefixed expert weights exactly as `_layer_stack` would slice them, so
+# `_moe_wts` resolves them unchanged; the MoE cache is always the plain
+# (k, v) pair (the int8 KV path is dense-only today, as in `decode_step`).
+
+embed_step = dense.embed_step
+head_step = dense.head_step
+
+
+def resident_prefill_block(cfg: ArchConfig, lp, x, *, positions,
+                           q_block: int = 0, unroll: int = 1):
+    """One `forward`-collect-cache scan iteration; the load-balance aux is
+    dropped (serving never reads it, matching `prefill`)."""
+    from repro.distributed.ctx import constrain_activation
+    x, kv, _aux = _block(cfg, lp, x, positions=positions, q_block=q_block,
+                         unroll=unroll)
+    return constrain_activation(x), kv
+
+
+def resident_block(cfg: ArchConfig, lp, x, cache, l, pos):
+    """One `decode_step` / `prefill_chunk` scan iteration against the
+    layer-stacked cache (see :func:`dense.resident_block`)."""
+    from repro.distributed.ctx import constrain_activation
+    S = x.shape[1]
+    positions = jnp.asarray(pos)[..., None] + jnp.arange(S)   # (S,) or (B, S)
+    ck = jax.lax.dynamic_index_in_dim(cache["k"], l, 0, keepdims=False)
+    cv = jax.lax.dynamic_index_in_dim(cache["v"], l, 0, keepdims=False)
+    x, (ck, cv), _aux = _block(cfg, lp, x, positions=positions,
+                               cache=(ck, cv), pos=pos)
+    out = {
+        "k": jax.lax.dynamic_update_index_in_dim(cache["k"], ck, l, 0),
+        "v": jax.lax.dynamic_update_index_in_dim(cache["v"], cv, l, 0),
+    }
+    return constrain_activation(x), out
+
+
 def prefill_chunk(cfg: ArchConfig, params, tokens, cache, pos, *,
                   unroll: int = 1):
     """Chunked prefill into a slotted cache; see :func:`dense.prefill_chunk`.

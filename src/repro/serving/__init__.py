@@ -1,1 +1,1 @@
-from . import batching, engine
+from . import batching, engine, resident

@@ -81,13 +81,20 @@ class ContinuousEngine:
     Families must implement the slot-batch cache contract
     (``api.supports_continuous_batching``): dense and moe today; recurrent
     caches (ssm/hybrid/encdec) need family-specific slot state and raise.
+
+    ``resident="compressed"`` serves the slot batch straight from the
+    entropy-coded container — ``params`` must then be a
+    :class:`repro.serving.resident.CompressedResidentWeights`, and the
+    per-layer drivers replace the jitted whole-tree steps with identical
+    numerics (docs/SERVING.md §"Compressed-resident serving").
     """
 
     def __init__(self, cfg: ArchConfig, params: Dict[str, Any],
                  sc: ServeConfig, *, n_slots: int = 8, max_queue: int = 64,
                  prefill_chunk: int = 32, admit_chunks_per_step: int = 4,
                  mesh=None, rules=None,
-                 steps: Optional[ServeSteps] = None):
+                 steps: Optional[ServeSteps] = None,
+                 resident: str = "dense"):
         if not api.supports_continuous_batching(cfg):
             raise NotImplementedError(
                 f"family {cfg.family!r} does not implement the slot-batch "
@@ -117,7 +124,7 @@ class ContinuousEngine:
         self.params = params
         self.sc = sc
         self.steps = steps if steps is not None else \
-            ServeSteps(cfg, sc, mesh=mesh, rules=rules)
+            ServeSteps(cfg, sc, mesh=mesh, rules=rules, resident=resident)
         self.slots = SlotBatchManager(cfg, n_slots, sc.max_len)
         if self.steps.mesh is not None:
             # the resident slot pool lives sharded on the serve mesh ("slot"

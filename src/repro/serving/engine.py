@@ -37,7 +37,6 @@ from repro.configs.base import ArchConfig
 from repro.core.spec import quantizable_shape as _quantizable_shape
 from repro.core.store import _DEFAULT_CHUNK, CompressedModel
 from repro.models import api
-from repro.models.layers import QT
 
 
 @dataclasses.dataclass
@@ -139,7 +138,7 @@ def load_params_from_compressed(model: CompressedModel, *,
     ``decode_load_s`` (total), and the resolved ``decode_backend`` name.
     """
     from repro.core.decode_backends import get_backend
-    from repro.models.layers import QT4
+    from repro.models.layers import pack_qt
     t0 = time.perf_counter()
     ttfw: Optional[float] = None
     resolved = get_backend(backend)
@@ -173,13 +172,9 @@ def load_params_from_compressed(model: CompressedModel, *,
                 # * per-group quantization — the (…, D/group, 1) scale does
                 #   not broadcast against the (…, D) weight in the kernels.
                 out[name] = place(name, model._dequantize_one(name, q))
-            elif bits == 4 and pack_int4 and q.shape[-1] % 2 == 0:
-                packed = (q[..., 0::2] | (q[..., 1::2] << 4)).astype(np.uint8)
-                out[name] = place(name, QT4(packed, np.asarray(scale),
-                                            np.asarray(zero)))
             else:
-                out[name] = place(name, QT(np.asarray(q), np.asarray(scale),
-                                           np.asarray(zero)))
+                out[name] = place(name, pack_qt(q, scale, zero, bits=bits,
+                                                pack_int4=pack_int4))
         else:
             out[name] = place(name, val)
         if ttfw is None:
@@ -218,17 +213,51 @@ class ServeSteps:
     loader (:func:`make_param_placer`), and GSPMD propagates the
     tensor-parallel layout through the jitted steps from the operand
     shardings alone.
+
+    Residency: ``resident="dense"`` (default) jits the whole-tree step
+    functions — ``params`` is the decoded pytree and every layer's weights
+    are in HBM for the scan to slice.  ``resident="compressed"`` swaps the
+    step callables for per-layer *drivers*: ``params`` must then be a
+    :class:`repro.serving.resident.CompressedResidentWeights`, and each step
+    loops the layers in execution order, materializing layer ``l``'s QT
+    triples just before its block (the next layer's entropy decode runs on a
+    worker thread underneath the asynchronously dispatched compute).  The
+    drivers keep the step-function signatures, so :class:`Engine` and
+    :class:`~repro.serving.batching.ContinuousEngine` drive either mode
+    unchanged — and greedy decode is bit-identical between the two (the
+    per-layer blocks mirror the scan bodies op for op; see docs/SERVING.md
+    §"Compressed-resident serving").  Compressed residency is single-device
+    today (``mesh`` must stay None): per-layer decode targets the
+    bandwidth-bound single-accelerator regime the paper measures, while
+    multi-device hosts shard *decoded* weights (ARCHITECTURE.md §6).
     """
 
     def __init__(self, cfg: ArchConfig, sc: ServeConfig,
                  *, shardings: Optional[dict] = None,
-                 mesh=None, rules=None):
+                 mesh=None, rules=None, resident: str = "dense"):
+        if resident not in ("dense", "compressed"):
+            raise ValueError(f"resident must be 'dense' or 'compressed', "
+                             f"got {resident!r}")
         self.cfg = cfg
         self.sc = sc
         self.mod = api.build(cfg)
+        self.resident = resident
         self.mesh = mesh
         self.rules = None
         self._cache_shardings_memo: dict = {}
+        if resident == "compressed":
+            if mesh is not None:
+                raise NotImplementedError(
+                    "compressed-resident serving is single-device (see "
+                    "docs/SERVING.md §\"Which mode when\"); drop mesh= or "
+                    "use resident='dense'")
+            if not api.supports_resident_serving(cfg):
+                raise NotImplementedError(
+                    f"family {cfg.family!r} does not implement the per-layer "
+                    f"weight-slot contract (embed_step / resident_block); "
+                    f"supported today: dense, moe")
+            self._build_resident_steps()
+            return
         if mesh is not None:
             self.rules = rules if rules is not None \
                 else serve_mesh_rules(cfg, mesh)
@@ -257,6 +286,90 @@ class ServeSteps:
                                               unroll=sc.unroll)
 
             self.prefill_chunk_fn = jax.jit(scoped(_chunk), donate_argnums=(2,))
+
+    # ------------------------------------------------- compressed residency
+    def _build_resident_steps(self) -> None:
+        """Per-layer jitted pieces + Python drivers (compressed residency).
+
+        Five small jitted closures replace the three whole-tree steps: embed,
+        head (and the prefill last-position variant), the cacheless prefill
+        block, the cached block shared by decode and chunked prefill, and
+        the prefill cache write.  One trace of the cached block serves every
+        layer (``l`` is a traced scalar) and every front end (S comes from
+        the token shape).  The drivers below stitch them together around the
+        weight store's prefetch/get double buffer.
+        """
+        cfg, sc, mod = self.cfg, self.sc, self.mod
+
+        def _embed(g, tokens):
+            return mod.embed_step(cfg, g, tokens)
+
+        def _head(g, x):
+            return mod.head_step(cfg, g, x)
+
+        def _head_last(g, x):
+            return mod.head_step(cfg, g, x, last_only=True)
+
+        def _pblock(lp, x, positions):
+            return mod.resident_prefill_block(
+                cfg, lp, x, positions=positions, q_block=sc.q_block,
+                unroll=sc.unroll)
+
+        def _rblock(lp, x, cache, l, pos):
+            return mod.resident_block(cfg, lp, x, cache, l, pos)
+
+        def _write(cache, k, v, l):
+            out = dict(cache)
+            for key, val in (("k", k), ("v", v)):
+                out[key] = jax.lax.dynamic_update_slice(
+                    cache[key], val[None].astype(cache[key].dtype),
+                    (l,) + (0,) * (cache[key].ndim - 1))
+            return out
+
+        self._embed_fn = jax.jit(_embed)
+        self._head_fn = jax.jit(_head)
+        self._head_last_fn = jax.jit(_head_last)
+        self._pblock_fn = jax.jit(_pblock)
+        self._rblock_fn = jax.jit(_rblock, donate_argnums=(2,))
+        self._write_fn = jax.jit(_write, donate_argnums=(0,))
+        self.prefill_fn = self._resident_prefill
+        self.decode_fn = self._resident_step
+        self.prefill_chunk_fn = self._resident_step
+
+    def _resident_prefill(self, weights, prompt):
+        """Driver twin of the jitted whole-tree ``prefill``: full causal
+        attention per layer, each layer's (k, v) written into the
+        zero-padded cache row as it is produced."""
+        B, S = prompt.shape
+        x = self._embed_fn(weights.globals, prompt)
+        positions = jnp.arange(S)
+        cache = self.mod.init_cache(self.cfg, B, self.sc.max_len)
+        weights.prefetch(0)
+        for l in range(weights.n_layers):
+            lp = weights.get(l)
+            weights.prefetch((l + 1) % weights.n_layers)
+            x, (k, v) = self._pblock_fn(lp, x, positions)
+            cache = self._write_fn(cache, k, v, jnp.int32(l))
+        return self._head_last_fn(weights.globals, x), cache
+
+    def _resident_step(self, weights, tokens, cache, pos):
+        """Driver twin of ``decode_step`` AND ``prefill_chunk`` (the cached
+        block reads S from the token shape, exactly like the scan bodies).
+
+        The overlap: ``get(l)`` returns layer l's slot (usually already
+        decoded by the worker), ``prefetch(l+1)`` kicks off the next
+        layer's entropy decode, and the jitted block dispatches
+        asynchronously — so layer l+1 decodes on the worker thread while
+        layer l's matmuls run.  The wrap-around prefetch primes layer 0 for
+        the next step.
+        """
+        x = self._embed_fn(weights.globals, tokens)
+        weights.prefetch(0)
+        for l in range(weights.n_layers):
+            lp = weights.get(l)
+            weights.prefetch((l + 1) % weights.n_layers)
+            x, cache = self._rblock_fn(lp, x, cache, jnp.int32(l), pos)
+        return self._head_fn(weights.globals, x), cache
 
     def _scoped_tracer(self) -> Callable:
         """Identity on one device.  With a mesh: wrap each step body so its
@@ -313,17 +426,24 @@ class Engine:
     concurrent, independently-arriving requests use
     :class:`repro.serving.batching.ContinuousEngine`, which drives the same
     step functions with a slot batch.
+
+    ``resident="compressed"`` serves straight from the entropy-coded
+    container: pass a :class:`repro.serving.resident.
+    CompressedResidentWeights` as ``params`` (docs/SERVING.md
+    §"Compressed-resident serving").
     """
 
     def __init__(self, cfg: ArchConfig, params: Dict[str, Any], sc: ServeConfig,
                  *, shardings: Optional[dict] = None,
                  mesh=None, rules=None,
-                 steps: Optional[ServeSteps] = None):
+                 steps: Optional[ServeSteps] = None,
+                 resident: str = "dense"):
         self.cfg = cfg
         self.params = params
         self.sc = sc
         self.steps = steps if steps is not None else \
-            ServeSteps(cfg, sc, shardings=shardings, mesh=mesh, rules=rules)
+            ServeSteps(cfg, sc, shardings=shardings, mesh=mesh, rules=rules,
+                       resident=resident)
         self.mod = self.steps.mod
         self.prefill_fn = self.steps.prefill_fn      # backwards-compat aliases
         self.decode_fn = self.steps.decode_fn

@@ -1,0 +1,274 @@
+"""Compressed-resident serving weights: the container stays entropy-coded
+in memory and each layer's QT triples are materialized just before that
+layer's matmuls, then dropped.
+
+This is the paper's headline serving scenario (§IV: weights stay
+entropy-coded so each layer moves fewer bytes than its dense footprint;
+Table 2's latency wins come from that bandwidth saving): instead of
+decoding the whole container into dense/QT params at engine start
+(:func:`repro.serving.engine.load_params_from_compressed`), only three
+things are permanently resident:
+
+* the **compressed payload** itself (per-table bitstreams + decode LUTs +
+  per-tensor scale/zero metadata from container v2) — the "resident segment
+  handles";
+* the **globals** — non-layer tensors (embedding, final norm, lm head),
+  decoded once with the exact packing rules of the whole-model loader;
+* a small **dense-stacked carve-out** — layer tensors the fused-QT path
+  cannot host (fp32 norms, per-group or rule-quantized sensitive params),
+  decoded once and sliced per layer (views, no copies).
+
+Everything else is decoded per layer through an execution-order plan
+(:func:`repro.core.scheduler.plan_execution`), double-buffered: a worker
+thread decodes layer *l+1* into a shared preallocated scratch buffer while
+the jitted block of layer *l* computes (JAX dispatch is asynchronous, so
+the overlap is real).  Peak weight memory is bounded by
+
+    compressed payload + globals + carve-outs + 2 x (one layer's QT slot)
+
+which is strictly below the dense bf16 footprint whenever the model
+compresses at all — the invariant ``benchmarks/resident_serving.py`` and
+``tests/test_resident_serving.py`` measure.  See docs/SERVING.md
+§"Compressed-resident serving" for the execution model and the timing
+diagram.
+
+Bit-identity: the decoded symbols, the per-layer scale/zero slices, and the
+QT/QT4 packing (:func:`repro.models.layers.pack_qt`) are byte-identical to
+slicing the whole-model loader's stacked triples, and the per-layer step
+functions mirror the scan bodies op for op — so greedy decode matches the
+dense-resident engine bit for bit.
+"""
+from __future__ import annotations
+
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.decode_backends import DecoderBackend, get_backend
+from repro.core.scheduler import (DEFAULT_CHUNK_SYMBOLS, ExecutionStep,
+                                  decode_execution_step, iter_seg_runs,
+                                  plan_execution)
+from repro.core.spec import quantizable_shape
+from repro.core.store import CompressedModel
+from repro.models.layers import pack_qt
+
+LAYER_PREFIX = "layers/"
+
+
+def _device(tree: Any) -> Any:
+    """Host triple/array -> device (preserving QT/QT4 NamedTuple types)."""
+    if isinstance(tree, tuple) and hasattr(tree, "_fields"):
+        return type(tree)(*(jnp.asarray(p) for p in tree))
+    return jnp.asarray(tree)
+
+
+class CompressedResidentWeights:
+    """Device-resident entropy-coded weights + per-layer decode slots.
+
+    Drop-in replacement for the ``params`` dict of the serving engines when
+    the steps are built with ``ServeSteps(cfg, sc, resident="compressed")``:
+    the per-layer drivers call :meth:`get` / :meth:`prefetch` instead of
+    letting ``lax.scan`` slice a stacked tree.
+
+    Args:
+      model: the compressed container (format v1 or v2).
+      cfg: architecture config; ``cfg.n_layers`` names the stacked axis.
+      backend: decoder-registry name or instance (None/"auto" = capability
+        pick), same contract as the whole-model loader.
+      pack_int4: pack 4-bit layers into QT4 nibble pairs (default, matching
+        the whole-model loader).
+      chunk_symbols: per-decode-call symbol budget within a layer (the
+        generalized scheduler budget): bounds the int32 scratch at O(chunk)
+        instead of O(layer).  ``None`` -> one call per (layer, table).
+      prefetch: decode layer l+1 on a worker thread while layer l computes
+        (double buffering).  Disable for single-threaded debugging.
+    """
+
+    def __init__(self, model: CompressedModel, cfg: ArchConfig, *,
+                 backend=None, pack_int4: bool = True,
+                 chunk_symbols: Optional[int] = DEFAULT_CHUNK_SYMBOLS,
+                 prefetch: bool = True):
+        self.model = model
+        self.cfg = cfg
+        self.n_layers = int(cfg.n_layers)
+        self.backend: DecoderBackend = (
+            backend if isinstance(backend, DecoderBackend)
+            else get_backend(backend))
+        self.pack_int4 = pack_int4
+
+        self.globals: Dict[str, Any] = {}
+        self.stacked: Dict[str, Any] = {}      # dense-resident carve-outs
+        self._hosted: List[str] = []           # per-layer compressed tensors
+        for name, w in model.unquantized.items():
+            if self._is_layer_stacked(name, w.shape):
+                self.stacked[name] = jnp.asarray(w)
+            else:
+                self.globals[name] = jnp.asarray(w)
+        for name, meta in model.tensors.items():
+            if self._is_layer_stacked(name, meta.shape) \
+                    and self._qt_hostable(name):
+                self._hosted.append(name)
+            else:
+                val = self._load_one(name)
+                (self.stacked if self._is_layer_stacked(name, meta.shape)
+                 else self.globals)[name] = val
+
+        self.chunk_symbols = chunk_symbols
+        self.plan: List[List[ExecutionStep]] = plan_execution(
+            model, self.n_layers, self._hosted)
+        rows = cols = 1
+        for steps in self.plan:
+            for step in steps:
+                for run in iter_seg_runs(step.segs, chunk_symbols):
+                    rows = max(rows, len(run))
+                    cols = max(cols, max(s.count for s in run))
+        # ONE scratch buffer shared by every per-layer decode call (the
+        # decode-into-buffer contract); double buffering is safe because the
+        # single worker thread serializes decodes and the returned QT slots
+        # are trimmed copies, never views of the scratch
+        self._buf = np.zeros((rows, cols), dtype=np.int32)
+        self._exec: Optional[ThreadPoolExecutor] = (
+            ThreadPoolExecutor(max_workers=1,
+                               thread_name_prefix="resident-decode")
+            if prefetch else None)
+        self._pending: Dict[int, Future] = {}
+
+    # ------------------------------------------------------------ classification
+    def _is_layer_stacked(self, name: str, shape) -> bool:
+        return (name.startswith(LAYER_PREFIX) and len(shape) >= 1
+                and shape[0] == self.n_layers
+                and int(np.prod(shape)) % self.n_layers == 0)
+
+    def _qt_hostable(self, name: str) -> bool:
+        """Can this stacked tensor live compressed with per-layer QT slots?
+        Needs the fused dequant-matmul to host the slot (same rule as the
+        whole-model loader) and a scale/zero that slices or broadcasts per
+        layer (per-channel leading-axis pairs, or per-tensor scalars)."""
+        m = self.model.qmeta[name]
+        if not quantizable_shape(name, self.model.tensors[name].shape):
+            return False
+        if m["granularity"] == "per_group":
+            return False
+        s = np.asarray(m["scale"])
+        return s.ndim == len(self.model.tensors[name].shape) \
+            and s.shape[0] in (1, self.n_layers)
+
+    def _load_one(self, name: str) -> Any:
+        """Decode one tensor with the whole-model loader's packing rules
+        (globals and dense-stacked carve-outs are bit-identical to
+        ``load_params_from_compressed``'s output for the same name)."""
+        q = self.model.decode_tensor(name, backend=self.backend)
+        m = self.model.qmeta[name]
+        if not quantizable_shape(name, self.model.tensors[name].shape) \
+                or m["granularity"] == "per_group":
+            return jnp.asarray(self.model._dequantize_one(name, q))
+        return _device(pack_qt(q, m["scale"], m["zero"], bits=m["bits"],
+                               pack_int4=self.pack_int4))
+
+    # ----------------------------------------------------------------- decoding
+    def _decode_layer(self, l: int) -> Dict[str, Any]:
+        """Materialize layer ``l``'s weight-slot dict: decode its execution
+        steps into the scratch buffer, slice scale/zero, pack QT/QT4, and
+        append the dense-stacked carve-out views."""
+        slot: Dict[str, Any] = {}
+        for step in self.plan[l]:
+            for name, flat in decode_execution_step(
+                    self.model, step, self.backend, out=self._buf,
+                    chunk_symbols=self.chunk_symbols).items():
+                m = self.model.qmeta[name]
+                shape = self.model.tensors[name].shape[1:]
+                scale, zero = np.asarray(m["scale"]), np.asarray(m["zero"])
+                i = min(l, scale.shape[0] - 1)   # (L,1,..) slices; (1,1,..)
+                qt = pack_qt(flat.reshape(shape), scale[i], zero[i],
+                             bits=m["bits"], pack_int4=self.pack_int4)
+                slot[name[len(LAYER_PREFIX):]] = _device(qt)
+        for name, w in self.stacked.items():
+            slot[name[len(LAYER_PREFIX):]] = w[l]
+        return slot
+
+    def prefetch(self, l: int) -> None:
+        """Start decoding layer ``l`` on the worker thread (no-op when
+        already in flight or prefetch is disabled)."""
+        if self._exec is None or l in self._pending:
+            return
+        self._pending[l] = self._exec.submit(self._decode_layer, l)
+
+    def get(self, l: int) -> Dict[str, Any]:
+        """Layer ``l``'s weight-slot dict (waits on its prefetch if one is
+        in flight; decodes inline otherwise).  The caller drops the dict
+        after the layer's matmuls — nothing retains it here."""
+        fut = self._pending.pop(l, None)
+        if fut is not None:
+            return fut.result()
+        if self._exec is not None:
+            # route through the worker so the shared scratch buffer is only
+            # ever touched by one thread
+            return self._exec.submit(self._decode_layer, l).result()
+        return self._decode_layer(l)
+
+    # ---------------------------------------------------------------- accounting
+    def resident_bytes(self) -> Dict[str, int]:
+        """Deterministic weight-memory breakdown (the serving analogue of
+        the paper's Table 2 storage column; asserted against the dense
+        footprint by the resident benchmark/tests)."""
+        payload = sum(int(self.model.tensors[n].seg_nbytes.sum())
+                      for n in self._hosted)
+        tables = sum(
+            sum(np.asarray(a).nbytes
+                for a in self.model.tables[t].decode_arrays().values())
+            for t in {self.model.table_id_for(n) for n in self._hosted})
+        qmeta = sum(np.asarray(self.model.qmeta[n]["scale"]).nbytes
+                    + np.asarray(self.model.qmeta[n]["zero"]).nbytes
+                    for n in self._hosted)
+        leaves = lambda tree: (
+            tuple(tree) if isinstance(tree, tuple) else (tree,))
+        globals_b = sum(p.nbytes for v in self.globals.values()
+                        for p in leaves(v))
+        stacked_b = sum(p.nbytes for v in self.stacked.values()
+                        for p in leaves(v))
+        slot = 0
+        for n in self._hosted:
+            m = self.model.qmeta[n]
+            per_layer = self.model.tensors[n].n_symbols // self.n_layers
+            last = self.model.tensors[n].shape[-1]
+            packed = m["bits"] == 4 and self.pack_int4 and last % 2 == 0
+            scale = np.asarray(m["scale"])
+            slot += (per_layer // 2 if packed else per_layer) \
+                + 2 * (scale.nbytes // scale.shape[0])
+        return {
+            "payload": payload, "tables": tables, "qmeta": qmeta,
+            "globals": globals_b, "stacked": stacked_b,
+            "layer_slot": slot, "scratch": self._buf.nbytes,
+        }
+
+    def peak_resident_bytes(self) -> int:
+        """Peak weight-path bytes: everything permanently resident plus the
+        double-buffered pair of per-layer slots and the decode scratch."""
+        b = self.resident_bytes()
+        return (b["payload"] + b["tables"] + b["qmeta"] + b["globals"]
+                + b["stacked"] + b["scratch"] + 2 * b["layer_slot"])
+
+    def dense_resident_bytes(self) -> int:
+        """What the dense-resident QT mode holds for the same container
+        (globals/carve-outs identical; hosted tensors fully decoded)."""
+        b = self.resident_bytes()
+        full = 0
+        for n in self._hosted:
+            m = self.model.qmeta[n]
+            t = self.model.tensors[n]
+            packed = m["bits"] == 4 and self.pack_int4 \
+                and t.shape[-1] % 2 == 0
+            full += (t.n_symbols // 2 if packed else t.n_symbols) \
+                + np.asarray(m["scale"]).nbytes \
+                + np.asarray(m["zero"]).nbytes
+        return b["globals"] + b["stacked"] + full
+
+    def dense_bf16_bytes(self) -> int:
+        """The uncompressed bf16 baseline (2 bytes/param, paper Table 2)."""
+        n = sum(t.n_symbols for t in self.model.tensors.values()) \
+            + sum(int(np.prod(w.shape))
+                  for w in self.model.unquantized.values())
+        return 2 * n
