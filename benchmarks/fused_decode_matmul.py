@@ -1,0 +1,129 @@
+"""Fused decode→dequant→matmul vs the prefetch-overlap per-layer decode.
+
+The compressed-resident engine (PR 5) keeps weights entropy-coded but still
+materializes each layer's dense QT triples into a double-buffered slot
+before its matmuls.  The fused kernel path
+(``kernels/fused_decode_matmul.py``) removes that round trip: weight tiles
+decode from the resident payload handles inside the matmul.  This harness
+serves the SAME container both ways, per bit width (4/8) and codec
+(huffman/rans):
+
+  unfused — CompressedResidentWeights(fused=False): per-layer host decode,
+            prefetch-overlapped against the previous layer's compute
+  fused   — CompressedResidentWeights(fused=True): FusedQT payload handles,
+            decode inside the jitted block (Pallas where it probes)
+
+One row per (bits, codec, mode): decode-ms/token, end-to-end tok/s, and the
+fused-vs-unfused decode speedup.  Asserted on every run: greedy tokens are
+bit-identical between the two modes (and to the dense-QT engine), and the
+fused path's decode-ms/token is no slower than the unfused path's
+(tolerance ``--speed-slack``, because CPU wall-clock jitters; ``--quick``
+keeps the assert but shrinks shapes for CI).
+
+Usage:  PYTHONPATH=src python -m benchmarks.fused_decode_matmul [--quick]
+        (or `python -m benchmarks.run fused`)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def run(arch: str = "qwen3-1.7b", batch: int = 2, prompt_len: int = 16,
+        gen: int = 16, segment_symbols: int = 1024,
+        chunk_symbols: int = 64 * 1024, speed_slack: float = 1.15,
+        assert_speed: bool = True) -> dict:
+    import jax
+    import numpy as np
+    from repro.configs import registry
+    from repro.core.quant import Granularity
+    from repro.core.spec import spec_from_legacy
+    from repro.core.store import CompressedModel
+    from repro.models import api
+    from repro.serving import engine
+    from repro.serving.resident import CompressedResidentWeights
+
+    cfg = registry.reduced(registry.get(arch))
+    mod = api.build(cfg)
+    params = mod.init(cfg, jax.random.PRNGKey(0))
+    host = {k: np.asarray(v, np.float32) for k, v in params.items()}
+    sc = engine.ServeConfig(max_len=prompt_len + gen)
+    prompt = np.random.default_rng(0).integers(
+        0, cfg.vocab, (batch, prompt_len)).astype(np.int32)
+
+    results: dict = {}
+    print(f"{cfg.name}: fused vs prefetch-overlap per-layer decode "
+          f"(segment {segment_symbols} symbols)")
+    print(f"{'config':>12s} {'mode':>8s} {'decode ms/tok':>14s} "
+          f"{'e2e tok/s':>10s} {'fused impl':>18s}")
+    for bits, codec in [(8, "huffman"), (4, "huffman"), (8, "rans"),
+                        (4, "rans")]:
+        cm = CompressedModel.compress(host, spec=spec_from_legacy(
+            bits, Granularity.PER_CHANNEL, codec=codec,
+            segment_symbols=segment_symbols))
+        qparams = engine.load_params_from_compressed(cm, quantized=True)
+        ref = np.asarray(
+            engine.Engine(cfg, qparams, sc).generate(prompt, gen))
+        row: dict = {}
+        for mode, fused in (("unfused", False), ("fused", True)):
+            weights = CompressedResidentWeights(
+                cm, cfg, chunk_symbols=chunk_symbols, fused=fused)
+            eng = engine.Engine(cfg, weights, sc, resident="compressed")
+            out, metrics = eng.generate(prompt, gen, echo_metrics=True)
+            assert np.array_equal(np.asarray(out), ref), \
+                f"{bits}b {codec} {mode}: greedy tokens diverge from dense-QT"
+            impls = sorted({fq.impl for slots in weights._fused_slots
+                            for fq in slots.values()}) if fused else []
+            ms = 1000.0 / metrics["decode_tok_per_s"]
+            row[mode] = dict(decode_ms_per_tok=ms,
+                             e2e_tok_per_s=metrics["e2e_tok_per_s"],
+                             impls=impls)
+            print(f"{codec + str(bits):>12s} {mode:>8s} {ms:>14.2f} "
+                  f"{metrics['e2e_tok_per_s']:>10.1f} "
+                  f"{','.join(impls) or '-':>18s}")
+        speedup = (row["unfused"]["decode_ms_per_tok"]
+                   / row["fused"]["decode_ms_per_tok"])
+        print(f"{codec + str(bits):>12s} {'':>8s} decode speedup "
+              f"{speedup:.2f}x, bit-identity OK")
+        if assert_speed:
+            assert row["fused"]["decode_ms_per_tok"] \
+                <= speed_slack * row["unfused"]["decode_ms_per_tok"], (
+                    f"{bits}b {codec}: fused decode "
+                    f"{row['fused']['decode_ms_per_tok']:.2f} ms/tok slower "
+                    f"than unfused "
+                    f"{row['unfused']['decode_ms_per_tok']:.2f} ms/tok "
+                    f"(slack {speed_slack}x)")
+        results[f"{codec}{bits}"] = row
+    print("all configs: fused greedy decode bit-identical to unfused and "
+          "dense-QT")
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--segment-symbols", type=int, default=1024)
+    ap.add_argument("--chunk-symbols", type=int, default=64 * 1024)
+    ap.add_argument("--speed-slack", type=float, default=1.15,
+                    help="fused decode-ms/token may exceed unfused by this "
+                         "factor before the speed assert fires (wall-clock "
+                         "noise allowance)")
+    ap.add_argument("--no-assert-speed", action="store_true",
+                    help="report speeds without asserting the fused path is "
+                         "no slower (bit-identity is always asserted)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes for CI smoke")
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.prompt_len, args.gen, args.batch = 8, 8, 1
+    run(args.arch, args.batch, args.prompt_len, args.gen,
+        args.segment_symbols, args.chunk_symbols, args.speed_slack,
+        assert_speed=not args.no_assert_speed)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

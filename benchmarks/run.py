@@ -8,6 +8,9 @@
   sharded — multi-device sharded residency vs single-device (bit-identity)
   resident — compressed-resident vs dense-resident serving (Table II's
              bandwidth-vs-compute tradeoff: resident bytes vs tok/s)
+  fused    — fused decode→dequant→matmul vs the prefetch-overlap per-layer
+             decode (decode-ms/token per bit width and codec, bit-identity
+             asserted)
   roofline — render §Roofline from dry-run JSON (if present)
 
 ``python -m benchmarks.run [name ...]`` runs all by default.
@@ -21,7 +24,7 @@ import sys
 def main(argv=None) -> int:
     which = (argv or sys.argv[1:]) or ["table1", "table2", "decode",
                                        "streaming", "traffic", "sharded",
-                                       "resident", "roofline"]
+                                       "resident", "fused", "roofline"]
     from . import (decode_streaming, decode_throughput, table1_storage,
                    table2_latency)
 
@@ -63,6 +66,11 @@ def main(argv=None) -> int:
         print("== Compressed-resident vs dense-resident serving ==")
         from . import resident_serving
         resident_serving.run()
+        print()
+    if "fused" in which:
+        print("== Fused decode→dequant→matmul vs per-layer decode ==")
+        from . import fused_decode_matmul
+        fused_decode_matmul.run()
         print()
     if "roofline" in which:
         path = "results/dryrun_baseline.json"

@@ -6,7 +6,10 @@ Two gates, no dependencies beyond the stdlib:
 1. **Markdown link check** — every relative link in README.md, DESIGN.md,
    EXPERIMENTS.md, PAPER.md, PAPERS.md, docs/*.md, and benchmarks/README.md
    must resolve to an existing file, and a ``#fragment`` into a markdown
-   file must match one of its headings (GitHub slug rules).
+   file must match one of its headings (GitHub slug rules).  On top of
+   resolution, ``REQUIRED_LINKS`` lists links that must *exist*: README.md
+   must link docs/TESTING.md (the test-tier map is part of the product
+   surface — removing the pointer is a docs regression, not a cleanup).
 
 2. **§-reference audit** — every ``§`` reference in ``src/repro/serving/``
    and ``src/repro/core/scheduler.py`` must resolve to a real section:
@@ -31,6 +34,13 @@ ROOT = Path(__file__).resolve().parent.parent
 
 LINK_DOCS = ["README.md", "DESIGN.md", "EXPERIMENTS.md", "PAPER.md",
              "PAPERS.md", "benchmarks/README.md"]
+# (source doc, target path relative to the source doc's directory): the
+# source must contain at least one markdown link to the target
+REQUIRED_LINKS = [
+    ("README.md", "docs/TESTING.md"),
+    ("README.md", "docs/ARCHITECTURE.md"),
+    ("README.md", "docs/SERVING.md"),
+]
 SECTION_DOCS = ["docs/ARCHITECTURE.md", "docs/SERVING.md", "DESIGN.md"]
 AUDIT_GLOBS = ["src/repro/serving/**/*.py", "src/repro/core/scheduler.py"]
 
@@ -73,6 +83,20 @@ def check_links() -> list[str]:
                 slugs = {github_slug(h) for h in headings(dest)}
                 if frag not in slugs:
                     errors.append(f"{rel}: dead anchor -> {target}")
+    return errors
+
+
+def check_required_links() -> list[str]:
+    errors: list[str] = []
+    for src, target in REQUIRED_LINKS:
+        doc = ROOT / src
+        if not doc.exists():
+            errors.append(f"{src}: required-link source missing")
+            continue
+        links = {m.group(1).partition("#")[0]
+                 for m in _LINK.finditer(doc.read_text())}
+        if target not in links:
+            errors.append(f"{src}: must link {target} (required link)")
     return errors
 
 
@@ -123,7 +147,7 @@ def check_section_refs() -> list[str]:
 
 
 def main() -> int:
-    errors = check_links() + check_section_refs()
+    errors = check_links() + check_required_links() + check_section_refs()
     for e in errors:
         print(f"FAIL {e}")
     if errors:

@@ -69,6 +69,14 @@ class DecoderBackend:
     probe: Callable[[], bool]
     priority: int = 0
     auto_probe: Optional[Callable[[], bool]] = None
+    # the *fused* capability (decode→dequant→matmul in one pass, see
+    # kernels/fused_decode_matmul.py): family -> callable
+    #   fused_fns[fam](table, x, mat, scale, zero, *, seg_symbols, K, N,
+    #                  bits) -> (..., N) activations
+    # probed like compile capability: ``fused_probe`` answers "does the
+    # fused kernel actually run here?" (falls back to ``probe``)
+    fused_fns: Optional[Mapping[str, Callable]] = None
+    fused_probe: Optional[Callable[[], bool]] = None
 
     @property
     def fn(self) -> Callable[..., np.ndarray]:
@@ -89,6 +97,30 @@ class DecoderBackend:
 
     def kernel_families(self) -> List[str]:
         return sorted(self.fns)
+
+    def fused_available(self) -> bool:
+        """Can this backend run the fused decode→dequant→matmul here?"""
+        if not self.fused_fns:
+            return False
+        try:
+            return bool((self.fused_probe or self.probe)())
+        except Exception:
+            return False
+
+    def fused_families(self) -> List[str]:
+        return sorted(self.fused_fns or ())
+
+    def fused_matmul(self, table, x, mat, scale, zero, *, seg_symbols: int,
+                     K: int, N: int, bits: int = 8):
+        """Fused ``x @ dequant(decode(mat))`` through this backend's kernel
+        (same family routing as :meth:`decode_table`)."""
+        fn = (self.fused_fns or {}).get(table.kernel)
+        if fn is None:
+            raise RuntimeError(
+                f"decoder backend {self.name!r} has no fused {table.kernel!r} "
+                f"kernel (fused families: {self.fused_families()})")
+        return fn(table, x, mat, scale, zero, seg_symbols=seg_symbols,
+                  K=K, N=N, bits=bits)
 
     def decode(self, mat: np.ndarray, counts: np.ndarray, lut_sym: np.ndarray,
                lut_len: np.ndarray, *, max_len: int,
@@ -192,6 +224,34 @@ def _fill_out(out, res, rows, max_count):
     return out[:rows, :max_count]
 
 
+# ---------------------------------------------------------- fused capability
+def _fused_ref(table, x, mat, scale, zero, *, seg_symbols, K, N, bits=8):
+    """Host-decode fused oracle (the numpy backend's 'fused' path — decode
+    on host, dequant+dot through the exact serving ops)."""
+    import jax.numpy as jnp
+    from repro.kernels.ref import fused_decode_matmul_ref
+    return fused_decode_matmul_ref(jnp.asarray(x), mat, table, scale, zero,
+                                   seg_symbols=seg_symbols, K=K, N=N)
+
+
+def _fused_impl(impl: str):
+    def fn(table, x, mat, scale, zero, *, seg_symbols, K, N, bits=8):
+        import jax.numpy as jnp
+        from repro.kernels.fused_decode_matmul import (build_fused_qt,
+                                                       fused_decode_matmul)
+        fq = build_fused_qt(table, mat, scale, zero, seg_symbols=seg_symbols,
+                            K=K, N=N, bits=bits, impl=impl)
+        return fused_decode_matmul(jnp.asarray(x), fq)
+    return fn
+
+
+def _fused_pallas_supported() -> bool:
+    # keyed on the prefix kernel, mirroring _pallas_supported; the tans
+    # kernel carries its own probe inside fused_supported("tans")
+    from repro.kernels.fused_decode_matmul import fused_supported
+    return fused_supported("prefix")
+
+
 # ------------------------------------------------------------------ numpy
 def _numpy_decode(mat, counts, lut_sym, lut_len, max_len, max_count,
                   out=None):
@@ -207,7 +267,8 @@ def _numpy_decode_tans(mat, counts, tab_sym, tab_bits, tab_base, table_log,
 register_backend(DecoderBackend(
     name="numpy",
     fns={"prefix": _numpy_decode, "tans": _numpy_decode_tans},
-    probe=lambda: True, priority=0))
+    probe=lambda: True, priority=0,
+    fused_fns={"prefix": _fused_ref, "tans": _fused_ref}))
 
 
 # -------------------------------------------------------------------- jax
@@ -248,7 +309,8 @@ def _jax_decode_tans(mat, counts, tab_sym, tab_bits, tab_base, table_log,
 register_backend(DecoderBackend(
     name="jax",
     fns={"prefix": _jax_decode, "tans": _jax_decode_tans},
-    probe=_jax_ok, priority=10, auto_probe=_jax_accelerated))
+    probe=_jax_ok, priority=10, auto_probe=_jax_accelerated,
+    fused_fns={"prefix": _fused_impl("jax"), "tans": _fused_impl("jax")}))
 
 
 # ----------------------------------------------------------------- pallas
@@ -311,7 +373,10 @@ register_backend(DecoderBackend(
     name="pallas",
     fns={"prefix": _pallas_decode(interpret=False),
          "tans": _pallas_decode_tans(interpret=False)},
-    probe=_pallas_supported, priority=20))
+    probe=_pallas_supported, priority=20,
+    fused_fns={"prefix": _fused_impl("pallas"),
+               "tans": _fused_impl("pallas")},
+    fused_probe=_fused_pallas_supported))
 
 # Interpret mode re-runs the kernel's Python trace per symbol step — orders of
 # magnitude slower than the numpy path.  Explicit opt-in only (never auto).
@@ -319,4 +384,7 @@ register_backend(DecoderBackend(
     name="pallas-interpret",
     fns={"prefix": _pallas_decode(interpret=True),
          "tans": _pallas_decode_tans(interpret=True)},
-    probe=_jax_ok, priority=-10, auto_probe=lambda: False))
+    probe=_jax_ok, priority=-10, auto_probe=lambda: False,
+    fused_fns={"prefix": _fused_impl("pallas-interpret"),
+               "tans": _fused_impl("pallas-interpret")},
+    fused_probe=_jax_ok))

@@ -81,35 +81,52 @@ def _minmax(w: np.ndarray, granularity: Granularity, group: int) -> Tuple[np.nda
 
 
 def resolve_granularity(w: np.ndarray, granularity: Granularity,
-                        group: int) -> Granularity:
+                        group: int, *, name: Optional[str] = None,
+                        stacklevel: int = 2) -> Granularity:
     """Validate a (granularity, group) request against a tensor's shape.
 
     PER_GROUP with a group that does not divide the last dim used to crash in
     an opaque reshape deep inside ``_minmax``; instead, warn and fall back to
     the nearest coarser granularity (per-channel for matrices, per-tensor for
-    vectors) so ragged tails still quantize.  A non-positive ``group`` is a
-    plain misconfiguration and raises.  PER_CHANNEL on a 1-D tensor would
-    degenerate to one (scale, zero) pair per ELEMENT (8 metadata bytes per
-    parameter — larger than fp32): warn and fall back to per-tensor.
+    scalars/vectors) so ragged tails still quantize.  A non-positive
+    ``group`` is a plain misconfiguration and raises.  PER_CHANNEL on a
+    scalar or 1-D tensor would degenerate to one (scale, zero) pair per
+    ELEMENT (8 metadata bytes per parameter — larger than fp32): warn and
+    fall back to per-tensor.
+
+    ``name`` (the container tensor name, threaded from
+    ``store.CompressedModel.compress``) prefixes the warning so a fallback
+    in a 300-tensor model is attributable; ``stacklevel`` points the
+    warning at this function's direct caller by default — callers that wrap
+    it (``quantize``) bump it so the warning lands on *their* caller.
     """
+    tag = f"{name}: " if name else ""
     if granularity is Granularity.PER_CHANNEL and w.ndim < 2:
         warnings.warn(
-            f"PER_CHANNEL on a 1-D tensor of shape {tuple(w.shape)} would "
-            f"store per-element scales; falling back to per_tensor",
-            stacklevel=3)
+            f"{tag}PER_CHANNEL on a {w.ndim}-D tensor of shape "
+            f"{tuple(w.shape)} would store per-element scales; falling back "
+            f"to per_tensor", stacklevel=stacklevel)
         return Granularity.PER_TENSOR
     if granularity is not Granularity.PER_GROUP:
         return granularity
     if group <= 0:
-        raise ValueError(f"PER_GROUP quantization needs group >= 1, got {group}")
-    if w.ndim >= 1 and w.shape[-1] % group == 0:
+        raise ValueError(
+            f"{tag}PER_GROUP quantization needs group >= 1, got {group}")
+    if w.ndim == 0:
+        # a scalar has no last dim to group; the generic "does not divide"
+        # wording would be nonsense, so say what actually happened
+        warnings.warn(
+            f"{tag}PER_GROUP on a 0-D tensor has no axis to group; "
+            f"falling back to per_tensor", stacklevel=stacklevel)
+        return Granularity.PER_TENSOR
+    if w.shape[-1] % group == 0:
         return granularity
     fallback = (Granularity.PER_CHANNEL if w.ndim >= 2
                 else Granularity.PER_TENSOR)
     warnings.warn(
-        f"PER_GROUP group={group} does not divide the last dim of shape "
-        f"{tuple(w.shape)}; falling back to {fallback.value} for this tensor",
-        stacklevel=3)
+        f"{tag}PER_GROUP group={group} does not divide the last dim of "
+        f"shape {tuple(w.shape)}; falling back to {fallback.value} for "
+        f"this tensor", stacklevel=stacklevel)
     return fallback
 
 
@@ -128,16 +145,19 @@ def quantize(
     granularity: Granularity = Granularity.PER_TENSOR,
     group: int = 128,
     scheme: Optional[Scheme] = None,
+    name: Optional[str] = None,
 ) -> QuantizedTensor:
     """Quantize ``w`` with the EntroLLM mixed scheme.
 
     ``scheme=None`` (default) applies the paper's per-tensor rule; pass a scheme to
-    force one branch (used by tests and by the policy layer).
+    force one branch (used by tests and by the policy layer).  ``name`` only
+    labels granularity-fallback warnings (see :func:`resolve_granularity`).
     """
     w = np.asarray(w, dtype=np.float32)
     if scheme is None:
         scheme = choose_scheme(w)
-    granularity = resolve_granularity(w, granularity, group)
+    granularity = resolve_granularity(w, granularity, group, name=name,
+                                      stacklevel=3)
     qmax = float((1 << bits) - 1)
     lo, hi = _minmax(w, granularity, group)
 

@@ -330,6 +330,75 @@ def plan_execution(model: "CompressedModel", n_layers: int,
     return plan
 
 
+@dataclasses.dataclass
+class FusedTileSpan:
+    """One stacked tensor's layer-l slice as *whole* segments whose lane
+    boundaries coincide with matmul K-tiles (the fused-kernel contract:
+    no trims, uniform counts — contrast :class:`ExecutionSpan`, which
+    tolerates boundary segments by decoding them twice)."""
+
+    tensor: str
+    layer: int
+    segs: List[_Seg]
+    seg_symbols: int
+
+
+def fused_tile_reason(model: "CompressedModel", n_layers: int,
+                      name: str) -> Optional[str]:
+    """Why ``name`` cannot feed the fused decode→dequant→matmul kernel —
+    ``None`` when its segments tile-align with per-layer (K, N) blocks.
+
+    The geometric contract (see kernels/fused_decode_matmul.py): a stacked
+    (L, K, N) tensor whose segments all hold the same ``seg`` symbols, with
+    ``seg`` a multiple of the row width N and the per-layer symbol count a
+    multiple of ``seg`` — so each layer is a whole number of lanes and each
+    decoded lane reshapes row-major into whole (seg/N, N) K-tile rows.
+    """
+    meta = model.tensors[name]
+    if len(meta.shape) != 3:
+        return f"shape {meta.shape} is not a stacked (L, K, N) matrix"
+    if meta.shape[0] != n_layers:
+        return f"leading dim {meta.shape[0]} != n_layers {n_layers}"
+    counts = np.asarray(meta.seg_counts)
+    seg = int(counts[0])
+    if not (counts == seg).all():
+        return "ragged tail segment (non-uniform symbol counts)"
+    _, K, N = meta.shape
+    if seg % N:
+        return f"segment of {seg} symbols does not tile rows of width {N}"
+    if (K * N) % seg:
+        return f"layer slice of {K * N} symbols is not a whole number " \
+               f"of {seg}-symbol segments"
+    return None
+
+
+def plan_fused_spans(model: "CompressedModel", n_layers: int,
+                     names: Sequence[str]) -> Dict[str, List[FusedTileSpan]]:
+    """Per-layer whole-segment spans for fused-eligible tensors.
+
+    Raises on any name failing :func:`fused_tile_reason` — callers classify
+    first and fall back to :func:`plan_execution` for the rest.  Returns
+    ``{name: [span for layer 0, span for layer 1, ...]}``.
+    """
+    out: Dict[str, List[FusedTileSpan]] = {}
+    for name in names:
+        reason = fused_tile_reason(model, n_layers, name)
+        if reason:
+            raise ValueError(f"{name}: {reason}")
+        meta = model.tensors[name]
+        seg = int(meta.seg_counts[0])
+        segs = tensor_segments(model, name)
+        lanes_per_layer = (meta.n_symbols // n_layers) // seg
+        out[name] = [
+            FusedTileSpan(tensor=name, layer=l,
+                          segs=segs[l * lanes_per_layer:
+                                    (l + 1) * lanes_per_layer],
+                          seg_symbols=seg)
+            for l in range(n_layers)
+        ]
+    return out
+
+
 def iter_seg_runs(segs: Sequence[_Seg],
                   chunk_symbols: Optional[int]) -> Iterator[List[_Seg]]:
     """Split a segment sequence into consecutive runs of at most

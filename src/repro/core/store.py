@@ -211,7 +211,7 @@ class CompressedModel:
             # bits="auto" already quantized at 4 bits inside the probe
             qts[name] = pol.qt if pol.qt is not None else quant.quantize(
                 w, pol.bits, pol.granularity, group=pol.group,
-                scheme=pol.scheme)
+                scheme=pol.scheme, name=name)
 
         # Alg.1 line 11, per group: one frequency table across each
         # (codec, bits) group of the model (v1 == the single-group case).

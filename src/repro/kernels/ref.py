@@ -30,3 +30,26 @@ def decode_streams_ref(mat: np.ndarray, counts: np.ndarray, lut_sym: np.ndarray,
     """Host-side multi-stream oracle (shared with core.bitstream)."""
     from repro.core.bitstream import decode_streams
     return decode_streams(mat, counts, lut_sym, lut_len, max_len)
+
+
+def fused_decode_matmul_ref(x: jax.Array, mat: np.ndarray, table, scale, zero,
+                            *, seg_symbols: int, K: int, N: int) -> jax.Array:
+    """Numpy-decode oracle for ``kernels.fused_decode_matmul``.
+
+    Decodes the (S, B) lane matrix serially on the host through the numpy
+    backend (itself oracle-checked against ``bitstream.decode_serial`` /
+    ``decode_serial_tans`` by ``tests/test_decode_oracle_parity.py``), then
+    applies the *exact* dequant + dot ops of ``models.layers.deq``/``matmul``
+    — so the jit fused impl must match it bit for bit, and the Pallas impls
+    allclose (bf16 MXU accumulation order differs inside the kernel).
+    """
+    from repro.core.decode_backends import get_backend
+    mat = np.asarray(mat)
+    counts = np.full(mat.shape[0], seg_symbols, np.int64)
+    dec = get_backend("numpy").decode_table(table, mat, counts,
+                                            max_count=seg_symbols)
+    q = jnp.asarray(np.asarray(dec).reshape(K, N).astype(np.uint8))
+    dt = x.dtype
+    wd = q.astype(dt) * jnp.asarray(scale).astype(dt) \
+        + jnp.asarray(zero).astype(dt)
+    return x @ wd

@@ -64,6 +64,17 @@ def main(argv=None):
                         "keeps the entropy-coded payload resident and "
                         "decodes each layer just before its matmuls "
                         "(bit-identical greedy outputs; see docs/SERVING.md)")
+    p.add_argument("--fused", action="store_true",
+                   help="with --resident compressed: hand tile-aligned "
+                        "tensors to the fused decode→dequant→matmul kernel "
+                        "as payload handles (weights never materialize "
+                        "densely in HBM); incompatible tensors fall back "
+                        "per-tensor to the per-layer decode path")
+    p.add_argument("--fused-impl", default=None,
+                   choices=("pallas", "jax", "pallas-interpret"),
+                   help="fused kernel implementation override (default: "
+                        "capability pick — compiled Pallas where it probes, "
+                        "the jit in-graph decode elsewhere)")
     p.add_argument("--decode-backend", default=None,
                    help="decoder backend name (numpy / jax / pallas / "
                         "pallas-interpret); default: capability auto-pick")
@@ -118,6 +129,10 @@ def main(argv=None):
         if args.no_stream:
             p.error("--no-stream only applies to the load-time decode of "
                     "--resident dense")
+    elif args.fused or args.fused_impl:
+        p.error("--fused/--fused-impl require --resident compressed (the "
+                "fused kernel consumes the entropy-coded payload handles "
+                "that mode keeps resident)")
 
     # validate the backend against the registry BEFORE any expensive work, so
     # a typo fails with the list of choices, not a deep KeyError mid-load
@@ -223,9 +238,18 @@ def main(argv=None):
         load_kw.setdefault("chunk_symbols", 64 * 1024)
         t0 = time.perf_counter()
         serve_params = CompressedResidentWeights(
-            cm, cfg, backend=args.decode_backend, **load_kw)
+            cm, cfg, backend=args.decode_backend, fused=args.fused,
+            fused_impl=args.fused_impl, **load_kw)
         load_metrics["decode_load_s"] = time.perf_counter() - t0
         load_metrics["decode_backend"] = serve_params.backend.name
+        if args.fused:
+            impls = sorted({fq.impl for slots in serve_params._fused_slots
+                            for fq in slots.values()})
+            print(f"  fused decode→dequant→matmul: "
+                  f"{len(serve_params._fused)} tensors "
+                  f"{sorted(serve_params._fused)} via {impls or ['-']}; "
+                  f"{len(serve_params.fused_fallback)} fall back "
+                  f"{serve_params.fused_fallback or ''}")
         rb = serve_params.resident_bytes()
         peak = serve_params.peak_resident_bytes()
         print(f"compressed-resident load [{load_metrics['decode_backend']}]: "

@@ -55,6 +55,16 @@ def supports_resident_serving(cfg: ArchConfig) -> bool:
     return hasattr(build(cfg), "resident_block")
 
 
+def supports_fused_resident(cfg: ArchConfig) -> bool:
+    """True when the family's per-layer drivers can consume fused payload
+    handles (:class:`repro.kernels.fused_decode_matmul.FusedQT`) in their
+    weight-slot dicts.  Any family meeting the resident contract qualifies:
+    the drivers route every weight through ``layers.matmul``, which
+    dispatches FusedQT slots to the fused decode→dequant→matmul kernel
+    (tensors the fused tile contract rejects simply stay QT slots)."""
+    return supports_resident_serving(cfg)
+
+
 def cache_specs(cfg: ArchConfig, **kw) -> Dict[str, Tuple]:
     """Family ``cache_specs`` with kwarg filtering: callers pass the full
     option set (``layout="slot"``, ``kv_bits=8``, ...) and families that do

@@ -269,7 +269,14 @@ def resident_block(cfg: ArchConfig, lp, x, cache, l, pos):
     layer-stacked cache: slice layer ``l``'s rows, run the block, write them
     back.  ``pos`` follows the step functions' contract (scalar lockstep or
     (B,) per-slot); S comes from ``x``, so the same callable serves decode
-    (S=1) and chunked prefill."""
+    (S=1) and chunked prefill.
+
+    ``lp`` values may be dense arrays, QT/QT4 triples, or — under
+    ``CompressedResidentWeights(fused=True)`` — FusedQT payload handles:
+    every weight reaches ``layers.matmul``, whose dispatch decodes fused
+    handles inside the matmul instead of reading a prefetched dense tile.
+    The handle's static geometry is layer-invariant, so this block still
+    traces once for all layers."""
     from repro.distributed.ctx import constrain_activation
     S = x.shape[1]
     positions = jnp.asarray(pos)[..., None] + jnp.arange(S)   # (S,) or (B, S)

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.fused_decode_matmul import FusedQT, fused_decode_matmul
+
 # --------------------------------------------------------------------------- schema
 
 Axes = Tuple[Optional[str], ...]
@@ -168,7 +170,15 @@ def matmul(x: jax.Array, w: Any, dim_nums: Optional[str] = None) -> jax.Array:
     Under exact-TP serving hints ``deq`` all-gathers the HBM-sharded weight
     first, so the dot reads a full-shape buffer and rounds exactly like the
     single-device program (sharded residency, replicated compute).
+
+    A :class:`~repro.kernels.fused_decode_matmul.FusedQT` weight routes to
+    the fused entropy-decode→dequant→matmul kernel — the weight never
+    exists densely; the handle's jit path runs the exact ``deq`` ops after
+    an in-graph decode, so it stays bit-identical to a QT slot.
     """
+    if isinstance(w, FusedQT):
+        assert dim_nums is None, "FusedQT weights support plain x @ w only"
+        return fused_decode_matmul(x, w)
     wd = deq(w, x.dtype)
     if dim_nums is None:
         return x @ wd

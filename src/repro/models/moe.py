@@ -313,6 +313,12 @@ def decode_step(cfg: ArchConfig, params, token, cache, pos, *, unroll: int = 1):
 # prefixed expert weights exactly as `_layer_stack` would slice them, so
 # `_moe_wts` resolves them unchanged; the MoE cache is always the plain
 # (k, v) pair (the int8 KV path is dense-only today, as in `decode_step`).
+#
+# Under `CompressedResidentWeights(fused=True)` the 2-D attention weights
+# arrive as FusedQT payload handles (decoded inside `layers.matmul`); the
+# (L, E, D, F) expert stacks fail the fused tile contract (not a stacked
+# matrix) and automatically stay on the unfused per-layer decode path —
+# the per-tensor fallback `tests/differential/` pins.
 
 embed_step = dense.embed_step
 head_step = dense.head_step

@@ -47,10 +47,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.bitstream import GUARD_BYTES, pack_streams, pow2_bucket
 from repro.core.decode_backends import DecoderBackend, get_backend
 from repro.core.scheduler import (DEFAULT_CHUNK_SYMBOLS, ExecutionStep,
-                                  decode_execution_step, iter_seg_runs,
-                                  plan_execution)
+                                  decode_execution_step, fused_tile_reason,
+                                  iter_seg_runs, plan_execution,
+                                  plan_fused_spans)
 from repro.core.spec import quantizable_shape
 from repro.core.store import CompressedModel
 from repro.models.layers import pack_qt
@@ -85,12 +87,23 @@ class CompressedResidentWeights:
         instead of O(layer).  ``None`` -> one call per (layer, table).
       prefetch: decode layer l+1 on a worker thread while layer l computes
         (double buffering).  Disable for single-threaded debugging.
+      fused: hand tile-aligned tensors to the fused decode→dequant→matmul
+        kernel as :class:`~repro.kernels.fused_decode_matmul.FusedQT`
+        payload handles (built once, device-resident) instead of decoding
+        them into dense per-layer slots.  Tensors the fused contract cannot
+        host (ragged tails, non-matrix shapes, non-scalar per-layer scales)
+        stay on the unfused per-layer decode path; ``fused_fallback`` maps
+        each to its reason.
+      fused_impl: fused implementation override ("pallas" / "jax" /
+        "pallas-interpret"); None = capability pick (compiled Pallas where
+        it probes, the jit in-graph decode elsewhere).
     """
 
     def __init__(self, model: CompressedModel, cfg: ArchConfig, *,
                  backend=None, pack_int4: bool = True,
                  chunk_symbols: Optional[int] = DEFAULT_CHUNK_SYMBOLS,
-                 prefetch: bool = True):
+                 prefetch: bool = True, fused: bool = False,
+                 fused_impl: Optional[str] = None):
         self.model = model
         self.cfg = cfg
         self.n_layers = int(cfg.n_layers)
@@ -115,6 +128,14 @@ class CompressedResidentWeights:
                 val = self._load_one(name)
                 (self.stacked if self._is_layer_stacked(name, meta.shape)
                  else self.globals)[name] = val
+
+        self.fused = bool(fused)
+        self._fused: List[str] = []
+        self.fused_fallback: Dict[str, str] = {}
+        self._fused_slots: List[Dict[str, Any]] = [
+            {} for _ in range(self.n_layers)]
+        if fused:
+            self._build_fused_slots(fused_impl)
 
         self.chunk_symbols = chunk_symbols
         self.plan: List[List[ExecutionStep]] = plan_execution(
@@ -156,6 +177,57 @@ class CompressedResidentWeights:
         return s.ndim == len(self.model.tensors[name].shape) \
             and s.shape[0] in (1, self.n_layers)
 
+    def _fused_reason(self, name: str) -> Optional[str]:
+        """Why a hosted tensor cannot take the fused kernel path (None =
+        eligible): the scheduler's tile-alignment contract plus a per-layer
+        scale/zero the kernel can broadcast against its (K, N) tiles."""
+        reason = fused_tile_reason(self.model, self.n_layers, name)
+        if reason:
+            return reason
+        m = self.model.qmeta[name]
+        s = np.asarray(m["scale"])
+        N = self.model.tensors[name].shape[-1]
+        if s.ndim != 3 or s.shape[1] != 1 or s.shape[2] not in (1, N):
+            return f"scale shape {s.shape} is not a per-layer scalar/row"
+        return None
+
+    def _build_fused_slots(self, fused_impl: Optional[str]) -> None:
+        """Partition ``_hosted`` into fused handles + unfused fallback, and
+        build every layer's :class:`FusedQT` ONCE (device-resident payload
+        slices + decode tables; nothing is re-decoded per step — decode
+        happens inside the matmul)."""
+        from repro.kernels.fused_decode_matmul import build_fused_qt
+        keep: List[str] = []
+        for name in self._hosted:
+            reason = self._fused_reason(name)
+            if reason:
+                keep.append(name)
+                self.fused_fallback[name] = reason
+            else:
+                self._fused.append(name)
+        self._hosted = keep
+        spans = plan_fused_spans(self.model, self.n_layers, self._fused)
+        for name, layer_spans in spans.items():
+            table = self.model.table_for(name)
+            m = self.model.qmeta[name]
+            scale, zero = np.asarray(m["scale"]), np.asarray(m["zero"])
+            _, K, N = self.model.tensors[name].shape
+            # one pow2 width across ALL layers -> the per-layer lane
+            # matrices share one shape (one jit/pallas trace per tensor)
+            width = pow2_bucket(
+                max(GUARD_BYTES,
+                    max(s.nbytes for sp in layer_spans for s in sp.segs)), 64)
+            short = name[len(LAYER_PREFIX):]
+            for sp in layer_spans:
+                streams = [self.model.payload[s.offset: s.offset + s.nbytes]
+                           for s in sp.segs]
+                mat, _ = pack_streams(streams, min_width=width)
+                i = min(sp.layer, scale.shape[0] - 1)
+                self._fused_slots[sp.layer][short] = build_fused_qt(
+                    table, mat, scale[i], zero[i],
+                    seg_symbols=sp.seg_symbols, K=K, N=N, bits=m["bits"],
+                    impl=fused_impl)
+
     def _load_one(self, name: str) -> Any:
         """Decode one tensor with the whole-model loader's packing rules
         (globals and dense-stacked carve-outs are bit-identical to
@@ -187,6 +259,8 @@ class CompressedResidentWeights:
                 slot[name[len(LAYER_PREFIX):]] = _device(qt)
         for name, w in self.stacked.items():
             slot[name[len(LAYER_PREFIX):]] = w[l]
+        # fused handles are prebuilt and device-resident: no per-get work
+        slot.update(self._fused_slots[l])
         return slot
 
     def prefetch(self, l: int) -> None:
@@ -216,13 +290,19 @@ class CompressedResidentWeights:
         footprint by the resident benchmark/tests)."""
         payload = sum(int(self.model.tensors[n].seg_nbytes.sum())
                       for n in self._hosted)
+        # fused tensors keep their payload as device lane matrices (guard +
+        # pow2-width padding included): count the actual resident bytes
+        payload += sum(int(fq.mat.nbytes)
+                       for slots in self._fused_slots
+                       for fq in slots.values())
+        compressed = self._hosted + self._fused
         tables = sum(
             sum(np.asarray(a).nbytes
                 for a in self.model.tables[t].decode_arrays().values())
-            for t in {self.model.table_id_for(n) for n in self._hosted})
+            for t in {self.model.table_id_for(n) for n in compressed})
         qmeta = sum(np.asarray(self.model.qmeta[n]["scale"]).nbytes
                     + np.asarray(self.model.qmeta[n]["zero"]).nbytes
-                    for n in self._hosted)
+                    for n in compressed)
         leaves = lambda tree: (
             tuple(tree) if isinstance(tree, tuple) else (tree,))
         globals_b = sum(p.nbytes for v in self.globals.values()
@@ -256,7 +336,7 @@ class CompressedResidentWeights:
         (globals/carve-outs identical; hosted tensors fully decoded)."""
         b = self.resident_bytes()
         full = 0
-        for n in self._hosted:
+        for n in self._hosted + self._fused:
             m = self.model.qmeta[n]
             t = self.model.tensors[n]
             packed = m["bits"] == 4 and self.pack_int4 \

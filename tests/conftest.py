@@ -8,10 +8,96 @@ An operator-provided device count (XLA_FLAGS already naming the option) wins.
 
 Single-device tests are unaffected: jit without shardings still places
 everything on device 0, exactly as on a one-device host.
+
+Tier-1 policy knobs (see docs/TESTING.md):
+
+* Hypothesis runs under a **deterministic profile** — ``derandomize=True``
+  derives a fixed seed per test, ``deadline=None`` tolerates jit compile
+  time, no example database — so property tests are tier-1 citizens: same
+  examples every run, no flaky shrink-cache interactions.  Registration is
+  guarded; without the dev extra the property tests ``importorskip`` as
+  before.
+* ``--require-dev-deps`` (CI tier-1) hard-imports hypothesis up front and
+  fails the session if any test still skipped for a missing dev
+  dependency — property tests can never silently drop out of CI.
+  Capability skips (e.g. a decode backend that genuinely cannot run on the
+  host) are unaffected.
+* ``--rng-repeats N`` fans the ``rng_seed`` fixture out over N distinct
+  PRNG seeds (default 1, seed 0 — the historical value).  The serving
+  bit-identity suites consume it; CI's flake-audit job runs them 3x.
 """
 import os
+
+import pytest
 
 _flags = os.environ.get("XLA_FLAGS", "")
 if "xla_force_host_platform_device_count" not in _flags:
     os.environ["XLA_FLAGS"] = \
         (_flags + " --xla_force_host_platform_device_count=8").strip()
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--require-dev-deps", action="store_true", default=False,
+        help="fail the session if any test skips because a dev extra "
+             "(hypothesis) is missing — tier-1 CI runs with this on")
+    parser.addoption(
+        "--rng-repeats", type=int, default=1, metavar="N",
+        help="run rng_seed-consuming suites N times with distinct PRNG "
+             "seeds (seeded-RNG flake audit)")
+
+
+def pytest_configure(config):
+    if config.getoption("--require-dev-deps"):
+        try:
+            import hypothesis  # noqa: F401
+        except ImportError as e:
+            raise pytest.UsageError(
+                f"--require-dev-deps: {e} — install the dev extra "
+                f"(pip install -e '.[dev]')") from e
+    try:
+        from hypothesis import settings
+    except ImportError:
+        return
+    settings.register_profile(
+        "repro-deterministic", derandomize=True, deadline=None,
+        database=None, max_examples=25)
+    settings.load_profile(
+        os.environ.get("HYPOTHESIS_PROFILE", "repro-deterministic"))
+
+
+@pytest.fixture(scope="module")
+def rng_seed(request):
+    """PRNG seed for seeded-RNG suites; ``--rng-repeats N`` fans it out."""
+    return getattr(request, "param", 0)
+
+
+def pytest_generate_tests(metafunc):
+    if "rng_seed" in metafunc.fixturenames:
+        n = max(1, metafunc.config.getoption("--rng-repeats"))
+        metafunc.parametrize("rng_seed", range(n), indirect=True,
+                             scope="module")
+
+
+_DEV_DEP_MARKERS = ("could not import", "dev extra")
+
+
+def pytest_sessionfinish(session, exitstatus):
+    """With ``--require-dev-deps``, turn dev-dependency skips into a
+    session failure (the skip reason of ``importorskip`` names the missing
+    import; capability skips use different wording and stay skips)."""
+    if not session.config.getoption("--require-dev-deps"):
+        return
+    tr = session.config.pluginmanager.get_plugin("terminalreporter")
+    bad = []
+    for rep in (tr.stats.get("skipped", []) if tr else []):
+        reason = str(getattr(rep, "longrepr", ""))
+        if any(m in reason for m in _DEV_DEP_MARKERS):
+            bad.append(f"{rep.nodeid}: {reason.splitlines()[-1]}")
+    if bad and session.exitstatus == 0:
+        for line in bad:
+            tr.write_line(f"--require-dev-deps: {line}", red=True)
+        tr.write_line(
+            f"--require-dev-deps: {len(bad)} test(s) skipped for a missing "
+            f"dev dependency — failing the session", red=True)
+        session.exitstatus = 1

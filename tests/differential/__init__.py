@@ -1,0 +1,6 @@
+"""Differential harness: fused decode→dequant→matmul vs its oracles.
+
+Package so the test modules can share the ``qt_cases`` builders via a
+relative import (tests/ itself is not a package — pytest imports these
+modules as ``differential.*``).
+"""

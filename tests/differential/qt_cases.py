@@ -1,0 +1,176 @@
+"""Case builders shared by the differential harness (tests/differential/).
+
+Two layers:
+
+* **Deterministic builders** — plain numpy, importable with no dev extras.
+  :func:`fused_case` builds a symbol-level case (scale/zero chosen
+  directly, per granularity); :func:`quantized_case` drives the real
+  quantizer first, so the encoded symbols come from an actual
+  :class:`~repro.core.quant.QuantizedTensor` — including the PER_GROUP
+  ragged-tail fallback path.
+* **Hypothesis strategies** — :func:`fused_case_kwargs` draws builder
+  kwargs (bits, codec, granularity, geometry, skewed/constant histograms
+  with zero-width alphabet entries).  Imported lazily: only the fuzz
+  modules, which ``importorskip("hypothesis")``, ever call it.
+
+Every case lays out its lane matrix exactly like
+``serving.resident.CompressedResidentWeights._build_fused_slots``:
+per-segment encode, then a guard-padded ``pack_streams`` at one pow2
+width — so what the tests feed the kernel is what serving feeds it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional
+
+import numpy as np
+
+CODECS = ("huffman", "rans")
+# scale/zero shapes the fused contract admits on a 2-D (K, N) case:
+# scalar, per-input-channel column, per-output-channel row
+GRANULARITIES = ("per_tensor", "per_channel", "per_row")
+
+
+@dataclasses.dataclass
+class FusedCase:
+    """Everything the differential tests compare against each other."""
+
+    table: object            # codec CodeTable (prefix or tans family)
+    mat: np.ndarray          # (S, B) packed lane matrix, guard-padded
+    sym: np.ndarray          # (K, N) uint8 ground-truth symbols
+    scale: np.ndarray
+    zero: np.ndarray
+    x: object                # (M, K) bf16 activation batch (jax array)
+    seg: int
+    K: int
+    N: int
+    bits: int
+
+
+def symbols(bits: int, n: int, *, seed: int = 0, skew: bool = False,
+            constant: Optional[int] = None) -> np.ndarray:
+    """Uint8 symbol vector.  ``skew`` draws from a narrow normal so most
+    alphabet entries have zero frequency (zero-width codes); ``constant``
+    collapses the whole tensor to one value."""
+    hi = (1 << bits) - 1
+    if constant is not None:
+        return np.full(n, int(constant) % (hi + 1), np.uint8)
+    rng = np.random.default_rng(seed)
+    if skew:
+        vals = np.rint(rng.normal(hi / 2.0, max(hi / 8.0, 0.5), n))
+        return np.clip(vals, 0, hi).astype(np.uint8)
+    return rng.integers(0, hi + 1, n).astype(np.uint8)
+
+
+def build_table(codec: str, sym: np.ndarray, bits: int):
+    """Codec table from the case's own histogram.  Single-support
+    histograms get one phantom count on a neighbouring symbol so both
+    codecs can build a table; the phantom symbol never occurs in the
+    streams (a zero-width-in-practice entry)."""
+    from repro.core.codecs import get_codec
+    freqs = np.bincount(sym, minlength=1 << bits).astype(np.int64)
+    if np.count_nonzero(freqs) < 2:
+        freqs[(int(sym.flat[0]) + 1) % (1 << bits)] += 1
+    return get_codec(codec).build(freqs, bits, max_code_len=12)
+
+
+def encode_lanes(table, sym: np.ndarray, seg: int) -> np.ndarray:
+    """Per-segment encode + guard-padded pack at one pow2 width — the
+    resident builder's exact layout for a layer slice."""
+    from repro.core.bitstream import GUARD_BYTES, pack_streams, pow2_bucket
+    streams = [table.encode(sym[i:i + seg])[0]
+               for i in range(0, sym.size, seg)]
+    width = pow2_bucket(max(GUARD_BYTES, max(s.size for s in streams)), 64)
+    mat, _ = pack_streams(streams, min_width=width)
+    return mat
+
+
+def fused_case(*, bits: int, codec: str, K: int, N: int, seg: int,
+               seed: int = 0, skew: bool = False,
+               constant: Optional[int] = None,
+               granularity: str = "per_tensor", m: int = 3) -> FusedCase:
+    """Symbol-level case: symbols, table, lane matrix, scale/zero of the
+    requested granularity, and a bf16 activation batch."""
+    import jax.numpy as jnp
+    assert seg % N == 0 and (K * N) % seg == 0, (K, N, seg)
+    sym = symbols(bits, K * N, seed=seed, skew=skew, constant=constant)
+    table = build_table(codec, sym, bits)
+    mat = encode_lanes(table, sym, seg)
+    rng = np.random.default_rng(seed + 1)
+    shape = {"per_tensor": (1, 1), "per_channel": (K, 1),
+             "per_row": (1, N)}[granularity]
+    scale = (0.005 + rng.random(shape) * 0.02).astype(np.float32)
+    zero = (rng.random(shape) * 0.2 - 0.1).astype(np.float32)
+    x = jnp.asarray(rng.normal(0.0, 1.0, (m, K)), jnp.bfloat16)
+    return FusedCase(table=table, mat=mat, sym=sym.reshape(K, N),
+                     scale=scale, zero=zero, x=x, seg=seg, K=K, N=N,
+                     bits=bits)
+
+
+def quantized_case(*, bits: int, codec: str, K: int, N: int, seg: int,
+                   granularity, group: int = 128, seed: int = 0,
+                   m: int = 3) -> FusedCase:
+    """Quantizer-driven case: a float matrix through ``quant.quantize``.
+    PER_GROUP with a group that does not divide N warns and falls back to
+    per-channel — that fallback QT is exactly what this builder encodes
+    (aligned PER_GROUP scales are not broadcastable against (K, N) and
+    never reach the fused path; callers pass ragged groups only)."""
+    import jax.numpy as jnp
+    from repro.core import quant
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0.0, 0.05, (K, N)).astype(np.float32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")       # ragged tails warn by design
+        qt = quant.quantize(w, bits, granularity, group=group)
+    assert qt.granularity is not quant.Granularity.PER_GROUP, \
+        "aligned PER_GROUP scales cannot broadcast against (K, N)"
+    sym = qt.q.reshape(-1)
+    table = build_table(codec, sym, bits)
+    mat = encode_lanes(table, sym, seg)
+    x = jnp.asarray(rng.normal(0.0, 1.0, (m, K)), jnp.bfloat16)
+    return FusedCase(table=table, mat=mat, sym=qt.q.reshape(K, N),
+                     scale=np.asarray(qt.scale), zero=np.asarray(qt.zero),
+                     x=x, seg=seg, K=K, N=N, bits=bits)
+
+
+def case_id(kw: dict) -> str:
+    """Readable pytest id for a builder-kwargs dict."""
+    parts = [f"{kw['codec']}{kw['bits']}",
+             f"{kw['K']}x{kw['N']}s{kw['seg']}"]
+    gran = kw.get("granularity", "per_tensor")
+    gran = getattr(gran, "value", gran)
+    if gran != "per_tensor":
+        parts.append(str(gran))
+    if kw.get("group"):
+        parts.append(f"g{kw['group']}")
+    if kw.get("skew"):
+        parts.append("skew")
+    if kw.get("constant") is not None:
+        parts.append(f"const{kw['constant']}")
+    return "-".join(parts)
+
+
+def fused_case_kwargs():
+    """Hypothesis strategy over :func:`fused_case` kwargs.  Lazy import:
+    call only under ``pytest.importorskip("hypothesis")``."""
+    from hypothesis import strategies as st
+
+    def _assemble(geom, bits, codec, seed, skew, constant, gran):
+        n, rows_per_seg, lanes = geom
+        return dict(bits=bits, codec=codec, N=n, seg=n * rows_per_seg,
+                    K=lanes * rows_per_seg, seed=seed, skew=skew,
+                    constant=constant, granularity=gran)
+
+    return st.builds(
+        _assemble,
+        st.tuples(st.sampled_from((8, 16)),      # N (row width)
+                  st.integers(1, 3),             # rows per segment
+                  st.integers(2, 4)),            # lanes (segments)
+        st.sampled_from((2, 3, 4, 8)),
+        st.sampled_from(CODECS),
+        st.integers(0, 2 ** 16),
+        st.booleans(),
+        st.one_of(st.none(), st.integers(0, 3)),
+        st.sampled_from(GRANULARITIES),
+    )

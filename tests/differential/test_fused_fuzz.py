@@ -1,0 +1,45 @@
+"""Hypothesis fuzz over the fused-kernel differential builders.
+
+Same three-way comparison as the fixed sweeps in ``test_fused_kernel.py``
+— fused jax impl vs the serial-decode oracle vs the eager unfused QT path,
+bit for bit — but with hypothesis drawing the geometry, bit width, codec,
+granularity, and histogram shape (skewed → zero-width alphabet entries,
+constant → single-support).  Runs under the deterministic profile
+registered in conftest (derandomize, fixed per-test seeds), so tier-1 sees
+the same examples every time.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev extra
+from hypothesis import given
+
+from repro.kernels.ref import fused_decode_matmul_ref
+
+from . import qt_cases
+from .test_fused_kernel import _fused, _oracle, _unfused
+
+
+@given(kw=qt_cases.fused_case_kwargs())
+def test_fuzz_jax_matches_oracle_and_unfused(kw):
+    c = qt_cases.fused_case(**kw)
+    oracle = _oracle(c)
+    fused = _fused(c, "jax")
+    unfused = _unfused(c)
+    np.testing.assert_array_equal(fused, oracle)
+    np.testing.assert_array_equal(fused, unfused)
+
+
+@given(kw=qt_cases.fused_case_kwargs())
+def test_fuzz_decoded_symbols_round_trip(kw):
+    """The lane matrix really holds the case's symbols: decode through the
+    oracle path with an identity dequant (scale=1, zero=0) and an identity
+    activation, recovering the (K, N) symbol block exactly."""
+    import jax.numpy as jnp
+    c = qt_cases.fused_case(**kw)
+    eye = jnp.eye(c.K, dtype=jnp.float32)
+    one = np.ones((1, 1), np.float32)
+    out = np.asarray(fused_decode_matmul_ref(
+        eye, c.mat, c.table, one, np.zeros((1, 1), np.float32),
+        seg_symbols=c.seg, K=c.K, N=c.N))
+    np.testing.assert_array_equal(out.astype(np.uint8), c.sym)

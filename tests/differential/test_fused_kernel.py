@@ -1,0 +1,188 @@
+"""Fused decode→dequant→matmul vs its oracles (kernel level).
+
+Every case runs a three-way comparison (builders in ``qt_cases``):
+
+* ``kernels.ref.fused_decode_matmul_ref`` — host serial decode through the
+  numpy backend + the exact deq/dot ops (the oracle);
+* the in-graph ``impl="jax"`` fused path — must match the oracle AND the
+  eager unfused ``layers.matmul(x, QT)`` **bit for bit** (same ops, so any
+  divergence is a decode bug, not float noise);
+* ``impl="pallas-interpret"`` — the same kernel body the TPU compiles,
+  interpreted on CPU; allclose only (MXU f32-accumulation order differs).
+
+Fixed sweeps cover bits {2,3,4,8} × both codec families × the three
+broadcastable granularities × skewed and constant histograms; the
+quantizer-driven cases add PER_GROUP ragged-tail fallback QTs.  The
+hypothesis fuzz layer rides the same builders in ``test_fused_fuzz.py``.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.decode_backends import get_backend
+from repro.core.quant import Granularity
+from repro.core.scheduler import (fused_tile_reason, plan_fused_spans,
+                                  tensor_segments)
+from repro.core.spec import spec_from_legacy
+from repro.core.store import CompressedModel
+from repro.kernels.fused_decode_matmul import (build_fused_qt,
+                                               fused_decode_matmul,
+                                               lanes_per_tile)
+from repro.kernels.ref import fused_decode_matmul_ref
+from repro.models import layers
+
+from . import qt_cases
+
+CASES = [
+    dict(bits=8, codec="huffman", K=8, N=16, seg=32),
+    dict(bits=4, codec="huffman", K=8, N=16, seg=16,
+         granularity="per_channel"),
+    dict(bits=8, codec="rans", K=8, N=16, seg=32, granularity="per_row"),
+    dict(bits=4, codec="rans", K=6, N=8, seg=24, skew=True),
+    dict(bits=8, codec="huffman", K=4, N=8, seg=16, constant=3),
+    dict(bits=2, codec="rans", K=8, N=16, seg=64),
+    dict(bits=3, codec="huffman", K=9, N=8, seg=24, skew=True),
+]
+
+QCASES = [
+    # ragged PER_GROUP tails fall back to per-channel inside quantize —
+    # the fallback QT must flow through the fused kernel like any other
+    dict(bits=8, codec="huffman", K=8, N=48, seg=48,
+         granularity=Granularity.PER_GROUP, group=32),
+    dict(bits=4, codec="rans", K=8, N=48, seg=96,
+         granularity=Granularity.PER_GROUP, group=36),
+    dict(bits=8, codec="rans", K=8, N=16, seg=32,
+         granularity=Granularity.PER_TENSOR),
+]
+
+# the Pallas wrapper takes scalar or per-output-row scales (per-channel
+# (K, 1) columns stay on the jax impl)
+INTERPRET_CASES = [
+    dict(bits=8, codec="huffman", K=8, N=16, seg=32),
+    dict(bits=4, codec="rans", K=8, N=16, seg=32, granularity="per_row"),
+]
+
+
+def _oracle(c):
+    return np.asarray(fused_decode_matmul_ref(
+        c.x, c.mat, c.table, c.scale, c.zero,
+        seg_symbols=c.seg, K=c.K, N=c.N))
+
+
+def _fused(c, impl):
+    fq = build_fused_qt(c.table, c.mat, c.scale, c.zero, seg_symbols=c.seg,
+                        K=c.K, N=c.N, bits=c.bits, impl=impl)
+    # through layers.matmul, so the dispatch hook is part of the test
+    return np.asarray(layers.matmul(c.x, fq))
+
+
+def _unfused(c):
+    qt = layers.pack_qt(c.sym, c.scale, c.zero, bits=c.bits)
+    qt = type(qt)(*(jnp.asarray(p) for p in qt))
+    return np.asarray(layers.matmul(c.x, qt))
+
+
+@pytest.mark.parametrize("kw", CASES, ids=qt_cases.case_id)
+def test_jax_impl_matches_oracle_and_unfused_bitwise(kw):
+    c = qt_cases.fused_case(**kw)
+    oracle = _oracle(c)
+    fused = _fused(c, "jax")
+    unfused = _unfused(c)
+    np.testing.assert_array_equal(fused, oracle)
+    np.testing.assert_array_equal(fused, unfused)
+
+
+@pytest.mark.parametrize("kw", QCASES, ids=qt_cases.case_id)
+def test_quantized_tensor_cases_bitwise(kw):
+    c = qt_cases.quantized_case(**kw)
+    oracle = _oracle(c)
+    fused = _fused(c, "jax")
+    unfused = _unfused(c)
+    np.testing.assert_array_equal(fused, oracle)
+    np.testing.assert_array_equal(fused, unfused)
+
+
+@pytest.mark.parametrize("kw", INTERPRET_CASES, ids=qt_cases.case_id)
+def test_pallas_interpret_close_to_oracle(kw):
+    c = qt_cases.fused_case(**kw)
+    got = _fused(c, "pallas-interpret").astype(np.float32)
+    oracle = _oracle(c).astype(np.float32)
+    np.testing.assert_allclose(got, oracle, rtol=1e-2, atol=1e-2)
+
+
+# -------------------------------------------------------- backend registry
+
+def test_backend_fused_registry_parity():
+    """The numpy backend's fused path (host decode + same ops) and the jax
+    backend's in-graph path answer identically through the registry."""
+    c = qt_cases.fused_case(bits=8, codec="rans", K=8, N=16, seg=32)
+    outs = {}
+    for name in ("numpy", "jax"):
+        b = get_backend(name)
+        assert b.fused_available()
+        assert b.fused_families() == ["prefix", "tans"]
+        outs[name] = np.asarray(b.fused_matmul(
+            c.table, c.x, c.mat, c.scale, c.zero,
+            seg_symbols=c.seg, K=c.K, N=c.N, bits=c.bits))
+    np.testing.assert_array_equal(outs["numpy"], outs["jax"])
+
+
+def test_backend_without_family_raises():
+    class Bogus:
+        kernel = "bogus"
+
+    c = qt_cases.fused_case(bits=8, codec="huffman", K=4, N=8, seg=16)
+    with pytest.raises(RuntimeError, match="no fused 'bogus'"):
+        get_backend("numpy").fused_matmul(
+            Bogus(), c.x, c.mat, c.scale, c.zero,
+            seg_symbols=c.seg, K=c.K, N=c.N)
+
+
+# -------------------------------------------------------- contract checks
+
+def test_build_fused_qt_rejects_misaligned_geometry():
+    c = qt_cases.fused_case(bits=8, codec="huffman", K=8, N=16, seg=32)
+    with pytest.raises(ValueError, match="dense geometry"):
+        build_fused_qt(c.table, c.mat, c.scale, c.zero, seg_symbols=c.seg,
+                       K=c.K + 1, N=c.N, bits=c.bits)
+    # same symbol total, but segments no longer tile rows of width N
+    with pytest.raises(ValueError, match="tile rows"):
+        build_fused_qt(c.table, c.mat, c.scale, c.zero, seg_symbols=c.seg,
+                       K=2, N=64, bits=c.bits)
+
+
+def test_lanes_per_tile_is_largest_divisor():
+    assert lanes_per_tile(256) == 128
+    assert lanes_per_tile(128) == 128
+    assert lanes_per_tile(12) == 12
+    assert lanes_per_tile(130) == 65
+    assert lanes_per_tile(6, cap=4) == 3
+
+
+def test_fused_tile_reason_and_spans():
+    """The scheduler's eligibility classifier and whole-segment span
+    planner, one tensor per failure mode."""
+    rng = np.random.default_rng(0)
+    host = {
+        "layers/w_a": rng.normal(0, 0.05, (2, 64, 32)).astype(np.float32),
+        "layers/w_b": rng.normal(0, 0.05, (2, 80, 32)).astype(np.float32),
+        "layers/w_c": rng.normal(0, 0.05, (4, 64, 32)).astype(np.float32),
+        "layers/w_d": rng.normal(0, 0.05, (2, 2, 32, 32)).astype(np.float32),
+        "layers/w_e": rng.normal(0, 0.05, (2, 72, 32)).astype(np.float32),
+    }
+    cm = CompressedModel.compress(host, spec=spec_from_legacy(
+        8, Granularity.PER_TENSOR, segment_symbols=1024))
+    assert fused_tile_reason(cm, 2, "layers/w_a") is None
+    assert "whole number" in fused_tile_reason(cm, 2, "layers/w_b")
+    assert "n_layers" in fused_tile_reason(cm, 2, "layers/w_c")
+    assert "stacked (L, K, N)" in fused_tile_reason(cm, 2, "layers/w_d")
+    assert "ragged tail" in fused_tile_reason(cm, 2, "layers/w_e")
+
+    spans = plan_fused_spans(cm, 2, ["layers/w_a"])["layers/w_a"]
+    assert [sp.layer for sp in spans] == [0, 1]
+    assert all(len(sp.segs) == 2 and sp.seg_symbols == 1024 for sp in spans)
+    # spans partition the tensor's segments, in order, with no trims
+    assert [s.index for sp in spans for s in sp.segs] \
+        == [s.index for s in tensor_segments(cm, "layers/w_a")]
+    with pytest.raises(ValueError, match="whole number"):
+        plan_fused_spans(cm, 2, ["layers/w_b"])

@@ -1,0 +1,203 @@
+"""End-to-end identity: fused-resident serving vs unfused vs dense-QT.
+
+The acceptance gate for the fused decode→dequant→matmul kernel: switching
+``CompressedResidentWeights(fused=True)`` must not change a single greedy
+token — for both attention-cache families (dense, moe), through both front
+ends (lockstep ``Engine.generate`` and the continuous-batching scheduler),
+and for mixed rans4+huffman8 containers.  Tensors the tile contract
+rejects fall back **per-tensor** (never per-model) with a recorded reason:
+moe's 4-D expert stacks are the standing example, and a misaligned
+segment size exercises the same path on dense.
+
+The module-scoped harness consumes the ``rng_seed`` fixture, so CI's
+flake-audit job (``--rng-repeats 3``) re-derives the model weights from
+distinct PRNG keys and re-runs every identity check.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core.quant import Granularity
+from repro.core.spec import CompressionSpec, spec_from_legacy
+from repro.core.store import CompressedModel
+from repro.kernels.fused_decode_matmul import FusedQT
+from repro.models import api
+from repro.models.layers import QT, QT4
+from repro.serving import engine as serving_engine
+from repro.serving.batching import ContinuousEngine
+from repro.serving.resident import CompressedResidentWeights
+
+MAX_LEN = 32
+SEGMENT = 1024
+CHUNK = 64 * 1024
+
+
+def _cfg(family: str):
+    if family == "dense":
+        return registry.reduced(registry.get("qwen3-1.7b"))
+    cfg = registry.reduced(registry.get("qwen2-moe-a2.7b"))
+    return dataclasses.replace(
+        cfg, d_model=64, n_heads=2, n_kv_heads=2, d_ff=64,
+        moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+
+
+def _compress(cfg, seed, spec=None):
+    params = api.build(cfg).init(cfg, jax.random.PRNGKey(seed))
+    host = {k: np.asarray(v, np.float32) for k, v in params.items()}
+    if spec is None:
+        spec = spec_from_legacy(8, Granularity.PER_CHANNEL,
+                                segment_symbols=SEGMENT)
+    return CompressedModel.compress(host, spec=spec)
+
+
+def _prompt(cfg, batch, length, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab, (batch, length)).astype(np.int32)
+
+
+def _short(name):
+    return name.split("/", 1)[1]
+
+
+@pytest.fixture(scope="module", params=["dense", "moe"])
+def fused_harness(request, rng_seed):
+    cfg = _cfg(request.param)
+    cm = _compress(cfg, rng_seed)
+    qparams = serving_engine.load_params_from_compressed(cm, quantized=True)
+    unfused = CompressedResidentWeights(cm, cfg, chunk_symbols=CHUNK)
+    fused = CompressedResidentWeights(cm, cfg, chunk_symbols=CHUNK,
+                                      fused=True)
+    sc = serving_engine.ServeConfig(max_len=MAX_LEN)
+    return cfg, cm, qparams, unfused, fused, sc
+
+
+# ------------------------------------------------------------ slot level
+
+def test_every_tensor_fused_or_fallback_with_reason(fused_harness):
+    cfg, cm, _, unfused, fused, _ = fused_harness
+    assert fused._fused                       # something actually fused
+    assert sorted(fused._fused + list(fused.fused_fallback)) \
+        == sorted(unfused._hosted)
+    slot = fused.get(0)
+    for name in fused._fused:
+        assert isinstance(slot[_short(name)], FusedQT)
+    for name, reason in fused.fused_fallback.items():
+        assert isinstance(slot[_short(name)], (QT, QT4))
+        assert reason                          # every fallback says why
+    if cfg.family == "moe":
+        experts = [n for n in fused.fused_fallback
+                   if len(cm.tensors[n].shape) == 4]
+        assert experts                         # (L, E, D, F) stacks
+        assert all("stacked (L, K, N)" in fused.fused_fallback[n]
+                   for n in experts)
+        # 2-D-per-layer attention weights still fuse alongside them
+        assert any(n.endswith(("wq", "wk", "wv", "wo"))
+                   for n in fused._fused)
+    else:
+        assert not fused.fused_fallback        # dense fuses everything
+
+
+def test_fused_peak_accounting_consistent(fused_harness):
+    _, _, _, unfused, fused, _ = fused_harness
+    b = fused.resident_bytes()
+    peak = fused.peak_resident_bytes()
+    assert peak == (b["payload"] + b["tables"] + b["qmeta"] + b["globals"]
+                    + b["stacked"] + b["scratch"] + 2 * b["layer_slot"])
+    assert peak < fused.dense_bf16_bytes()
+    # fused handles keep the payload resident on device; the *hosted*
+    # (fallback) slot pair can only shrink relative to the unfused build
+    assert b["layer_slot"] <= unfused.resident_bytes()["layer_slot"]
+
+
+# ---------------------------------------------------------- engine level
+
+def test_fused_lockstep_bit_identity(fused_harness):
+    cfg, _, qparams, unfused, fused, sc = fused_harness
+    prompt = _prompt(cfg, 2, 8)
+    ref = np.asarray(
+        serving_engine.Engine(cfg, qparams, sc).generate(prompt, 6))
+    out_unfused = np.asarray(serving_engine.Engine(
+        cfg, unfused, sc, resident="compressed").generate(prompt, 6))
+    out_fused = np.asarray(serving_engine.Engine(
+        cfg, fused, sc, resident="compressed").generate(prompt, 6))
+    np.testing.assert_array_equal(ref, out_unfused)
+    np.testing.assert_array_equal(ref, out_fused)
+
+
+def test_fused_continuous_batching_bit_identity(fused_harness):
+    cfg, _, qparams, _, fused, sc = fused_harness
+    comp = ContinuousEngine(cfg, fused, sc, n_slots=2, prefill_chunk=8,
+                            resident="compressed")
+    ref = ContinuousEngine(cfg, qparams, sc, n_slots=2, prefill_chunk=8)
+    for eng in (comp, ref):
+        for i in range(2):
+            eng.submit(_prompt(cfg, 1, 5 + i, seed=i)[0], 4)
+        eng.run()
+    assert [r.output for r in comp.finished] \
+        == [r.output for r in ref.finished]
+    assert all(len(r.output) == 4 for r in comp.finished)
+
+
+# ------------------------------------------------------ mixed containers
+
+def test_fused_mixed_rans4_huffman8_bit_identity(rng_seed):
+    """One container, two codec families and two bit widths, all fused:
+    4-bit rans (tans kernel) for the MLP weights, 8-bit huffman (prefix
+    kernel) for attention — greedy-identical to the dense-QT engine."""
+    cfg = _cfg("dense")
+    spec = CompressionSpec.parse(
+        f"defaults:segment_symbols={SEGMENT};"
+        f"layers/*w_*:bits=4,codec=rans",
+        default_granularity=Granularity.PER_CHANNEL)
+    cm = _compress(cfg, rng_seed, spec=spec)
+    assert sorted(cm.tables) == ["huffman8", "rans4"]
+    fused = CompressedResidentWeights(cm, cfg, chunk_symbols=CHUNK,
+                                      fused=True)
+    assert not fused.fused_fallback
+    handles = [fq for slots in fused._fused_slots for fq in slots.values()]
+    assert {fq.family for fq in handles} == {"prefix", "tans"}
+    assert {fq.bits for fq in handles} == {4, 8}
+    qparams = serving_engine.load_params_from_compressed(cm, quantized=True)
+    sc = serving_engine.ServeConfig(max_len=MAX_LEN)
+    prompt = _prompt(cfg, 1, 7)
+    ref = np.asarray(
+        serving_engine.Engine(cfg, qparams, sc).generate(prompt, 5))
+    out = np.asarray(serving_engine.Engine(
+        cfg, fused, sc, resident="compressed").generate(prompt, 5))
+    np.testing.assert_array_equal(ref, out)
+
+
+# ----------------------------------------------------- fallback behavior
+
+def test_misaligned_segments_fall_back_per_tensor(rng_seed):
+    """A segment size that violates the tile contract (1000 symbols never
+    tiles the reduced model's row widths) must not disable the mode: every
+    tensor falls back to the per-layer QT path with a recorded reason, and
+    the engine stays bit-identical."""
+    cfg = _cfg("dense")
+    cm = _compress(cfg, rng_seed, spec=spec_from_legacy(
+        8, Granularity.PER_CHANNEL, segment_symbols=1000))
+    fused = CompressedResidentWeights(cm, cfg, chunk_symbols=CHUNK,
+                                      fused=True)
+    assert not fused._fused
+    assert sorted(fused.fused_fallback) == sorted(fused._hosted)
+    slot = fused.get(0)
+    assert all(isinstance(slot[_short(n)], (QT, QT4))
+               for n in fused._hosted)
+    qparams = serving_engine.load_params_from_compressed(cm, quantized=True)
+    sc = serving_engine.ServeConfig(max_len=MAX_LEN)
+    prompt = _prompt(cfg, 1, 6)
+    ref = np.asarray(
+        serving_engine.Engine(cfg, qparams, sc).generate(prompt, 4))
+    out = np.asarray(serving_engine.Engine(
+        cfg, fused, sc, resident="compressed").generate(prompt, 4))
+    np.testing.assert_array_equal(ref, out)
+
+
+def test_serve_cli_fused_requires_compressed_resident():
+    from repro.launch import serve
+    with pytest.raises(SystemExit):
+        serve.main(["--arch", "qwen3-1.7b", "--fused"])

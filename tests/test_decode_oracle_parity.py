@@ -1,0 +1,133 @@
+"""Decode-backend ↔ serial-oracle parity, exhaustively.
+
+Every available backend must reproduce the bit-serial reference decoders
+(``bitstream.decode_serial`` / ``decode_serial_tans``) exactly, for every
+codec family × every bit width 1..8 × both decode-into-buffer modes — plus
+a zero-count lane mid-pack (must stay empty, not misalign its neighbours).
+These serial loops are the harness's root of trust: the fused-kernel
+differential suite (``tests/differential/``) compares against
+``kernels.ref.fused_decode_matmul_ref``, which decodes through the numpy
+backend, which this file pins to the serial oracles.
+
+The backend list is computed at collection from the capability probes, so
+hosts without a compiled Pallas toolchain test {numpy, jax,
+pallas-interpret} with zero skips (tier-1 CI runs ``--require-dev-deps``
+and rejects silent skip-outs).
+
+Also here: the ``plan_execution`` boundary-segment trim paths — segments
+straddling a layer cut are decoded on both sides and trimmed, and the
+per-layer reassembly must equal the whole-model loader's slices.
+"""
+import numpy as np
+import pytest
+
+from repro.core import bitstream
+from repro.core.codecs import get_codec
+from repro.core.decode_backends import available_backends, get_backend
+from repro.core.quant import Granularity
+from repro.core.scheduler import decode_execution_step, plan_execution
+from repro.core.spec import spec_from_legacy
+from repro.core.store import CompressedModel
+
+BACKENDS = available_backends()
+N_STREAMS, COUNT = 4, 96
+
+
+def _case(codec: str, bits: int, *, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    hi = 1 << bits
+    sym = rng.integers(0, hi, N_STREAMS * COUNT).astype(np.uint8)
+    freqs = np.bincount(sym, minlength=hi).astype(np.int64)
+    if np.count_nonzero(freqs) < 2:        # bits=1 can degenerate
+        freqs[(int(sym[0]) + 1) % hi] += 1
+    table = get_codec(codec).build(freqs, bits, max_code_len=12)
+    streams = [table.encode(sym[i * COUNT:(i + 1) * COUNT])[0]
+               for i in range(N_STREAMS)]
+    counts = [COUNT] * N_STREAMS
+    streams.insert(2, np.zeros(0, np.uint8))     # a zero-count lane mid-pack
+    counts.insert(2, 0)
+    mat, _ = bitstream.pack_streams(streams)
+    return table, mat, np.asarray(counts, np.int64), sym.reshape(N_STREAMS,
+                                                                 COUNT)
+
+
+def _serial_rows(table, mat, counts):
+    a = table.decode_arrays()
+    rows = []
+    for i, c in enumerate(np.asarray(counts)):
+        if table.kernel == "prefix":
+            rows.append(bitstream.decode_serial(
+                mat[i], int(c), a["lut_sym"], a["lut_len"],
+                table.peek_bits))
+        else:
+            rows.append(bitstream.decode_serial_tans(
+                mat[i], int(c), a["tab_sym"], a["tab_bits"], a["tab_base"],
+                table.table_log))
+    return rows
+
+
+@pytest.mark.parametrize("use_out", [False, True], ids=["ret", "out"])
+@pytest.mark.parametrize("bits", range(1, 9))
+@pytest.mark.parametrize("codec", ["huffman", "rans"])
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_matches_serial_oracle(backend, codec, bits, use_out):
+    table, mat, counts, sym = _case(codec, bits, seed=bits)
+    b = get_backend(backend)
+    out = (np.full((mat.shape[0] + 2, COUNT + 32), -1, np.int32)
+           if use_out else None)
+    dec = np.asarray(b.decode_table(table, mat, counts, out=out))
+    serial = _serial_rows(table, mat, counts)
+    k = 0
+    for i, c in enumerate(counts):
+        np.testing.assert_array_equal(dec[i, :c], serial[i])
+        if c:
+            np.testing.assert_array_equal(dec[i, :c].astype(np.uint8),
+                                          sym[k])
+            k += 1
+    if use_out:
+        assert dec.base is out or dec is out     # genuinely in place
+
+
+def test_raw_codec_matches_symbols_on_every_backend():
+    """The raw codec (identity LUT, fixed width) is prefix-family too and
+    must satisfy the same decode contract — it is the 'quantized only'
+    baseline every entropy codec is judged against."""
+    rng = np.random.default_rng(7)
+    sym = rng.integers(0, 256, (N_STREAMS, COUNT)).astype(np.uint8)
+    raw = get_codec("raw").build(
+        np.bincount(sym.reshape(-1), minlength=256).astype(np.int64), 8)
+    streams = [raw.encode(row)[0] for row in sym]
+    counts = np.full(len(streams), COUNT, np.int64)
+    mat, _ = bitstream.pack_streams(streams)
+    for backend in BACKENDS:
+        dec = np.asarray(get_backend(backend).decode_table(raw, mat, counts))
+        # device backends may pad the lane count to a pow2 bucket
+        np.testing.assert_array_equal(
+            dec[:len(streams), :COUNT].astype(np.uint8), sym)
+
+
+def test_plan_execution_boundary_trims_round_trip():
+    """Segments straddling layer cuts: 2048 symbols/layer over 1000-symbol
+    segments means every layer boundary lands mid-segment, so spans carry
+    non-zero trims and boundary segments decode twice.  Reassembly must
+    equal the whole-model loader's stacked slices for every backend."""
+    from repro.serving import engine as serving_engine
+    rng = np.random.default_rng(0)
+    host = {"layers/w_a": rng.normal(0, 0.05, (3, 64, 32)).astype(np.float32)}
+    cm = CompressedModel.compress(host, spec=spec_from_legacy(
+        8, Granularity.PER_TENSOR, segment_symbols=1000))
+    meta = cm.tensors["layers/w_a"]
+    assert meta.n_symbols % 1000                 # really has a ragged tail
+    plan = plan_execution(cm, 3, ["layers/w_a"])
+    trims = [sp.trim for steps in plan for st in steps for sp in st.spans]
+    assert any(trims)                            # boundary-trim path taken
+    qparams = serving_engine.load_params_from_compressed(cm, quantized=True)
+    want = np.asarray(qparams["layers/w_a"].q)
+    for backend in BACKENDS:
+        b = get_backend(backend)
+        for l, steps in enumerate(plan):
+            got = {}
+            for st in steps:
+                got.update(decode_execution_step(cm, st, b))
+            np.testing.assert_array_equal(
+                got["layers/w_a"].reshape(64, 32), want[l])

@@ -1,0 +1,99 @@
+"""``resolve_granularity`` fallback paths: warn, name the tensor, and keep
+quantizing within the same error envelope as the aligned case.
+
+The paper's PER_GROUP extension groups along the last axis; real
+checkpoints have ragged last dims (GQA head counts, odd vocab pads), so
+the fallback from a non-dividing group to per-channel must be a quality
+downgrade measured in scale granularity — never a crash, and never a
+silent accuracy cliff.
+"""
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.core.quant import Granularity
+from repro.core.spec import CompressionSpec
+from repro.core.store import CompressedModel
+
+
+def _roundtrip_err(w, qt):
+    return np.abs(quant.dequantize(qt) - w)
+
+
+def test_ragged_group_falls_back_to_per_channel_with_warning():
+    rng = np.random.default_rng(0)
+    w = rng.normal(0, 0.05, (8, 50)).astype(np.float32)
+    with pytest.warns(UserWarning, match="does not divide"):
+        qt = quant.quantize(w, 8, Granularity.PER_GROUP, group=16)
+    assert qt.granularity is Granularity.PER_CHANNEL
+    assert qt.scale.shape == (8, 1)
+    # the fallback QT still round-trips within half a quantization step
+    # elementwise — the dequantize contract, independent of granularity
+    assert (_roundtrip_err(w, qt)
+            <= np.abs(qt.scale) / 2 + 1e-7).all()
+
+
+def test_fallback_tolerance_matches_aligned_case():
+    """Same distribution, aligned vs ragged last dim: the ragged tensor's
+    fallback (per-channel) error stays within 2x of the aligned per-group
+    error — a bounded granularity downgrade, not an accuracy cliff."""
+    rng = np.random.default_rng(1)
+    aligned = rng.normal(0, 0.05, (8, 48)).astype(np.float32)
+    ragged = rng.normal(0, 0.05, (8, 50)).astype(np.float32)
+    qt_a = quant.quantize(aligned, 8, Granularity.PER_GROUP, group=16)
+    assert qt_a.granularity is Granularity.PER_GROUP
+    with pytest.warns(UserWarning):
+        qt_r = quant.quantize(ragged, 8, Granularity.PER_GROUP, group=16)
+    err_a = float(_roundtrip_err(aligned, qt_a).mean())
+    err_r = float(_roundtrip_err(ragged, qt_r).mean())
+    assert err_r <= 2.0 * err_a + 1e-7
+    # and both satisfy the elementwise half-step bound of their own scales
+    sr = np.abs(qt_r.scale)
+    assert (_roundtrip_err(ragged, qt_r) <= sr / 2 + 1e-7).all()
+
+
+def test_warning_names_the_tensor():
+    w = np.ones((4, 10), np.float32)
+    with pytest.warns(UserWarning, match=r"layers/w_up: PER_GROUP group=16"):
+        quant.quantize(w, 8, Granularity.PER_GROUP, group=16,
+                       name="layers/w_up")
+    # and stays anonymous when no name is threaded
+    with pytest.warns(UserWarning) as rec:
+        quant.quantize(w, 8, Granularity.PER_GROUP, group=16)
+    assert not str(rec[0].message).startswith("layers/")
+
+
+def test_scalar_and_vector_fallbacks():
+    with pytest.warns(UserWarning, match="0-D tensor has no axis"):
+        g = quant.resolve_granularity(np.float32(3.0).reshape(()),
+                                      Granularity.PER_GROUP, 16)
+    assert g is Granularity.PER_TENSOR
+    with pytest.warns(UserWarning, match="falling back to per_tensor"):
+        g = quant.resolve_granularity(np.ones(10, np.float32),
+                                      Granularity.PER_GROUP, 16)
+    assert g is Granularity.PER_TENSOR
+    with pytest.warns(UserWarning, match="per-element scales"):
+        g = quant.resolve_granularity(np.ones(10, np.float32),
+                                      Granularity.PER_CHANNEL, 16)
+    assert g is Granularity.PER_TENSOR
+    with pytest.raises(ValueError, match="group >= 1"):
+        quant.resolve_granularity(np.ones((4, 8), np.float32),
+                                  Granularity.PER_GROUP, 0)
+
+
+def test_container_round_trip_through_fallback():
+    """A container compressed under a ragged PER_GROUP spec stores the
+    fallback QT; decompression equals quantize→dequantize directly."""
+    rng = np.random.default_rng(2)
+    host = {"layers/w_a": rng.normal(0, 0.05, (2, 64, 50))
+            .astype(np.float32)}
+    with pytest.warns(UserWarning, match=r"layers/w_a: PER_GROUP group=16"):
+        cm = CompressedModel.compress(host, spec=CompressionSpec(
+            default_bits=8, default_granularity=Granularity.PER_GROUP,
+            default_group=16, segment_symbols=1024))
+    with pytest.warns(UserWarning):
+        qt = quant.quantize(host["layers/w_a"], 8, Granularity.PER_GROUP,
+                            group=16)
+    back = cm.dequantize_all()
+    np.testing.assert_allclose(back["layers/w_a"], quant.dequantize(qt),
+                               rtol=0, atol=0)
