@@ -73,12 +73,15 @@ def run(arch: str = "qwen3-1.7b", bits: int = 8, batch: int = 2,
             bytes=weights.peak_resident_bytes()),
     }
 
+    from repro.obs.metrics import percentile
+
     print(f"{cfg.name}: {bits}b {cm.stats().effective_bits:.2f} effective "
           f"bits; dense bf16 footprint {_fmt_bytes(bf16)}")
     print(f"{'mode':12s} {'resident weights':>18s} {'vs bf16':>8s} "
-          f"{'decode tok/s':>13s} {'e2e tok/s':>10s}")
+          f"{'decode tok/s':>13s} {'e2e tok/s':>10s} "
+          f"{'step p50/p99 ms':>16s}")
     print(f"{'bf16':12s} {_fmt_bytes(bf16):>18s} {'1.00x':>8s} "
-          f"{'-':>13s} {'-':>10s}")
+          f"{'-':>13s} {'-':>10s} {'-':>16s}")
 
     results: dict = {"bf16_bytes": bf16}
     outs = {}
@@ -86,14 +89,21 @@ def run(arch: str = "qwen3-1.7b", bits: int = 8, batch: int = 2,
         eng = engine.Engine(cfg, m["params"], sc, resident=m["resident"])
         out, metrics = eng.generate(prompt, gen, echo_metrics=True)
         outs[mode] = np.asarray(out)
+        # per-decode-step wall-time percentiles (exact, shared linear-
+        # interpolation rule) — the tail exposes prefetch stalls the mean
+        # decode tok/s smears out
+        step_p50 = percentile(eng.last_step_times, 50) * 1e3
+        step_p99 = percentile(eng.last_step_times, 99) * 1e3
         results[mode] = dict(
             resident_bytes=m["bytes"],
             decode_tok_per_s=metrics["decode_tok_per_s"],
-            e2e_tok_per_s=metrics["e2e_tok_per_s"])
+            e2e_tok_per_s=metrics["e2e_tok_per_s"],
+            step_p50_ms=step_p50, step_p99_ms=step_p99)
         print(f"{mode:12s} {_fmt_bytes(m['bytes']):>18s} "
               f"{m['bytes'] / bf16:>7.2f}x "
               f"{metrics['decode_tok_per_s']:>13.1f} "
-              f"{metrics['e2e_tok_per_s']:>10.1f}")
+              f"{metrics['e2e_tok_per_s']:>10.1f} "
+              f"{step_p50:>7.1f}/{step_p99:>7.1f}")
 
     assert np.array_equal(outs["dense-QT"], outs["compressed"]), \
         "compressed-resident greedy decode must be bit-identical to dense"

@@ -11,6 +11,8 @@
   fused    — fused decode→dequant→matmul vs the prefetch-overlap per-layer
              decode (decode-ms/token per bit width and codec, bit-identity
              asserted)
+  overlap  — decode/compute overlap fraction + prefetch stall from a traced
+             compressed-resident serve (tracing bit-identity asserted)
   roofline — render §Roofline from dry-run JSON (if present)
 
 ``python -m benchmarks.run [name ...]`` runs all by default.
@@ -24,7 +26,8 @@ import sys
 def main(argv=None) -> int:
     which = (argv or sys.argv[1:]) or ["table1", "table2", "decode",
                                        "streaming", "traffic", "sharded",
-                                       "resident", "fused", "roofline"]
+                                       "resident", "fused", "overlap",
+                                       "roofline"]
     from . import (decode_streaming, decode_throughput, table1_storage,
                    table2_latency)
 
@@ -71,6 +74,11 @@ def main(argv=None) -> int:
         print("== Fused decode→dequant→matmul vs per-layer decode ==")
         from . import fused_decode_matmul
         fused_decode_matmul.run()
+        print()
+    if "overlap" in which:
+        print("== Decode/compute overlap (traced compressed-resident) ==")
+        from . import overlap_report
+        overlap_report.run()
         print()
     if "roofline" in which:
         path = "results/dryrun_baseline.json"

@@ -28,13 +28,13 @@ from __future__ import annotations
 import argparse
 import sys
 import time
-from typing import List, Optional
+from typing import Optional
 
 import numpy as np
 
-
-def _percentile(xs: List[float], p: float) -> float:
-    return float(np.percentile(np.asarray(xs), p)) if xs else float("nan")
+# the ONE shared percentile rule (linear interpolation, agrees with
+# np.percentile) — repro.obs.metrics is stdlib-only so this import is free
+from repro.obs.metrics import percentile as _percentile
 
 
 def run_lockstep(eng, trace):
@@ -62,23 +62,30 @@ def run_lockstep(eng, trace):
 def run_continuous(ce, trace):
     """Feed the trace through the ContinuousEngine as timestamps come due."""
     from repro.serving.batching import replay
-    requests, _, makespan = replay(ce, trace)
-    outs = [r.output for r in requests]
+    requests, shed, makespan = replay(ce, trace)
+    done = [r for r in requests if r is not None]
+    outs = [r.output for r in done]
     rows = [dict(queue_wait=r.queue_wait_s, ttft=r.ttft_s,
-                 latency=r.latency_s, n_tokens=len(r.output))
-            for r in requests]
-    return outs, rows, makespan
+                 latency=r.latency_s, n_tokens=len(r.output),
+                 outcome="admitted")
+            for r in done]
+    return outs, rows, makespan, shed
 
 
-def _report(name, rows, makespan):
+def _report(name, rows, makespan, shed=0):
     toks = sum(r["n_tokens"] for r in rows)
     lat = [r["latency"] for r in rows]
+    # queue wait labeled by outcome: shed requests never waited through to
+    # admission, so their waits are not mixed into the admitted percentiles
+    wait = [r["queue_wait"] for r in rows
+            if r.get("outcome", "admitted") == "admitted"]
     print(f"  {name:<11} {toks:4d} tok in {makespan:6.2f}s "
           f"= {toks / max(makespan, 1e-9):7.1f} tok/s | "
-          f"queue wait p50 {_percentile([r['queue_wait'] for r in rows], 50)*1e3:6.1f}ms | "
+          f"queue wait[admitted] p50 {_percentile(wait, 50)*1e3:6.1f}ms | "
           f"ttft p50 {_percentile([r['ttft'] for r in rows], 50)*1e3:6.1f}ms | "
           f"latency p50/p99 {_percentile(lat, 50)*1e3:7.1f}/"
-          f"{_percentile(lat, 99)*1e3:7.1f}ms")
+          f"{_percentile(lat, 99)*1e3:7.1f}ms"
+          + (f" | {shed} shed" if shed else ""))
     return toks / max(makespan, 1e-9)
 
 
@@ -120,14 +127,14 @@ def run(model: str = "qwen3-1.7b", *, n_requests: int = 16, slots: int = 8,
     ce = ContinuousEngine(cfg, params, sc, n_slots=slots,
                           max_queue=n_requests, prefill_chunk=prefill_chunk,
                           steps=eng.steps)
-    outs_c, rows_c, span_c = run_continuous(ce, trace)
+    outs_c, rows_c, span_c, shed_c = run_continuous(ce, trace)
 
     for i, (a, b) in enumerate(zip(outs_l, outs_c)):
         assert a == b, (f"request {i}: continuous batching changed greedy "
                         f"tokens\n  lockstep   {a}\n  continuous {b}")
     tps_l = _report("lockstep", rows_l, span_l) if verbose else \
         sum(r["n_tokens"] for r in rows_l) / max(span_l, 1e-9)
-    tps_c = _report("continuous", rows_c, span_c) if verbose else \
+    tps_c = _report("continuous", rows_c, span_c, shed_c) if verbose else \
         sum(r["n_tokens"] for r in rows_c) / max(span_c, 1e-9)
     speedup = tps_c / max(tps_l, 1e-9)
     if verbose:

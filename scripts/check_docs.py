@@ -40,6 +40,8 @@ REQUIRED_LINKS = [
     ("README.md", "docs/TESTING.md"),
     ("README.md", "docs/ARCHITECTURE.md"),
     ("README.md", "docs/SERVING.md"),
+    ("README.md", "docs/OBSERVABILITY.md"),
+    ("docs/SERVING.md", "OBSERVABILITY.md"),
 ]
 SECTION_DOCS = ["docs/ARCHITECTURE.md", "docs/SERVING.md", "DESIGN.md"]
 AUDIT_GLOBS = ["src/repro/serving/**/*.py", "src/repro/core/scheduler.py"]

@@ -1,0 +1,161 @@
+#!/usr/bin/env python3
+"""Validate an emitted trace/metrics pair against the instrumentation-point
+catalog (CI ``obs-smoke``; docs/OBSERVABILITY.md).
+
+Three checks, any failure exits 1:
+
+1. **Trace schema** — the file is Chrome ``trace_event`` JSON Perfetto can
+   load: a ``traceEvents`` list whose entries carry ``name``/``ph``/``pid``/
+   ``tid``, with ``ts``+``dur`` on every ``ph="X"`` complete event and
+   non-negative durations.
+2. **Metrics schema** — every JSON-lines row has ``name``/``kind`` and the
+   per-kind value fields (counters/gauges a ``value``, histograms
+   ``count``/``sum`` + quantile keys, lifecycles an ``events`` chain).
+3. **Coverage** (``--expect MODE``) — every span and metric name the
+   catalog (:mod:`repro.obs.points`) registers for MODE appears at least
+   once.  A refactor that silently drops a call site passes every
+   functional test; this is the guard that notices.
+
+Usage:
+  python scripts/check_trace.py --trace t.json --metrics m.jsonl \
+      --expect resident-fused-lockstep
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, Dict, List
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.obs.points import EXPECTED_POINTS  # noqa: E402
+
+
+def check_trace_schema(path: str, errors: List[str]) -> List[Dict[str, Any]]:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        errors.append(f"trace {path}: unreadable ({e})")
+        return []
+    events = data.get("traceEvents") if isinstance(data, dict) else data
+    if not isinstance(events, list):
+        errors.append(f"trace {path}: no traceEvents list")
+        return []
+    for i, e in enumerate(events):
+        ctx = f"trace event #{i} ({e.get('name', '?')!r})"
+        for field in ("name", "ph", "pid", "tid"):
+            if field not in e:
+                errors.append(f"{ctx}: missing {field!r}")
+        if e.get("ph") == "X":
+            if "ts" not in e or "dur" not in e:
+                errors.append(f"{ctx}: complete event without ts/dur")
+            elif e["dur"] < 0:
+                errors.append(f"{ctx}: negative duration {e['dur']}")
+        elif e.get("ph") not in ("M", "i", "X"):
+            errors.append(f"{ctx}: unexpected phase {e.get('ph')!r}")
+    return events if isinstance(events, list) else []
+
+
+def check_metrics_schema(path: str, errors: List[str]) -> List[Dict[str, Any]]:
+    rows: List[Dict[str, Any]] = []
+    try:
+        with open(path) as f:
+            lines = f.readlines()
+    except OSError as e:
+        errors.append(f"metrics {path}: unreadable ({e})")
+        return rows
+    for i, line in enumerate(lines):
+        if not line.strip():
+            continue
+        try:
+            row = json.loads(line)
+        except json.JSONDecodeError as e:
+            errors.append(f"metrics line {i + 1}: bad JSON ({e})")
+            continue
+        ctx = f"metrics line {i + 1} ({row.get('name', '?')!r})"
+        kind = row.get("kind")
+        if "name" not in row or kind is None:
+            errors.append(f"{ctx}: missing name/kind")
+            continue
+        if kind in ("counter", "gauge") and "value" not in row:
+            errors.append(f"{ctx}: {kind} without value")
+        elif kind == "histogram":
+            for field in ("count", "sum"):
+                if field not in row:
+                    errors.append(f"{ctx}: histogram without {field!r}")
+            if not any(k.startswith("p") and k[1:].replace(".", "").isdigit()
+                       for k in row):
+                errors.append(f"{ctx}: histogram without quantile keys")
+        elif kind == "lifecycle":
+            ev = row.get("events")
+            if not isinstance(ev, list) or not ev:
+                errors.append(f"{ctx}: lifecycle without events chain")
+        rows.append(row)
+    return rows
+
+
+def check_coverage(mode: str, events: List[Dict[str, Any]],
+                   rows: List[Dict[str, Any]], errors: List[str]) -> None:
+    expected = EXPECTED_POINTS.get(mode)
+    if expected is None:
+        errors.append(f"unknown --expect mode {mode!r}; catalog has: "
+                      f"{sorted(EXPECTED_POINTS)}")
+        return
+    seen_spans = {e.get("name") for e in events if e.get("ph") in ("X", "i")}
+    for name in expected["spans"]:
+        if name not in seen_spans:
+            errors.append(f"[{mode}] required span {name!r} emitted ZERO "
+                          f"events — instrumentation point lost?")
+    seen_metrics = {r.get("name") for r in rows}
+    for name in expected["metrics"]:
+        if name not in seen_metrics:
+            errors.append(f"[{mode}] required metric {name!r} has no "
+                          f"snapshot row — instrumentation point lost?")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="Chrome trace_event JSON (from --trace-out)")
+    ap.add_argument("--metrics", default=None, metavar="FILE",
+                    help="metrics JSON-lines snapshot (from --metrics-out)")
+    ap.add_argument("--expect", default=None, metavar="MODE",
+                    help=f"validate coverage for one serving mode: "
+                         f"{sorted(EXPECTED_POINTS)}")
+    args = ap.parse_args(argv)
+    if not args.trace and not args.metrics:
+        ap.error("nothing to check: pass --trace and/or --metrics")
+
+    errors: List[str] = []
+    events: List[Dict[str, Any]] = []
+    rows: List[Dict[str, Any]] = []
+    if args.trace:
+        events = check_trace_schema(args.trace, errors)
+        spans = sum(1 for e in events if e.get("ph") == "X")
+        print(f"trace {args.trace}: {len(events)} events ({spans} spans)")
+    if args.metrics:
+        rows = check_metrics_schema(args.metrics, errors)
+        kinds: Dict[str, int] = {}
+        for r in rows:
+            kinds[r.get("kind", "?")] = kinds.get(r.get("kind", "?"), 0) + 1
+        print(f"metrics {args.metrics}: {len(rows)} rows {kinds}")
+    if args.expect:
+        check_coverage(args.expect, events, rows, errors)
+
+    if errors:
+        for e in errors:
+            print(f"FAIL: {e}", file=sys.stderr)
+        print(f"{len(errors)} problem(s)", file=sys.stderr)
+        return 1
+    print("OK: schema valid"
+          + (f", all {args.expect!r} instrumentation points emitted"
+             if args.expect else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -34,6 +34,9 @@ from typing import (TYPE_CHECKING, Callable, Dict, Iterator, List, Optional,
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 from .bitstream import GUARD_BYTES, pack_streams, pow2_bucket
 from .decode_backends import DecoderBackend, get_backend
 from .segmentation import DEFAULT_SEGMENT_SYMBOLS
@@ -176,9 +179,16 @@ class DecodeScheduler:
         """Decode one chunk; returns per-segment symbol arrays (trimmed)."""
         # plan() guarantees one code table per chunk; its kernel family
         # (prefix / tans) picks the backend's matching lock-step loop
+        table_id = self.model.table_id_for(chunk.segs[0].tensor)
         table = self.model.table_for(chunk.segs[0].tensor)
-        mat, counts = pack_segments(self.model.payload, chunk.segs)
-        dec = self.backend.decode_table(table, mat, counts)
+        with obs_trace.span("decode.chunk", cat="decode",
+                            table=table_id, backend=self.backend.name,
+                            segments=len(chunk.segs), symbols=chunk.symbols):
+            mat, counts = pack_segments(self.model.payload, chunk.segs)
+            dec = self.backend.decode_table(table, mat, counts)
+        obs_metrics.counter("decode.symbols").inc(chunk.symbols,
+                                                  table=table_id)
+        obs_metrics.counter("decode.calls").inc(backend=self.backend.name)
         return [dec[i, : s.count] for i, s in enumerate(chunk.segs)]
 
     def iter_decode(self) -> Iterator[Tuple[str, np.ndarray]]:
@@ -437,12 +447,18 @@ def decode_execution_step(model: "CompressedModel", step: ExecutionStep,
     """
     table = model.tables[step.table_id]
     pieces: Dict[str, List[np.ndarray]] = {}
-    for run in iter_seg_runs(step.segs, chunk_symbols):
-        mat, counts = pack_segments(model.payload, run)
-        dec = backend.decode_table(table, mat, counts, out=out)
-        for j, s in enumerate(run):
-            pieces.setdefault(s.tensor, []).append(
-                dec[j, : s.count].astype(np.uint8))
+    n_symbols = sum(s.count for s in step.segs)
+    with obs_trace.span("decode.exec_step", cat="decode", layer=step.layer,
+                        table=step.table_id, backend=backend.name,
+                        segments=len(step.segs), symbols=n_symbols):
+        for run in iter_seg_runs(step.segs, chunk_symbols):
+            mat, counts = pack_segments(model.payload, run)
+            dec = backend.decode_table(table, mat, counts, out=out)
+            for j, s in enumerate(run):
+                pieces.setdefault(s.tensor, []).append(
+                    dec[j, : s.count].astype(np.uint8))
+    obs_metrics.counter("decode.symbols").inc(n_symbols, table=step.table_id)
+    obs_metrics.counter("decode.calls").inc(backend=backend.name)
     result: Dict[str, np.ndarray] = {}
     for sp in step.spans:
         parts = pieces[sp.tensor]

@@ -102,6 +102,20 @@ def main(argv=None):
                         "load-stream time; needs data*model local devices "
                         "(CPU hosts: XLA_FLAGS=--xla_force_host_platform_"
                         "device_count=N)")
+    p.add_argument("--trace-out", default=None, metavar="FILE",
+                   help="write a Chrome/Perfetto trace_event JSON of the "
+                        "serve (load + prefill + decode spans; open in "
+                        "ui.perfetto.dev or chrome://tracing, analyze with "
+                        "benchmarks/overlap_report.py; docs/OBSERVABILITY.md)")
+    p.add_argument("--metrics-out", default=None, metavar="FILE",
+                   help="write the metrics-registry snapshot as JSON lines "
+                        "(counters/gauges/histograms + per-request "
+                        "lifecycles; docs/OBSERVABILITY.md has the catalog)")
+    p.add_argument("--trace-sync", action="store_true",
+                   help="fence (block_until_ready) inside spans so durations "
+                        "measure device compute, not jax async dispatch — "
+                        "perturbs pipelining, so timings are faithful but "
+                        "throughput is not; outputs stay bit-identical")
     p.add_argument("--production", action="store_true")
     p.add_argument("--shape", default="decode_32k")
     p.add_argument("--multi-pod", action="store_true")
@@ -194,7 +208,12 @@ def main(argv=None):
     from repro.configs import registry
     from repro.core.store import CompressedModel
     from repro.models import api
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
     from repro.serving import engine
+
+    if args.trace_out or args.trace_sync:
+        obs_trace.enable(sync=args.trace_sync)
 
     cfg = registry.reduced(registry.get(args.arch))
     mod = api.build(cfg)
@@ -293,8 +312,10 @@ def main(argv=None):
     rng = np.random.default_rng(0)
 
     if args.batch_slots > 0:
-        return _serve_continuous(cfg, serve_params, sc, args, rng,
-                                 load_metrics, mesh=mesh, rules=rules)
+        rc = _serve_continuous(cfg, serve_params, sc, args, rng,
+                               load_metrics, mesh=mesh, rules=rules)
+        _write_obs(args)
+        return rc
 
     eng = engine.Engine(cfg, serve_params, sc, mesh=mesh, rules=rules,
                         resident=args.resident)
@@ -318,13 +339,31 @@ def main(argv=None):
           f"({metrics['decode_tok_per_s']:.1f} decode tok/s, "
           f"{metrics['e2e_tok_per_s']:.1f} e2e tok/s); "
           f"time-to-first-token incl. weight load: {ttft:.2f}s")
+    _write_obs(args)
     return 0
+
+
+def _write_obs(args):
+    """Export the trace / metrics-registry snapshot the serve recorded."""
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
+    if args.trace_out or args.trace_sync:
+        tracer = obs_trace.disable()
+        if args.trace_out and tracer is not None:
+            n = tracer.save(args.trace_out)
+            print(f"trace: {n} events -> {args.trace_out} "
+                  f"(open in ui.perfetto.dev; "
+                  f"benchmarks/overlap_report.py analyzes it)")
+    if args.metrics_out:
+        n = obs_metrics.default_registry().write_jsonl(args.metrics_out)
+        print(f"metrics: {n} rows -> {args.metrics_out}")
 
 
 def _serve_continuous(cfg, serve_params, sc, args, rng, load_metrics,
                       mesh=None, rules=None):
     """--batch-slots path: slot-batched serving of independent requests."""
     import numpy as np
+    from repro.obs.metrics import percentile
     from repro.serving.batching import (ContinuousEngine, QueueFullError,
                                         poisson_trace, replay)
 
@@ -357,17 +396,22 @@ def _serve_continuous(cfg, serve_params, sc, args, rng, load_metrics,
               f"({shed} shed by backpressure)")
         return 1
     toks = sum(len(r.output) for r in fin)
-    lat = sorted(r.latency_s for r in fin)
-    ttft = sorted(r.ttft_s for r in fin)
+    lat = [r.latency_s for r in fin]
+    ttft = [r.ttft_s for r in fin]
+    wait = [r.queue_wait_s for r in fin]
     print(f"continuous batching [{args.batch_slots} slots, queue bound "
           f"{args.max_queue}]: {len(fin)}/{n} requests"
           + (f" ({shed} shed by backpressure)" if shed else "")
           + f", {toks} tok in "
           f"{span:.2f}s = {toks/max(span, 1e-9):.1f} tok/s aggregate")
-    print(f"  ttft p50 {ttft[len(ttft)//2]*1e3:.0f}ms (+{load_metrics['decode_load_s']:.2f}s "
-          f"weight load) | latency p50 {lat[len(lat)//2]*1e3:.0f}ms "
-          f"p99 {lat[min(len(lat)-1, int(len(lat)*0.99))]*1e3:.0f}ms | "
+    print(f"  ttft p50 {percentile(ttft, 50)*1e3:.0f}ms "
+          f"(+{load_metrics['decode_load_s']:.2f}s "
+          f"weight load) | latency p50 {percentile(lat, 50)*1e3:.0f}ms "
+          f"p99 {percentile(lat, 99)*1e3:.0f}ms | "
           f"{ce.n_decode_steps} fused decode steps")
+    print(f"  queue wait [admitted] p50 {percentile(wait, 50)*1e3:.0f}ms "
+          f"p99 {percentile(wait, 99)*1e3:.0f}ms over {len(fin)} requests"
+          + (f"; {shed} shed before admission" if shed else ""))
     return 0
 
 

@@ -1,0 +1,26 @@
+"""Serving observability: structured tracing, a metrics registry, and trace
+analysis — zero dependencies beyond the stdlib (docs/OBSERVABILITY.md).
+
+* :mod:`repro.obs.trace` — nested, thread-aware spans; Chrome/Perfetto
+  ``trace_event`` export and a plain-text span tree.  Off by default;
+  ``trace.enable()`` installs the process-global tracer the instrumented
+  layers record against (``--trace-out`` in the launcher).
+* :mod:`repro.obs.metrics` — named counters / gauges / streaming histograms
+  (P² quantiles) with a label-cardinality guard, JSON-lines snapshots, the
+  shared exact :func:`~repro.obs.metrics.percentile` helper, and per-request
+  lifecycle records.  Always recording (cheap); exported on demand
+  (``--metrics-out``).
+* :mod:`repro.obs.analysis` — interval arithmetic over an emitted trace:
+  decode/compute overlap fraction and prefetch stall time
+  (``benchmarks/overlap_report.py``).
+* :mod:`repro.obs.points` — the per-serving-mode catalog of required
+  instrumentation points (``scripts/check_trace.py --expect``).
+
+The cardinal rule: observability is a **pure observer**.  No instrumentation
+may change what the serving stack computes — greedy outputs with tracing on
+vs off are bit-identical (asserted in ``tests/test_obs.py``) — and no span
+may live inside a jitted function body (it would fire at trace time only).
+"""
+from . import analysis, metrics, points, trace
+
+__all__ = ["analysis", "metrics", "points", "trace"]

@@ -1,0 +1,97 @@
+"""Instrumentation-point catalog: the span and metric names each serving
+mode is REQUIRED to emit.
+
+``scripts/check_trace.py --expect MODE`` validates an emitted trace/metrics
+pair against this catalog and fails if any registered point produced zero
+events — the CI ``obs-smoke`` guard against instrumentation silently rotting
+(a renamed span or a refactor that drops a call site would otherwise pass
+every functional test).
+
+Add new instrumentation here when it is a *contract* (the overlap report or
+a dashboard depends on it); purely informational spans can stay uncatalogued.
+Names must match docs/OBSERVABILITY.md's catalog — ``tests/test_obs.py``
+cross-checks that every point listed here appears in the doc.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+# span names (trace file) and metric names (metrics JSON-lines) that MUST
+# appear at least once for a serve in the given mode
+EXPECTED_POINTS: Dict[str, Dict[str, List[str]]] = {
+    # lockstep Engine.generate, --resident compressed --fused.  NOTE: no
+    # decode.exec_step / decode.symbols here — when every matmul tensor is
+    # fused, the entropy decode happens inside the jitted kernel (payload
+    # handles), so the host-side scheduler decode never runs; the per-layer
+    # slot still materializes the carve-out views (resident.slot_tensors).
+    "resident-fused-lockstep": {
+        "spans": [
+            "serve.prefill",
+            "serve.decode_step",
+            "serve.layer",
+            "resident.decode",
+            "resident.consume_wait",
+        ],
+        "metrics": [
+            "load.decode_load_s",
+            "serve.decode_tok_per_s",
+            "serve.e2e_tok_per_s",
+            "serve.decode_step_s",
+            "resident.prefetch_issued",
+            "resident.fused_tensors",
+            "resident.slot_tensors",
+        ],
+    },
+    # lockstep Engine.generate, --resident compressed (unfused)
+    "resident-lockstep": {
+        "spans": [
+            "serve.prefill",
+            "serve.decode_step",
+            "serve.layer",
+            "resident.decode",
+            "resident.consume_wait",
+            "decode.exec_step",
+        ],
+        "metrics": [
+            "load.decode_load_s",
+            "serve.decode_tok_per_s",
+            "serve.decode_step_s",
+            "resident.prefetch_issued",
+            "resident.slot_tensors",
+            "decode.symbols",
+        ],
+    },
+    # lockstep Engine.generate, --resident dense (streaming load)
+    "dense-lockstep": {
+        "spans": [
+            "load.stream",
+            "serve.prefill",
+            "serve.decode_step",
+            "decode.chunk",
+        ],
+        "metrics": [
+            "load.decode_load_s",
+            "load.time_to_first_weight_s",
+            "serve.decode_tok_per_s",
+            "serve.decode_step_s",
+            "decode.symbols",
+        ],
+    },
+    # ContinuousEngine (--batch-slots), dense residency
+    "continuous": {
+        "spans": [
+            "serve.step",
+            "serve.admit_chunk",
+            "serve.decode_batch",
+        ],
+        "metrics": [
+            "queue.depth",
+            "queue.submitted",
+            "queue.wait_s",
+            "slots.occupied",
+            "slots.inserts",
+            "request.ttft_s",
+            "request.latency_s",
+        ],
+    },
+}

@@ -52,7 +52,9 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import api
-from ..engine import ServeConfig, ServeSteps, sample
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from ..engine import ServeConfig, ServeSteps, _fence, sample
 from .queue import RequestQueue
 from .request import Request, RequestState, SamplingParams
 from .slots import SlotBatchManager
@@ -169,6 +171,8 @@ class ContinuousEngine:
         """Reserve a slot and set up the chunked-prefill pipeline state."""
         req.state = RequestState.PREFILLING
         req.t_admitted = time.monotonic()
+        obs_metrics.histogram("queue.wait_s").observe(
+            req.queue_wait_s or 0.0, outcome="admitted")
         P, chunk = req.prompt_len, self.prefill_chunk
         padded = -(-P // chunk) * chunk
         toks = np.zeros((1, padded), np.int32)
@@ -185,9 +189,11 @@ class ContinuousEngine:
         st = self._prefilling
         req, chunk = st["req"], self.prefill_chunk
         P, c0 = req.prompt_len, st["c0"]
-        logits, st["scratch"] = self.steps.prefill_chunk_fn(
-            self.params, jnp.asarray(st["toks"][:, c0:c0 + chunk]),
-            st["scratch"], jnp.full((1,), c0, jnp.int32))
+        with obs_trace.span("serve.admit_chunk", rid=req.rid, c0=c0):
+            logits, st["scratch"] = self.steps.prefill_chunk_fn(
+                self.params, jnp.asarray(st["toks"][:, c0:c0 + chunk]),
+                st["scratch"], jnp.full((1,), c0, jnp.int32))
+            _fence(logits)
         if c0 <= P - 1 < c0 + chunk:
             st["last"] = logits[:, P - 1 - c0][:, None]     # (1, 1, V)
         st["c0"] = c0 + chunk
@@ -199,6 +205,7 @@ class ContinuousEngine:
         key, sub = jax.random.split(jax.random.PRNGKey(req.sampling.seed))
         tok = int(sample(st["last"], sub, req.sampling.temperature)[0])
         req.t_first_token = time.monotonic()
+        obs_metrics.histogram("request.ttft_s").observe(req.ttft_s or 0.0)
         req.state = RequestState.DECODING
         req.output.append(tok)
         self._tokens[slot] = tok
@@ -219,6 +226,10 @@ class ContinuousEngine:
         is decoding), then one fused decode step over every slot.  Returns
         False when idle (nothing queued, nothing prefilling, nothing
         decoding)."""
+        with obs_trace.span("serve.step", step=self.n_decode_steps):
+            return self._step_inner()
+
+    def _step_inner(self) -> bool:
         progressed = False
         chunks = 0
         while True:
@@ -238,15 +249,17 @@ class ContinuousEngine:
         if not active:
             return progressed
 
-        pos = jnp.asarray(self.slots.kv_len)
-        tok = jnp.asarray(self._tokens[:, None])
-        logits, self.slots.cache = self.steps.decode_fn(
-            self.params, tok, self.slots.cache, pos)
-        new_tok, new_keys = _sample_slots(logits, jnp.asarray(self._keys),
-                                          jnp.asarray(self._temps))
-        new_tok = np.asarray(new_tok)
+        with obs_trace.span("serve.decode_batch", active=len(active)):
+            pos = jnp.asarray(self.slots.kv_len)
+            tok = jnp.asarray(self._tokens[:, None])
+            logits, self.slots.cache = self.steps.decode_fn(
+                self.params, tok, self.slots.cache, pos)
+            new_tok, new_keys = _sample_slots(logits, jnp.asarray(self._keys),
+                                              jnp.asarray(self._temps))
+            new_tok = np.asarray(new_tok)
         self._keys = np.array(new_keys)     # copy: host mirror stays writable
         self.n_decode_steps += 1
+        obs_metrics.counter("serve.tokens").inc(len(active))
         for s in active:
             self.slots.kv_len[s] += 1
             req = self.slots.requests[s]
@@ -285,3 +298,15 @@ class ContinuousEngine:
         self._keys[slot] = 0
         self._temps[slot] = 0.0
         self.finished.append(req)
+        obs_metrics.histogram("request.latency_s").observe(req.latency_s or 0.0)
+        obs_metrics.counter("requests.finished").inc(reason=req.finish_reason)
+        # lifecycle record built from the Request's own monotonic stamps
+        # (same clock Lifecycle uses), so the chain is exact, not re-measured
+        lc = obs_metrics.lifecycle(req.rid, outcome=req.finish_reason,
+                                   tokens=len(req.output))
+        for name, t in (("queued", req.t_arrival),
+                        ("admitted", req.t_admitted),
+                        ("first_token", req.t_first_token),
+                        ("done", req.t_finished)):
+            if t is not None:
+                lc.event(name, t)

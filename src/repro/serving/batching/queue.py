@@ -15,6 +15,7 @@ import time
 from collections import deque
 from typing import Deque, List, Optional
 
+from repro.obs import metrics as obs_metrics
 from .request import Request, RequestState
 
 
@@ -40,12 +41,15 @@ class RequestQueue:
             self.n_rejected += 1
             req.state = RequestState.REJECTED
             req.finish_reason = "queue_full"
+            obs_metrics.counter("queue.shed").inc(reason="queue_full")
             raise QueueFullError(
                 f"queue at bound ({self.max_queue} waiting); request "
                 f"{req.rid} rejected")
         req.t_arrival = time.monotonic() if now is None else now
         req.state = RequestState.QUEUED
         self._q.append(req)
+        obs_metrics.counter("queue.submitted").inc()
+        obs_metrics.gauge("queue.depth").set(len(self._q))
         return req
 
     def pop(self, now: Optional[float] = None) -> Optional[Request]:
@@ -54,11 +58,16 @@ class RequestQueue:
         now = time.monotonic() if now is None else now
         while self._q:
             req = self._q.popleft()
+            obs_metrics.gauge("queue.depth").set(len(self._q))
             if req.expired(now):
                 req.state = RequestState.EXPIRED
                 req.finish_reason = "deadline"
                 req.t_finished = now
                 self.expired.append(req)
+                obs_metrics.counter("queue.shed").inc(reason="deadline")
+                if req.t_arrival is not None:
+                    obs_metrics.histogram("queue.wait_s").observe(
+                        now - req.t_arrival, outcome="shed")
                 continue
             return req
         return None

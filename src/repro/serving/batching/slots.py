@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import api
+from repro.obs import metrics as obs_metrics
 from .request import Request
 
 
@@ -81,6 +82,7 @@ class SlotBatchManager:
         slot = self._free.pop()
         self.requests[slot] = req
         self.kv_len[slot] = 0
+        obs_metrics.gauge("slots.occupied").set(self.n_slots - len(self._free))
         return slot
 
     def insert(self, slot: int, req_cache: Dict[str, Any], kv_len: int) -> None:
@@ -89,6 +91,7 @@ class SlotBatchManager:
         assert kv_len <= self.max_len, (kv_len, self.max_len)
         self.cache = _splice(self.cache, req_cache, jnp.int32(slot))
         self.kv_len[slot] = kv_len
+        obs_metrics.counter("slots.inserts").inc()
 
     def release(self, slot: int, *, compact: bool = True) -> Request:
         """Detach the slot's request; by default compact (zero) its rows."""
@@ -97,6 +100,9 @@ class SlotBatchManager:
         self.requests[slot] = None
         self.kv_len[slot] = 0
         self._free.append(slot)
+        obs_metrics.counter("slots.releases").inc()
+        obs_metrics.gauge("slots.occupied").set(self.n_slots - len(self._free))
         if compact:
             self.cache = _zero_slot(self.cache, jnp.int32(slot))
+            obs_metrics.counter("slots.compactions").inc()
         return req

@@ -37,6 +37,30 @@ from repro.configs.base import ArchConfig
 from repro.core.spec import quantizable_shape as _quantizable_shape
 from repro.core.store import _DEFAULT_CHUNK, CompressedModel
 from repro.models import api
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
+# historical ad-hoc metric-dict keys -> canonical registry gauge names (the
+# deprecated read-through surface Engine.generate keeps alive; the catalog
+# lives in docs/OBSERVABILITY.md)
+_LEGACY_GENERATE_KEYS = {
+    "prefill_s": "serve.prefill_s",
+    "decode_s": "serve.decode_s",
+    "ttft_s": "serve.ttft_s",
+    "decode_tok_per_s": "serve.decode_tok_per_s",
+    "e2e_tok_per_s": "serve.e2e_tok_per_s",
+    "tok_per_s": "serve.decode_tok_per_s",     # legacy alias of the alias
+}
+
+
+def _fence(x: Any) -> None:
+    """Block on ``x`` when the active tracer asked for fenced spans
+    (``--trace-sync``): JAX dispatch is asynchronous, so without a fence a
+    span around a jitted call measures dispatch, not compute.  No-op (and
+    no device sync) in every other configuration — tracing stays a pure
+    observer of the async pipeline by default."""
+    if obs_trace.sync_enabled():
+        jax.block_until_ready(x)
 
 
 @dataclasses.dataclass
@@ -156,34 +180,45 @@ def load_params_from_compressed(model: CompressedModel, *,
         pairs = iter(model.dequantize_all(backend=resolved).items())
 
     out: Dict[str, Any] = {}
-    if quantized:
-        for k, v in model.unquantized.items():
-            out[k] = place(k, v)
-    for name, val in pairs:
-        if quantized and name in model.qmeta:
-            q, scale, zero = val
-            bits = model.qmeta[name]["bits"]
-            if (not _quantizable_shape(name, model.tensors[name].shape)
-                    or model.qmeta[name]["granularity"] == "per_group"):
-                # Two cases the fused dequant-matmul path cannot host, so
-                # dequantize at load instead of packing a QT struct:
-                # * norm scales / biases / sensitive params (quantized via an
-                #   explicit spec rule) — model layers consume plain arrays;
-                # * per-group quantization — the (…, D/group, 1) scale does
-                #   not broadcast against the (…, D) weight in the kernels.
-                out[name] = place(name, model._dequantize_one(name, q))
+    with obs_trace.span("load.stream", cat="load", backend=resolved.name,
+                        stream=stream, quantized=quantized):
+        if quantized:
+            for k, v in model.unquantized.items():
+                out[k] = place(k, v)
+        for name, val in pairs:
+            if quantized and name in model.qmeta:
+                q, scale, zero = val
+                bits = model.qmeta[name]["bits"]
+                if (not _quantizable_shape(name, model.tensors[name].shape)
+                        or model.qmeta[name]["granularity"] == "per_group"):
+                    # Two cases the fused dequant-matmul path cannot host, so
+                    # dequantize at load instead of packing a QT struct:
+                    # * norm scales / biases / sensitive params (quantized
+                    #   via an explicit spec rule) — model layers consume
+                    #   plain arrays;
+                    # * per-group quantization — the (…, D/group, 1) scale
+                    #   does not broadcast against the (…, D) weight in the
+                    #   kernels.
+                    out[name] = place(name, model._dequantize_one(name, q))
+                else:
+                    out[name] = place(name, pack_qt(q, scale, zero, bits=bits,
+                                                    pack_int4=pack_int4))
             else:
-                out[name] = place(name, pack_qt(q, scale, zero, bits=bits,
-                                                pack_int4=pack_int4))
-        else:
-            out[name] = place(name, val)
-        if ttfw is None:
-            jax.block_until_ready(jax.tree.leaves(out[name]))
-            ttfw = time.perf_counter() - t0
-    jax.block_until_ready(jax.tree.leaves(out))
+                out[name] = place(name, val)
+            if ttfw is None:
+                jax.block_until_ready(jax.tree.leaves(out[name]))
+                ttfw = time.perf_counter() - t0
+        jax.block_until_ready(jax.tree.leaves(out))
+    load_s = time.perf_counter() - t0
+    # registry is canonical (stable names); the caller's dict keeps the
+    # historical keys as a deprecated alias surface
+    obs_metrics.gauge("load.decode_load_s").set(load_s)
+    obs_metrics.gauge("load.time_to_first_weight_s").set(
+        ttfw if ttfw is not None else 0.0)
+    obs_metrics.counter("load.decodes").inc(backend=resolved.name)
     if metrics is not None:
         metrics["time_to_first_weight_s"] = ttfw if ttfw is not None else 0.0
-        metrics["decode_load_s"] = time.perf_counter() - t0
+        metrics["decode_load_s"] = load_s
         metrics["decode_backend"] = resolved.name
     return out
 
@@ -346,10 +381,12 @@ class ServeSteps:
         cache = self.mod.init_cache(self.cfg, B, self.sc.max_len)
         weights.prefetch(0)
         for l in range(weights.n_layers):
-            lp = weights.get(l)
-            weights.prefetch((l + 1) % weights.n_layers)
-            x, (k, v) = self._pblock_fn(lp, x, positions)
-            cache = self._write_fn(cache, k, v, jnp.int32(l))
+            with obs_trace.span("serve.layer", layer=l, phase="prefill"):
+                lp = weights.get(l)
+                weights.prefetch((l + 1) % weights.n_layers)
+                x, (k, v) = self._pblock_fn(lp, x, positions)
+                cache = self._write_fn(cache, k, v, jnp.int32(l))
+                _fence(x)
         return self._head_last_fn(weights.globals, x), cache
 
     def _resident_step(self, weights, tokens, cache, pos):
@@ -366,9 +403,11 @@ class ServeSteps:
         x = self._embed_fn(weights.globals, tokens)
         weights.prefetch(0)
         for l in range(weights.n_layers):
-            lp = weights.get(l)
-            weights.prefetch((l + 1) % weights.n_layers)
-            x, cache = self._rblock_fn(lp, x, cache, jnp.int32(l), pos)
+            with obs_trace.span("serve.layer", layer=l, phase="step"):
+                lp = weights.get(l)
+                weights.prefetch((l + 1) % weights.n_layers)
+                x, cache = self._rblock_fn(lp, x, cache, jnp.int32(l), pos)
+                _fence(x)
         return self._head_fn(weights.globals, x), cache
 
     def _scoped_tracer(self) -> Callable:
@@ -453,8 +492,9 @@ class Engine:
         """prompt: (B, S) int32 tokens — or the batch dict for encdec."""
         key = key if key is not None else jax.random.PRNGKey(0)
         t0 = time.perf_counter()
-        logits, cache = self.prefill_fn(self.params, prompt)
-        logits.block_until_ready()
+        with obs_trace.span("serve.prefill"):
+            logits, cache = self.prefill_fn(self.params, prompt)
+            logits.block_until_ready()
         t_prefill = time.perf_counter() - t0
 
         if isinstance(prompt, dict):
@@ -477,26 +517,40 @@ class Engine:
         t_first_token = time.perf_counter() - t0
         toks.append(tok)
         t1 = time.perf_counter()
+        step_hist = obs_metrics.histogram("serve.decode_step_s")
+        self.last_step_times: list = []
         for i in range(steps - 1):
-            key, sub = jax.random.split(key)
-            logits, cache = self.decode_fn(self.params, tok, cache,
-                                           jnp.int32(S + i))
-            tok = sample(logits, sub, self.sc.temperature)[:, None]
-            toks.append(tok)
+            ts = time.perf_counter()
+            with obs_trace.span("serve.decode_step", step=i):
+                key, sub = jax.random.split(key)
+                logits, cache = self.decode_fn(self.params, tok, cache,
+                                               jnp.int32(S + i))
+                tok = sample(logits, sub, self.sc.temperature)[:, None]
+                toks.append(tok)
+                _fence(tok)
+            # without --trace-sync each step time is host dispatch (plus any
+            # resident decode waits), not device compute — the loop-level
+            # t_decode below is fenced and authoritative either way
+            dt = time.perf_counter() - ts
+            self.last_step_times.append(dt)
+            step_hist.observe(dt)
         out = jnp.concatenate(toks, axis=1)
         out.block_until_ready()
         t_decode = time.perf_counter() - t1
+        # t_decode covers the steps-1 loop tokens only (token 0 rides on
+        # the prefill timing), so the two rates are reported separately
+        # instead of pretending one number covers both
+        decode_tps = B * max(steps - 1, 1) / max(t_decode, 1e-9)
+        e2e_tps = B * steps / max(time.perf_counter() - t0, 1e-9)
+        obs_metrics.gauge("serve.prefill_s").set(t_prefill)
+        obs_metrics.gauge("serve.decode_s").set(t_decode)
+        obs_metrics.gauge("serve.ttft_s").set(t_first_token)
+        obs_metrics.gauge("serve.decode_tok_per_s").set(decode_tps)
+        obs_metrics.gauge("serve.e2e_tok_per_s").set(e2e_tps)
+        obs_metrics.counter("serve.tokens").inc(B * steps)
         if echo_metrics:
-            # t_decode covers the steps-1 loop tokens only (token 0 rides on
-            # the prefill timing), so the two rates are reported separately
-            # instead of pretending one number covers both
-            decode_tps = B * max(steps - 1, 1) / max(t_decode, 1e-9)
-            e2e_tps = B * steps / max(time.perf_counter() - t0, 1e-9)
-            return out, {"prefill_s": t_prefill, "decode_s": t_decode,
-                         "ttft_s": t_first_token,
-                         "decode_tok_per_s": decode_tps,
-                         "e2e_tok_per_s": e2e_tps,
-                         "tok_per_s": decode_tps}   # legacy alias
+            return out, obs_metrics.LegacyMetricsView(
+                obs_metrics.default_registry(), _LEGACY_GENERATE_KEYS)
         return out
 
 

@@ -40,11 +40,15 @@ dense-resident engine bit for bit.
 """
 from __future__ import annotations
 
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 from repro.configs.base import ArchConfig
 from repro.core.bitstream import GUARD_BYTES, pack_streams, pow2_bucket
@@ -104,6 +108,7 @@ class CompressedResidentWeights:
                  chunk_symbols: Optional[int] = DEFAULT_CHUNK_SYMBOLS,
                  prefetch: bool = True, fused: bool = False,
                  fused_impl: Optional[str] = None):
+        t_load = time.perf_counter()
         self.model = model
         self.cfg = cfg
         self.n_layers = int(cfg.n_layers)
@@ -156,6 +161,17 @@ class CompressedResidentWeights:
                                thread_name_prefix="resident-decode")
             if prefetch else None)
         self._pending: Dict[int, Future] = {}
+        # fused dispatch accounting: which tensors the fused kernel hosts vs
+        # which fall back per-tensor, with the fallback REASON as the label
+        # (docs/OBSERVABILITY.md "Fused dispatch")
+        if self.fused:
+            obs_metrics.counter("resident.fused_tensors").inc(
+                len(self._fused))
+            for reason in self.fused_fallback.values():
+                obs_metrics.counter("resident.fused_fallback").inc(
+                    reason=reason)
+        obs_metrics.gauge("load.decode_load_s").set(
+            time.perf_counter() - t_load)
 
     # ------------------------------------------------------------ classification
     def _is_layer_stacked(self, name: str, shape) -> bool:
@@ -245,6 +261,12 @@ class CompressedResidentWeights:
         """Materialize layer ``l``'s weight-slot dict: decode its execution
         steps into the scratch buffer, slice scale/zero, pack QT/QT4, and
         append the dense-stacked carve-out views."""
+        with obs_trace.span("resident.decode", cat="resident", layer=l):
+            slot = self._decode_layer_inner(l)
+        obs_metrics.counter("resident.slot_tensors").inc(len(slot))
+        return slot
+
+    def _decode_layer_inner(self, l: int) -> Dict[str, Any]:
         slot: Dict[str, Any] = {}
         for step in self.plan[l]:
             for name, flat in decode_execution_step(
@@ -268,20 +290,37 @@ class CompressedResidentWeights:
         already in flight or prefetch is disabled)."""
         if self._exec is None or l in self._pending:
             return
+        obs_trace.instant("resident.prefetch_issue", cat="resident", layer=l)
+        obs_metrics.counter("resident.prefetch_issued").inc()
         self._pending[l] = self._exec.submit(self._decode_layer, l)
 
     def get(self, l: int) -> Dict[str, Any]:
         """Layer ``l``'s weight-slot dict (waits on its prefetch if one is
         in flight; decodes inline otherwise).  The caller drops the dict
-        after the layer's matmuls — nothing retains it here."""
+        after the layer's matmuls — nothing retains it here.
+
+        The ``resident.consume_wait`` span is the overlap-stall probe: its
+        duration is the time the serving loop actually blocked on weight
+        decode (≈0 on a prefetch hit).  ``benchmarks/overlap_report.py``
+        sums these against the worker's ``resident.decode`` spans."""
         fut = self._pending.pop(l, None)
         if fut is not None:
-            return fut.result()
-        if self._exec is not None:
-            # route through the worker so the shared scratch buffer is only
-            # ever touched by one thread
-            return self._exec.submit(self._decode_layer, l).result()
-        return self._decode_layer(l)
+            hit = fut.done()
+            obs_metrics.counter(
+                "resident.prefetch_hit" if hit else "resident.prefetch_wait"
+            ).inc()
+            with obs_trace.span("resident.consume_wait", cat="resident",
+                                layer=l, hit=hit):
+                return fut.result()
+        # no prefetch in flight: the whole decode is a stall by definition
+        obs_metrics.counter("resident.prefetch_wait").inc()
+        with obs_trace.span("resident.consume_wait", cat="resident",
+                            layer=l, hit=False):
+            if self._exec is not None:
+                # route through the worker so the shared scratch buffer is
+                # only ever touched by one thread
+                return self._exec.submit(self._decode_layer, l).result()
+            return self._decode_layer(l)
 
     # ---------------------------------------------------------------- accounting
     def resident_bytes(self) -> Dict[str, int]:
