@@ -147,6 +147,121 @@ def run(model: str = "qwen3-1.7b", *, n_requests: int = 16, slots: int = 8,
                 tok_per_s_continuous=tps_c)
 
 
+def run_paged(model: str = "qwen3-1.7b", *, n_requests: int = 8,
+              slots: int = 4, prompt_max: int = 16, gen_max: int = 8,
+              prefill_chunk: int = 8, kv_bits: int = 4, kv_block: int = 8,
+              prefix_pool: int = 2, prefix_len: Optional[int] = None,
+              check_ratio: Optional[float] = None,
+              check_drift: Optional[float] = None, seed: int = 0,
+              verbose: bool = True) -> dict:
+    """Paged KV cache vs the PR 2 slot pool, at a fixed KV HBM budget.
+
+    Three runs over one prefix-shared trace (``prefix_pool`` shared system
+    prompts), all greedy and deterministic:
+
+      slot pool    — the reference ``SlotBatchManager`` engine;
+      dense paged  — ``bits=16`` block pool + prefix sharing, asserted
+                     BIT-IDENTICAL to the slot pool (the drift contract);
+      quantized    — ``kv_bits`` block pool sized to the slot pool's byte
+                     budget: the freed bytes become extra concurrent slots
+                     (``ratio`` = paged slots / baseline slots at the same
+                     budget) at the cost of a bounded greedy-token
+                     divergence rate, which is measured and reported.
+    """
+    import jax
+    from repro.configs import registry
+    from repro.core.spec import KVCompressionSpec
+    from repro.models import api
+    from repro.serving import engine as serving_engine
+    from repro.serving.batching import ContinuousEngine, poisson_trace
+    from repro.serving.kvcache import kv_cache_bytes, kv_pool_bytes
+
+    assert prefill_chunk % kv_block == 0, \
+        f"prefix sharing needs chunk % block == 0 ({prefill_chunk}, {kv_block})"
+    cfg = registry.reduced(registry.get(model))
+    params = api.build(cfg).init(cfg, jax.random.PRNGKey(0))
+    if prefix_len is None:
+        prefix_len = 2 * kv_block
+    budget_len = max(prompt_max, prefix_len + 1) + gen_max + prefill_chunk
+    # strict dense bit-identity needs identical attention reduction shapes:
+    # gathered length = max_blocks * block == max_len (docs/KV_CACHE.md)
+    max_len = -(-budget_len // kv_block) * kv_block
+    sc = serving_engine.ServeConfig(max_len=max_len)
+    trace = poisson_trace(n_requests, rate_per_s=1e9, prompt_max=prompt_max,
+                          gen_max=gen_max, vocab=cfg.vocab, seed=seed,
+                          prefix_pool=prefix_pool, prefix_len=prefix_len)
+
+    def serve(kv_spec=None, n_slots=slots, kv_blocks=None):
+        ce = ContinuousEngine(cfg, params, sc, n_slots=n_slots,
+                              max_queue=n_requests,
+                              prefill_chunk=prefill_chunk,
+                              kv_spec=kv_spec, kv_blocks=kv_blocks)
+        for _, prompt, max_new in trace:
+            ce.submit(prompt, max_new)
+        t0 = time.monotonic()
+        ce.run()
+        span = time.monotonic() - t0
+        outs = [list(r.output) for r in
+                sorted(ce.finished, key=lambda r: r.rid)]
+        return ce, outs, span
+
+    if verbose:
+        print(f"{cfg.name}: {n_requests} requests, {prefix_pool} shared "
+              f"prefixes x {prefix_len} tok, prompts ≤{prompt_max}, "
+              f"gen ≤{gen_max}, max_len {max_len}")
+    _, ref_outs, _ = serve()
+    budget = kv_cache_bytes(cfg, slots, max_len)
+
+    dense_spec = KVCompressionSpec(bits=16, block_size=kv_block, sharing=True)
+    de, dense_outs, _ = serve(dense_spec)
+    assert dense_outs == ref_outs, \
+        "dense paged mode changed greedy tokens vs the slot pool"
+    dstats = de.slots.stats()
+    if verbose:
+        print(f"  dense paged [{dense_spec.describe()}]: BIT-IDENTICAL to "
+              f"the slot pool; prefix hit rate "
+              f"{dstats['prefix_hit_rate']*100:.0f}% "
+              f"({dstats['shared_hits']}/{dstats['shared_hits'] + dstats['shared_misses']})")
+
+    q_spec = KVCompressionSpec(bits=kv_bits, block_size=kv_block,
+                               codec="rans", sharing=True)
+    block_bytes = kv_pool_bytes(cfg, 1, kv_block, kv_bits)
+    n_blocks = budget // block_bytes
+    blocks_per_req = max_len // kv_block
+    slots_q = (n_blocks - 1) // blocks_per_req        # -1: the trash block
+    ratio = slots_q / slots
+    qe, q_outs, q_span = serve(q_spec, n_slots=min(slots_q, n_requests),
+                               kv_blocks=n_blocks)
+    pool_q = qe.slots.pool_bytes
+    diverged = total = 0
+    for ref, q in zip(ref_outs, q_outs):
+        total += len(ref)
+        diverged += sum(a != b for a, b in zip(ref, q))
+    drift = diverged / max(total, 1)
+    qstats = qe.slots.stats()
+    toks = sum(len(o) for o in q_outs)
+    if verbose:
+        print(f"  quantized  [{q_spec.describe()}]: pool {pool_q} B vs "
+              f"slot-pool budget {budget} B -> {n_blocks} blocks = "
+              f"{slots_q} concurrent slots ({ratio:.1f}x the {slots}-slot "
+              f"baseline at the same KV HBM budget)")
+        print(f"  quantized drift: {diverged}/{total} greedy tokens diverge "
+              f"({drift*100:.0f}%) | prefix hit rate "
+              f"{qstats['prefix_hit_rate']*100:.0f}% | {toks} tok in "
+              f"{q_span:.2f}s")
+    assert pool_q <= budget, (pool_q, budget)
+    if check_ratio is not None:
+        assert ratio >= check_ratio, \
+            (f"quantized KV fits only {ratio:.2f}x the baseline slots at the "
+             f"same budget; required {check_ratio}x")
+    if check_drift is not None:
+        assert drift <= check_drift, \
+            f"greedy drift {drift:.2f} above bound {check_drift}"
+    return dict(ratio=ratio, slots_q=slots_q, drift=drift,
+                prefix_hit_rate=qstats["prefix_hit_rate"],
+                pool_bytes=pool_q, budget_bytes=budget)
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--arch", default="qwen3-1.7b")
@@ -160,9 +275,37 @@ def main(argv=None) -> int:
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--check", type=float, default=None, metavar="X",
                    help="fail unless continuous >= X times lockstep tok/s")
+    p.add_argument("--paged", action="store_true",
+                   help="paged-KV mode: slot pool vs dense-paged "
+                        "(bit-identity gate) vs quantized-paged at the same "
+                        "KV HBM budget (concurrency + drift gates)")
+    p.add_argument("--kv-bits", type=int, default=4)
+    p.add_argument("--kv-block", type=int, default=8)
+    p.add_argument("--prefix-pool", type=int, default=2,
+                   help="distinct shared system prompts in the trace")
+    p.add_argument("--prefix-len", type=int, default=None)
+    p.add_argument("--check-ratio", type=float, default=None, metavar="X",
+                   help="with --paged: fail unless quantized KV fits >= X "
+                        "times the baseline slots at the same budget")
+    p.add_argument("--check-drift", type=float, default=None, metavar="D",
+                   help="with --paged: fail unless greedy token divergence "
+                        "<= D (fraction)")
     p.add_argument("--dry-run", action="store_true",
                    help="tiny CI smoke: few requests, no speedup gate")
     args = p.parse_args(argv)
+    if args.paged:
+        kw = dict(kv_bits=args.kv_bits, kv_block=args.kv_block,
+                  prefix_pool=args.prefix_pool, prefix_len=args.prefix_len,
+                  check_ratio=args.check_ratio, check_drift=args.check_drift,
+                  seed=args.seed)
+        if args.dry_run:
+            run_paged(args.arch, n_requests=4, slots=2, prompt_max=12,
+                      gen_max=5, prefill_chunk=args.kv_block, **kw)
+        else:
+            run_paged(args.arch, n_requests=args.requests, slots=args.slots,
+                      prompt_max=args.prompt_max, gen_max=args.gen_max,
+                      prefill_chunk=args.prefill_chunk, **kw)
+        return 0
     if args.dry_run:
         run(args.arch, n_requests=4, slots=2, rate_per_s=200.0, prompt_max=10,
             gen_max=5, prefill_chunk=4, seed=args.seed)

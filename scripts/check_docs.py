@@ -41,7 +41,9 @@ REQUIRED_LINKS = [
     ("README.md", "docs/ARCHITECTURE.md"),
     ("README.md", "docs/SERVING.md"),
     ("README.md", "docs/OBSERVABILITY.md"),
+    ("README.md", "docs/KV_CACHE.md"),
     ("docs/SERVING.md", "OBSERVABILITY.md"),
+    ("docs/SERVING.md", "KV_CACHE.md"),
 ]
 SECTION_DOCS = ["docs/ARCHITECTURE.md", "docs/SERVING.md", "DESIGN.md"]
 AUDIT_GLOBS = ["src/repro/serving/**/*.py", "src/repro/core/scheduler.py"]

@@ -343,6 +343,103 @@ class CompressionSpec:
         return "; ".join(parts)
 
 
+@dataclasses.dataclass(frozen=True)
+class KVCompressionSpec:
+    """Paged KV-cache compression policy (the ``--kv-spec`` CLI surface).
+
+    The weight-side :class:`CompressionSpec` is an ordered per-tensor rule
+    list; the KV cache needs far less machinery — one uniform policy covers
+    every block, because blocks are interchangeable units of one pool:
+
+    * ``bits`` — in-pool precision: 16 keeps dense bf16 blocks (paged layout
+      only, bit-identical to the slot pool), 8/4 quantize each block's K/V
+      per (token, head) with an asymmetric grid
+      (:func:`repro.models.layers.kv_quantize` — the jnp twin of
+      :func:`repro.core.quant.quantize`'s ASYMMETRIC scheme);
+    * ``block_size`` — tokens per block (the paging granularity);
+    * ``codec`` — optional cold-tier entropy codec (``huffman`` / ``rans`` /
+      ``raw`` from the codec registry): evicted shared blocks are
+      entropy-coded to host bytes instead of dropped, so a prefix hit on a
+      cold block costs one serial decode instead of a re-prefill.  Quantized
+      pools only — there is no sub-bf16 symbol alphabet to code at bits=16;
+    * ``sharing`` — content-hash prefix sharing of full, immutable prompt
+      blocks across requests (docs/KV_CACHE.md has the COW rules).
+
+    Grammar (comma-separated, mirroring one ``CompressionSpec`` clause)::
+
+        opt  := 'sharing' | INT                  # bare int = bits
+              | ('bits'|'block'|'codec'|'sharing') '=' value
+
+    e.g. ``"bits=4,block=16,codec=rans,sharing"``.  ``validate()`` checks
+    the codec against the registry upfront (same contract as
+    ``CompressionSpec.validate``); ``describe()`` round-trips.
+    """
+
+    bits: int = 16
+    block_size: int = 16
+    codec: Optional[str] = None
+    sharing: bool = False
+    source: Optional[str] = None    # the parsed text, for provenance
+
+    @classmethod
+    def parse(cls, text: str, **overrides) -> "KVCompressionSpec":
+        kw: dict = {}
+        for opt in filter(None, (o.strip() for o in text.split(","))):
+            key, eq, value = opt.partition("=")
+            key = key.strip().lower()
+            value = value.strip()
+            if not eq:
+                if key == "sharing":
+                    kw["sharing"] = True
+                elif key.isdigit():
+                    kw["bits"] = int(key)
+                else:
+                    raise ValueError(
+                        f"bad kv-spec option {opt!r}: expected sharing / "
+                        f"<bits> / bits=/block=/codec=/sharing=")
+            elif key == "bits":
+                kw["bits"] = int(value)
+            elif key in ("block", "block_size"):
+                kw["block_size"] = int(value)
+            elif key == "codec":
+                kw["codec"] = None if value.lower() in ("", "none") else value
+            elif key == "sharing":
+                kw["sharing"] = value.lower() in ("1", "true", "yes", "on")
+            else:
+                raise ValueError(f"unknown kv-spec key {key!r} in {text!r}")
+        kw.update(overrides)
+        return cls(source=text, **kw).validate()
+
+    def validate(self) -> "KVCompressionSpec":
+        if self.bits not in (16, 8, 4):
+            raise ValueError(f"kv bits must be 16 (dense), 8, or 4; got "
+                             f"{self.bits!r}"
+                             + (f" (kv-spec: {self.source})"
+                                if self.source else ""))
+        if not (isinstance(self.block_size, int) and self.block_size >= 1):
+            raise ValueError(f"kv block_size must be >= 1, got "
+                             f"{self.block_size!r}")
+        if self.codec is not None:
+            from . import codecs
+            codecs.get_codec(self.codec)     # raises with the registered list
+            if self.bits == 16:
+                raise ValueError(
+                    "kv codec (cold-block entropy coding) needs a quantized "
+                    "pool: entropy coding targets the uint8 symbol stream, "
+                    "so set bits=8 or bits=4 alongside codec="
+                    + (f" (kv-spec: {self.source})" if self.source else ""))
+        return self
+
+    def describe(self) -> str:
+        """Canonical spec text; ``parse(describe())`` round-trips."""
+        s = f"bits={self.bits},block={self.block_size}"
+        if self.codec:
+            s += f",codec={self.codec}"
+        if self.sharing:
+            s += ",sharing"
+        return s
+
+
 def spec_from_legacy(bits: int = 8,
                      granularity: quant.Granularity = quant.Granularity.PER_TENSOR,
                      *, codec: str = "huffman",

@@ -94,6 +94,21 @@ def main(argv=None):
                    help="with --batch-slots: replay R synthetic Poisson "
                         "arrivals (ragged prompts/gen) instead of one "
                         "uniform request wave")
+    p.add_argument("--kv-spec", default=None, metavar="SPEC",
+                   help="with --batch-slots: serve through the paged KV "
+                        "block pool under this compression policy, e.g. "
+                        "'bits=4,block=16,codec=rans,sharing' (see "
+                        "repro.core.spec.KVCompressionSpec; bits=16 keeps "
+                        "dense bf16 blocks, bit-identical to the slot pool; "
+                        "docs/KV_CACHE.md)")
+    p.add_argument("--kv-block", type=int, default=0, metavar="B",
+                   help="override the paged KV block size (tokens per "
+                        "block); implies --kv-spec when given alone")
+    p.add_argument("--prefix-sharing", action="store_true",
+                   help="share identical prompt-prefix KV blocks across "
+                        "requests (copy-on-write publish of full prompt "
+                        "blocks; implies --kv-spec when given alone, and "
+                        "makes --traffic replay shared system prompts)")
     p.add_argument("--mesh", default=None, metavar="DxM",
                    help="serve on a (data, model) device mesh, e.g. 2x4: "
                         "weights tensor-parallel over model (QT q/scale/zero "
@@ -147,6 +162,37 @@ def main(argv=None):
         p.error("--fused/--fused-impl require --resident compressed (the "
                 "fused kernel consumes the entropy-coded payload handles "
                 "that mode keeps resident)")
+
+    # paged KV: parse + validate the policy upfront (same contract as
+    # --compress-spec); the paged pool rides dense residency, single device
+    kv_spec = None
+    if args.kv_spec is not None or args.kv_block or args.prefix_sharing:
+        if args.batch_slots <= 0:
+            p.error("--kv-spec/--kv-block/--prefix-sharing require "
+                    "--batch-slots (the paged KV cache is a "
+                    "continuous-batching feature; docs/KV_CACHE.md)")
+        if args.resident != "dense":
+            p.error("paged KV (--kv-spec) needs --resident dense: the "
+                    "compressed-resident per-layer drivers have no paged "
+                    "step twins yet")
+        if args.mesh:
+            p.error("paged KV (--kv-spec) is single-device today; drop "
+                    "--mesh")
+        from repro.core.spec import KVCompressionSpec
+        overrides = {}
+        if args.kv_block:
+            overrides["block_size"] = args.kv_block
+        if args.prefix_sharing:
+            overrides["sharing"] = True
+        try:
+            kv_spec = KVCompressionSpec.parse(args.kv_spec or "", **overrides)
+        except (ValueError, KeyError) as e:
+            p.error(f"bad --kv-spec: {e}")
+        if kv_spec.sharing and args.prefill_chunk % kv_spec.block_size:
+            p.error(f"--prefix-sharing needs --prefill-chunk divisible by "
+                    f"the KV block size (chunk {args.prefill_chunk}, block "
+                    f"{kv_spec.block_size}): the prefix-skip boundary must "
+                    f"be a chunk boundary")
 
     # validate the backend against the registry BEFORE any expensive work, so
     # a typo fails with the list of choices, not a deep KeyError mid-load
@@ -306,14 +352,33 @@ def main(argv=None):
               f"({sum(pb.values())/2**20:.1f} MiB total)")
 
     # slot mode pads prompts to a prefill-chunk multiple, so its cache needs
-    # that much headroom; the lockstep path keeps the exact footprint
+    # that much headroom; the lockstep path keeps the exact footprint.
+    # Prefix-shared traffic prepends a block-aligned system prompt, so the
+    # prompt budget grows to cover prefix + at least one unique token.
+    kv_prefix_len = 0
+    if kv_spec is not None and kv_spec.sharing and args.traffic > 0:
+        b = kv_spec.block_size
+        kv_prefix_len = max(b, args.prompt_len // (2 * b) * b)
+    prompt_budget = max(args.prompt_len, kv_prefix_len + 1)
     headroom = max(args.prefill_chunk, 0) if args.batch_slots > 0 else 0
-    sc = engine.ServeConfig(max_len=args.prompt_len + args.gen + headroom)
+    sc = engine.ServeConfig(max_len=prompt_budget + args.gen + headroom)
     rng = np.random.default_rng(0)
+
+    # true serving peak is weights + KV — surface the KV term the weight
+    # breakdowns above leave out (paged pool bytes print with the manager's
+    # own numbers inside _serve_continuous)
+    if kv_spec is None and hasattr(mod, "init_cache"):
+        from repro.serving.kvcache import kv_cache_bytes
+        kv_rows = args.batch_slots if args.batch_slots > 0 else args.batch
+        kvb = kv_cache_bytes(cfg, kv_rows, sc.max_len)
+        print(f"  KV cache {kvb/2**20:.2f} MiB resident "
+              f"({kv_rows} x {sc.max_len} bf16 rows) — true serving peak = "
+              f"weights + KV")
 
     if args.batch_slots > 0:
         rc = _serve_continuous(cfg, serve_params, sc, args, rng,
-                               load_metrics, mesh=mesh, rules=rules)
+                               load_metrics, mesh=mesh, rules=rules,
+                               kv_spec=kv_spec, kv_prefix_len=kv_prefix_len)
         _write_obs(args)
         return rc
 
@@ -360,7 +425,7 @@ def _write_obs(args):
 
 
 def _serve_continuous(cfg, serve_params, sc, args, rng, load_metrics,
-                      mesh=None, rules=None):
+                      mesh=None, rules=None, kv_spec=None, kv_prefix_len=0):
     """--batch-slots path: slot-batched serving of independent requests."""
     import numpy as np
     from repro.obs.metrics import percentile
@@ -370,13 +435,25 @@ def _serve_continuous(cfg, serve_params, sc, args, rng, load_metrics,
     ce = ContinuousEngine(cfg, serve_params, sc, n_slots=args.batch_slots,
                           max_queue=args.max_queue,
                           prefill_chunk=args.prefill_chunk,
-                          mesh=mesh, rules=rules, resident=args.resident)
+                          mesh=mesh, rules=rules, resident=args.resident,
+                          kv_spec=kv_spec)
+    if kv_spec is not None:
+        print(f"  paged KV [{kv_spec.describe()}]: pool "
+              f"{ce.slots.pool_bytes/2**20:.2f} MiB resident "
+              f"({ce.slots.n_blocks} x {kv_spec.block_size}-token blocks) — "
+              f"true serving peak = weights + KV")
     n = args.traffic if args.traffic > 0 else args.batch
     shed = 0
     t0 = time.monotonic()
     if args.traffic > 0:        # Poisson replay: ragged prompts + gen lengths
+        prefix_kw = {}
+        if kv_spec is not None and kv_spec.sharing:
+            # shared system prompts exercise prefix sharing: 2 distinct
+            # block-aligned prefixes, ragged unique suffixes
+            prefix_kw = dict(prefix_pool=2, prefix_len=kv_prefix_len)
         trace = poisson_trace(n, rate_per_s=100.0, prompt_max=args.prompt_len,
-                              gen_max=args.gen, vocab=cfg.vocab, seed=0)
+                              gen_max=args.gen, vocab=cfg.vocab, seed=0,
+                              **prefix_kw)
         _, shed, _ = replay(ce, trace, shed_on_full=True)
     else:                       # one wave of uniform requests
         for _ in range(n):
@@ -412,6 +489,14 @@ def _serve_continuous(cfg, serve_params, sc, args, rng, load_metrics,
     print(f"  queue wait [admitted] p50 {percentile(wait, 50)*1e3:.0f}ms "
           f"p99 {percentile(wait, 99)*1e3:.0f}ms over {len(fin)} requests"
           + (f"; {shed} shed before admission" if shed else ""))
+    if kv_spec is not None:
+        st = ce.slots.stats()
+        print(f"  paged KV: prefix hit rate {st['prefix_hit_rate']*100:.0f}% "
+              f"({st['shared_hits']} hits / {st['shared_misses']} misses), "
+              f"{st['blocks_free']}/{st['blocks_total']} blocks free, cold "
+              f"tier {st['cold_bytes']/2**10:.1f} KiB "
+              f"({st['cold_evictions']} evictions, {st['cold_restores']} "
+              f"restores, {st['dropped_evictions']} dropped)")
     return 0
 
 

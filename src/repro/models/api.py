@@ -47,6 +47,13 @@ def supports_continuous_batching(cfg: ArchConfig) -> bool:
     return hasattr(build(cfg), "prefill_chunk")
 
 
+def supports_paged_kv(cfg: ArchConfig) -> bool:
+    """True when the family implements the paged block-pool cache contract
+    (``init_kv_pool`` + ``paged_prefill_chunk`` / ``paged_decode_step``
+    routing K/V through a block table — see docs/KV_CACHE.md)."""
+    return hasattr(build(cfg), "paged_decode_step")
+
+
 def supports_resident_serving(cfg: ArchConfig) -> bool:
     """True when the family implements the per-layer weight-slot contract
     of compressed-resident serving (``embed_step`` / ``head_step`` /

@@ -12,8 +12,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from .layers import (QT, Schema, Spec, gqa_attention, init_params, matmul,
-                     rms_norm, rope, softmax_xent, swiglu, take_rows, update_kv_cache)
+from .layers import (QT, Schema, Spec, gather_blocks, gqa_attention,
+                     init_params, kv_dequantize, kv_quantize, matmul, rms_norm,
+                     rope, scatter_blocks, softmax_xent, swiglu, take_rows,
+                     update_kv_cache)
 
 
 def schema(cfg: ArchConfig) -> Schema:
@@ -322,6 +324,163 @@ def prefill_chunk(cfg: ArchConfig, params, tokens, cache, pos, *,
 
     keys = ("k", "v", "k_scale", "v_scale") if q8 else ("k", "v")
     x, out = jax.lax.scan(body, x, (stack, *[cache[k] for k in keys]),
+                          unroll=unroll)
+    x = rms_norm(x, params["final_norm"])
+    return logits_fn(cfg, params, x), dict(zip(keys, out))
+
+
+# ------------------------------------------------------------- paged KV cache
+#
+# Block-pool twins of the slot-batch step functions (docs/KV_CACHE.md).  The
+# cache is a pool of fixed-size blocks, (L, n_blocks, block_size, KV, ·) per
+# leaf, and every request's sequence is routed through a (B, max_blocks)
+# block table: attention scatters the step's K/V into the table's blocks and
+# gathers the logical sequence back out (``layers.gather_blocks`` /
+# ``scatter_blocks``).  With dense bf16 blocks the gathered sequence holds
+# bitwise the same live rows as the slot cache, so greedy decode is
+# bit-identical to ``decode_step`` / ``prefill_chunk`` (the drift contract);
+# quantized pools (``kv_bits`` 8/4) trade bounded greedy drift for 1.8-3.2x
+# more tokens per HBM byte.  ``pos`` is always the (B,) per-slot vector —
+# paged serving is a continuous-batching feature.
+
+
+def init_kv_pool(cfg: ArchConfig, n_blocks: int, block_size: int,
+                 kv_bits: int = 16):
+    """Preallocate a paged KV block pool (block id 0 is the trash block)."""
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    if kv_bits == 16:
+        return {
+            "k": jnp.zeros((L, n_blocks, block_size, KV, hd), jnp.bfloat16),
+            "v": jnp.zeros((L, n_blocks, block_size, KV, hd), jnp.bfloat16),
+        }
+    assert kv_bits in (8, 4), kv_bits
+    if kv_bits == 4 and hd % 2:
+        raise ValueError(f"kv_bits=4 nibble-packs head_dim pairs; "
+                         f"hd={hd} is odd")
+    hs = hd if kv_bits == 8 else hd // 2
+    pool = {
+        "k": jnp.zeros((L, n_blocks, block_size, KV, hs), jnp.uint8),
+        "v": jnp.zeros((L, n_blocks, block_size, KV, hs), jnp.uint8),
+    }
+    for side in ("k", "v"):
+        pool[f"{side}_scale"] = jnp.zeros((L, n_blocks, block_size, KV, 1),
+                                          jnp.bfloat16)
+        pool[f"{side}_zero"] = jnp.zeros((L, n_blocks, block_size, KV, 1),
+                                         jnp.bfloat16)
+    return pool
+
+
+def _pool_meta(cfg: ArchConfig, pool) -> Tuple[Tuple[str, ...], int]:
+    """(leaf order, kv_bits) — both static at trace time from pool shapes."""
+    if "k_scale" not in pool:
+        return ("k", "v"), 16
+    bits = 8 if pool["k"].shape[-1] == cfg.hd else 4
+    return ("k", "k_scale", "k_zero", "v", "v_scale", "v_zero"), bits
+
+
+def _paged_attn(cfg: ArchConfig, lp: Dict[str, Any], x: jax.Array, *,
+                pc: Dict[str, jax.Array], bt: jax.Array, pos: jax.Array):
+    """Attention against one layer's block-pool slice ``pc``.
+
+    Mirrors :func:`_attn`'s cached path op for op on the compute side — the
+    only difference is where K/V rows live: ``scatter_blocks`` replaces
+    ``update_kv_cache`` and ``gather_blocks`` materializes the (B, MB*BS)
+    logical sequence the same ``gqa_attention`` masks by ``kv_len``.
+    Quantized pools quantize the step's K/V per (token, head) before the
+    scatter and dequantize the gathered sequence in-graph.
+    """
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    positions = jnp.asarray(pos)[:, None] + jnp.arange(S)     # (B, S)
+    h = rms_norm(x, lp["attn_norm"])
+    q = matmul(h, lp["wq"]).reshape(B, S, H, hd)
+    k = matmul(h, lp["wk"]).reshape(B, S, KV, hd)
+    v = matmul(h, lp["wv"]).reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"])
+        k = rms_norm(k, lp["k_norm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    _, bits = _pool_meta(cfg, pc)
+    if bits == 16:
+        new = {"k": scatter_blocks(pc["k"], bt, positions, k),
+               "v": scatter_blocks(pc["v"], bt, positions, v)}
+        ck = gather_blocks(new["k"], bt)
+        cv = gather_blocks(new["v"], bt)
+    else:
+        new = {}
+        for side, step_val in (("k", k), ("v", v)):
+            sq, ss, sz = kv_quantize(step_val, bits)
+            new[side] = scatter_blocks(pc[side], bt, positions, sq)
+            new[f"{side}_scale"] = scatter_blocks(pc[f"{side}_scale"], bt,
+                                                  positions, ss)
+            new[f"{side}_zero"] = scatter_blocks(pc[f"{side}_zero"], bt,
+                                                 positions, sz)
+        ck = kv_dequantize(gather_blocks(new["k"], bt),
+                           gather_blocks(new["k_scale"], bt),
+                           gather_blocks(new["k_zero"], bt), bits)
+        cv = kv_dequantize(gather_blocks(new["v"], bt),
+                           gather_blocks(new["v_scale"], bt),
+                           gather_blocks(new["v_zero"], bt), bits)
+    attn = gqa_attention(q, ck, cv, causal=S > 1, q_offset=pos,
+                         kv_len=jnp.asarray(pos) + S)
+    out = matmul(attn.reshape(B, S, H * hd), lp["wo"])
+    return out, new
+
+
+def _paged_block(cfg: ArchConfig, lp, x, *, pc, bt, pos):
+    attn_out, new = _paged_attn(cfg, lp, x, pc=pc, bt=bt, pos=pos)
+    x = x + attn_out
+    h = rms_norm(x, lp["mlp_norm"])
+    x = x + swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"])
+    return x, new
+
+
+def paged_decode_step(cfg: ArchConfig, params, token, pool, bt, pos, *,
+                      unroll: int = 1):
+    """One fused generation step over a paged slot batch.
+
+    token: (B, 1) int32; pool: ``init_kv_pool`` pytree; bt: (B, MB) int32
+    block table (trash rows for inactive lanes); pos: (B,) per-slot kv_len.
+    """
+    from repro.distributed.ctx import constrain_activation
+    x = constrain_activation(take_rows(params["embed"], token))
+    stack = _layer_stack(params)
+    keys, _ = _pool_meta(cfg, pool)
+
+    def body(x, xs):
+        lp, *pc = xs
+        x, new = _paged_block(cfg, lp, x, pc=dict(zip(keys, pc)), bt=bt,
+                              pos=pos)
+        return constrain_activation(x), tuple(new[k] for k in keys)
+
+    x, out = jax.lax.scan(body, x, (stack, *[pool[k] for k in keys]),
+                          unroll=unroll)
+    x = rms_norm(x, params["final_norm"])
+    return logits_fn(cfg, params, x), dict(zip(keys, out))
+
+
+def paged_prefill_chunk(cfg: ArchConfig, params, tokens, pool, bt, pos, *,
+                        unroll: int = 1):
+    """Chunked prefill through the block table (paged ``prefill_chunk``).
+
+    tokens: (B, S) chunk; pos: (B,) chunk start offsets.  The chunk's rows
+    land in the blocks ``bt`` names for positions [pos, pos + S); the caller
+    guarantees those table entries are allocated (admission preallocates the
+    whole request — see serving/kvcache/blocks.py).
+    """
+    from repro.distributed.ctx import constrain_activation
+    x = constrain_activation(take_rows(params["embed"], tokens))
+    stack = _layer_stack(params)
+    keys, _ = _pool_meta(cfg, pool)
+
+    def body(x, xs):
+        lp, *pc = xs
+        x, new = _paged_block(cfg, lp, x, pc=dict(zip(keys, pc)), bt=bt,
+                              pos=pos)
+        return constrain_activation(x), tuple(new[k] for k in keys)
+
+    x, out = jax.lax.scan(body, x, (stack, *[pool[k] for k in keys]),
                           unroll=unroll)
     x = rms_norm(x, params["final_norm"])
     return logits_fn(cfg, params, x), dict(zip(keys, out))

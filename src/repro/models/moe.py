@@ -377,3 +377,60 @@ def prefill_chunk(cfg: ArchConfig, params, tokens, cache, pos, *,
                                unroll=unroll)
     x = rms_norm(x, params["final_norm"])
     return dense.logits_fn(cfg, params, x), {"k": ck, "v": cv}
+
+
+# ------------------------------------------------------------- paged KV cache
+#
+# Paged twins of the step functions above (docs/KV_CACHE.md).  Attention is
+# shared with the dense family (`dense._paged_attn` scatters/gathers through
+# the block table); the MLP is the MoE dispatch with the load-balance aux
+# dropped, matching `decode_step`.  Quantized pools work unchanged — the
+# pool layout carries no family-specific leaves.
+
+init_kv_pool = dense.init_kv_pool
+
+
+def _paged_block(cfg: ArchConfig, lp, x, *, pc, bt, pos):
+    attn_out, new = dense._paged_attn(cfg, lp, x, pc=pc, bt=bt, pos=pos)
+    x = x + attn_out
+    h = rms_norm(x, lp["mlp_norm"])
+    y, _ = moe_mlp(h, _moe_wts(lp), cfg.moe, _padded_experts(cfg))
+    return x + y, new
+
+
+def paged_decode_step(cfg: ArchConfig, params, token, pool, bt, pos, *,
+                      unroll: int = 1):
+    from repro.distributed.ctx import constrain_activation
+    x = constrain_activation(take_rows(params["embed"], token))
+    stack = dense._layer_stack(params)
+    keys, _ = dense._pool_meta(cfg, pool)
+
+    def body(x, xs):
+        lp, *pc = xs
+        x, new = _paged_block(cfg, lp, x, pc=dict(zip(keys, pc)), bt=bt,
+                              pos=pos)
+        return constrain_activation(x), tuple(new[k] for k in keys)
+
+    x, out = jax.lax.scan(body, x, (stack, *[pool[k] for k in keys]),
+                          unroll=unroll)
+    x = rms_norm(x, params["final_norm"])
+    return dense.logits_fn(cfg, params, x), dict(zip(keys, out))
+
+
+def paged_prefill_chunk(cfg: ArchConfig, params, tokens, pool, bt, pos, *,
+                        unroll: int = 1):
+    from repro.distributed.ctx import constrain_activation
+    x = constrain_activation(take_rows(params["embed"], tokens))
+    stack = dense._layer_stack(params)
+    keys, _ = dense._pool_meta(cfg, pool)
+
+    def body(x, xs):
+        lp, *pc = xs
+        x, new = _paged_block(cfg, lp, x, pc=dict(zip(keys, pc)), bt=bt,
+                              pos=pos)
+        return constrain_activation(x), tuple(new[k] for k in keys)
+
+    x, out = jax.lax.scan(body, x, (stack, *[pool[k] for k in keys]),
+                          unroll=unroll)
+    x = rms_norm(x, params["final_norm"])
+    return dense.logits_fn(cfg, params, x), dict(zip(keys, out))

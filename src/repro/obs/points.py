@@ -94,4 +94,29 @@ EXPECTED_POINTS: Dict[str, Dict[str, List[str]]] = {
             "request.latency_s",
         ],
     },
+    # ContinuousEngine with the paged KV cache (--batch-slots --kv-spec).
+    # kv.shared_hits only fires on a prefix hit, so this mode's smoke
+    # traffic MUST replay shared system prompts (--prefix-sharing traffic
+    # does) — a serve that never hits is indistinguishable from sharing
+    # having gone dark.
+    "paged-continuous": {
+        "spans": [
+            "serve.step",
+            "serve.admit_chunk",
+            "serve.decode_batch",
+            "kv.admit",
+        ],
+        "metrics": [
+            "queue.depth",
+            "queue.submitted",
+            "queue.wait_s",
+            "slots.occupied",
+            "slots.inserts",
+            "request.ttft_s",
+            "request.latency_s",
+            "kv.resident_bytes",
+            "kv.blocks_free",
+            "kv.shared_hits",
+        ],
+    },
 }

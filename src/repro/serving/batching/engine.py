@@ -51,10 +51,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.spec import KVCompressionSpec
 from repro.models import api
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from ..engine import ServeConfig, ServeSteps, _fence, sample
+from ..kvcache import BlockKVManager
 from .queue import RequestQueue
 from .request import Request, RequestState, SamplingParams
 from .slots import SlotBatchManager
@@ -96,7 +98,9 @@ class ContinuousEngine:
                  prefill_chunk: int = 32, admit_chunks_per_step: int = 4,
                  mesh=None, rules=None,
                  steps: Optional[ServeSteps] = None,
-                 resident: str = "dense"):
+                 resident: str = "dense",
+                 kv_spec: Optional[KVCompressionSpec] = None,
+                 kv_blocks: Optional[int] = None):
         if not api.supports_continuous_batching(cfg):
             raise NotImplementedError(
                 f"family {cfg.family!r} does not implement the slot-batch "
@@ -127,8 +131,28 @@ class ContinuousEngine:
         self.sc = sc
         self.steps = steps if steps is not None else \
             ServeSteps(cfg, sc, mesh=mesh, rules=rules, resident=resident)
-        self.slots = SlotBatchManager(cfg, n_slots, sc.max_len)
-        if self.steps.mesh is not None:
+        self.paged = kv_spec is not None
+        if self.paged:
+            # paged KV rides the block-pool step functions (docs/KV_CACHE.md)
+            if not api.supports_paged_kv(cfg):
+                raise NotImplementedError(
+                    f"family {cfg.family!r} does not implement the paged "
+                    f"block-pool cache contract (init_kv_pool + "
+                    f"paged_decode_step); supported today: dense, moe")
+            if self.steps.paged_decode_fn is None:
+                raise NotImplementedError(
+                    "paged KV needs the dense-residency whole-tree steps; "
+                    "serve with resident='dense' (docs/KV_CACHE.md)")
+            if self.steps.mesh is not None:
+                raise NotImplementedError(
+                    "paged KV is single-device today: the block table is a "
+                    "host-side gather index with no sharding rule yet")
+            self.slots: Any = BlockKVManager(
+                cfg, n_slots, sc.max_len, spec=kv_spec, n_blocks=kv_blocks,
+                prefill_chunk=prefill_chunk)
+        else:
+            self.slots = SlotBatchManager(cfg, n_slots, sc.max_len)
+        if not self.paged and self.steps.mesh is not None:
             # the resident slot pool lives sharded on the serve mesh ("slot"
             # resolves like lockstep batch rows — serve_rules); the donating
             # _splice/_zero_slot helpers then keep that placement step over
@@ -177,6 +201,16 @@ class ContinuousEngine:
         padded = -(-P // chunk) * chunk
         toks = np.zeros((1, padded), np.int32)
         toks[0, :P] = req.prompt
+        if self.paged:
+            # block admission: claim table entries (consuming shared prefix
+            # blocks) and start prefill AFTER the shared region — the block
+            # manager guarantees the final chunk (position P-1) always runs
+            got = self.slots.alloc(req)
+            assert got is not None, "admission past can_admit"
+            slot, skip = got
+            self._prefilling = dict(req=req, slot=slot, toks=toks, c0=skip,
+                                    last=None, scratch=None)
+            return
         slot = self.slots.alloc(req)
         assert slot is not None, "admission with no free slot"
         self._prefilling = dict(
@@ -190,9 +224,15 @@ class ContinuousEngine:
         req, chunk = st["req"], self.prefill_chunk
         P, c0 = req.prompt_len, st["c0"]
         with obs_trace.span("serve.admit_chunk", rid=req.rid, c0=c0):
-            logits, st["scratch"] = self.steps.prefill_chunk_fn(
-                self.params, jnp.asarray(st["toks"][:, c0:c0 + chunk]),
-                st["scratch"], jnp.full((1,), c0, jnp.int32))
+            if self.paged:
+                bt = jnp.asarray(self.slots.table_rows([st["slot"]]))
+                logits, self.slots.pool = self.steps.paged_prefill_chunk_fn(
+                    self.params, jnp.asarray(st["toks"][:, c0:c0 + chunk]),
+                    self.slots.pool, bt, jnp.full((1,), c0, jnp.int32))
+            else:
+                logits, st["scratch"] = self.steps.prefill_chunk_fn(
+                    self.params, jnp.asarray(st["toks"][:, c0:c0 + chunk]),
+                    st["scratch"], jnp.full((1,), c0, jnp.int32))
             _fence(logits)
         if c0 <= P - 1 < c0 + chunk:
             st["last"] = logits[:, P - 1 - c0][:, None]     # (1, 1, V)
@@ -201,7 +241,10 @@ class ContinuousEngine:
             return
         self._prefilling = None
         slot = st["slot"]
-        self.slots.insert(slot, st["scratch"], P)
+        if self.paged:
+            self.slots.insert(slot, P)      # prefill wrote the pool in place
+        else:
+            self.slots.insert(slot, st["scratch"], P)
         key, sub = jax.random.split(jax.random.PRNGKey(req.sampling.seed))
         tok = int(sample(st["last"], sub, req.sampling.temperature)[0])
         req.t_first_token = time.monotonic()
@@ -234,9 +277,16 @@ class ContinuousEngine:
         chunks = 0
         while True:
             if self._prefilling is None and self.slots.n_free:
-                req = self.queue.pop()
-                if req is not None:
-                    self._start_prefill(req)
+                if self.paged:
+                    # peek-then-plan: commit the pop only once the block
+                    # manager can cover the head's whole allocation
+                    head = self.queue.peek()
+                    if head is not None and self.slots.can_admit(head):
+                        self._start_prefill(self.queue.pop())
+                else:
+                    req = self.queue.pop()
+                    if req is not None:
+                        self._start_prefill(req)
             if self._prefilling is None:
                 break
             self._advance_prefill()
@@ -252,8 +302,13 @@ class ContinuousEngine:
         with obs_trace.span("serve.decode_batch", active=len(active)):
             pos = jnp.asarray(self.slots.kv_len)
             tok = jnp.asarray(self._tokens[:, None])
-            logits, self.slots.cache = self.steps.decode_fn(
-                self.params, tok, self.slots.cache, pos)
+            if self.paged:
+                bt = jnp.asarray(self.slots.decode_tables())
+                logits, self.slots.pool = self.steps.paged_decode_fn(
+                    self.params, tok, self.slots.pool, bt, pos)
+            else:
+                logits, self.slots.cache = self.steps.decode_fn(
+                    self.params, tok, self.slots.cache, pos)
             new_tok, new_keys = _sample_slots(logits, jnp.asarray(self._keys),
                                               jnp.asarray(self._temps))
             new_tok = np.asarray(new_tok)

@@ -52,6 +52,28 @@ class RequestQueue:
         obs_metrics.gauge("queue.depth").set(len(self._q))
         return req
 
+    def peek(self, now: Optional[float] = None) -> Optional[Request]:
+        """The request ``pop`` would return, without removing it.  Overdue
+        heads are expired in passing (same lazy semantics as ``pop``), so a
+        peek-then-pop pair always agrees on the head — the paged engine
+        plans block admission against the peeked request before committing."""
+        now = time.monotonic() if now is None else now
+        while self._q:
+            req = self._q[0]
+            if not req.expired(now):
+                return req
+            self._q.popleft()
+            obs_metrics.gauge("queue.depth").set(len(self._q))
+            req.state = RequestState.EXPIRED
+            req.finish_reason = "deadline"
+            req.t_finished = now
+            self.expired.append(req)
+            obs_metrics.counter("queue.shed").inc(reason="deadline")
+            if req.t_arrival is not None:
+                obs_metrics.histogram("queue.wait_s").observe(
+                    now - req.t_arrival, outcome="shed")
+        return None
+
     def pop(self, now: Optional[float] = None) -> Optional[Request]:
         """Next admissible request, or None.  Overdue requests are expired in
         passing (state EXPIRED, ``finish_reason="deadline"``)."""

@@ -20,24 +20,45 @@ Trace = List[Tuple[float, np.ndarray, int]]     # (arrival_s, prompt, max_new)
 
 def poisson_trace(n_requests: int, *, rate_per_s: float, prompt_max: int,
                   gen_max: int, vocab: int, seed: int = 0,
-                  prompt_min: int = 4, gen_min: int = 2) -> Trace:
+                  prompt_min: int = 4, gen_min: int = 2,
+                  prefix_pool: int = 0, prefix_len: int = 0) -> Trace:
     """Seeded Poisson arrival trace with ragged prompt/gen lengths.
 
     The ragged lower bounds clamp to the caller's maxima, so degenerate
     settings (``prompt_max < prompt_min``) produce fixed-size requests
     instead of crashing.
+
+    ``prefix_pool > 0`` models shared system prompts: ``prefix_pool``
+    distinct prefixes of ``prefix_len`` tokens are drawn once, and every
+    request opens with one of them (uniformly chosen) followed by a ragged
+    unique suffix of at least one token — the workload prefix sharing in the
+    paged KV cache (docs/KV_CACHE.md) is built to exploit.
     """
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / rate_per_s, n_requests)
     arrivals = np.cumsum(gaps) - gaps[0]            # first request at t=0
     pmin = min(prompt_min, prompt_max)
     gmin = min(gen_min, gen_max)
+    prefixes = []
+    if prefix_pool > 0:
+        if prefix_len < 1:
+            raise ValueError(f"prefix_pool={prefix_pool} needs "
+                             f"prefix_len >= 1, got {prefix_len}")
+        prefixes = [rng.integers(0, vocab, (prefix_len,)).astype(np.int32)
+                    for _ in range(prefix_pool)]
     trace: Trace = []
     for i in range(n_requests):
-        P = int(rng.integers(pmin, prompt_max + 1))
         G = int(rng.integers(gmin, gen_max + 1))
-        trace.append((float(arrivals[i]),
-                      rng.integers(0, vocab, (P,)).astype(np.int32), G))
+        if prefixes:
+            smax = max(prompt_max - prefix_len, 1)  # suffix keeps >= 1 token
+            S = int(rng.integers(1, smax + 1))
+            prompt = np.concatenate([
+                prefixes[int(rng.integers(len(prefixes)))],
+                rng.integers(0, vocab, (S,)).astype(np.int32)])
+        else:
+            P = int(rng.integers(pmin, prompt_max + 1))
+            prompt = rng.integers(0, vocab, (P,)).astype(np.int32)
+        trace.append((float(arrivals[i]), prompt, G))
     return trace
 
 

@@ -322,6 +322,22 @@ class ServeSteps:
 
             self.prefill_chunk_fn = jax.jit(scoped(_chunk), donate_argnums=(2,))
 
+        # paged twins: the block-pool cache layout (docs/KV_CACHE.md) —
+        # same donation discipline, block table rides as an extra operand
+        self.paged_decode_fn = self.paged_prefill_chunk_fn = None
+        if hasattr(self.mod, "paged_decode_step"):
+            def _pdec(params, token, pool, bt, pos):
+                return self.mod.paged_decode_step(cfg, params, token, pool,
+                                                  bt, pos, unroll=sc.unroll)
+
+            def _pchunk(params, tokens, pool, bt, pos):
+                return self.mod.paged_prefill_chunk(cfg, params, tokens, pool,
+                                                    bt, pos, unroll=sc.unroll)
+
+            self.paged_decode_fn = jax.jit(scoped(_pdec), donate_argnums=(2,))
+            self.paged_prefill_chunk_fn = jax.jit(scoped(_pchunk),
+                                                  donate_argnums=(2,))
+
     # ------------------------------------------------- compressed residency
     def _build_resident_steps(self) -> None:
         """Per-layer jitted pieces + Python drivers (compressed residency).
@@ -370,6 +386,8 @@ class ServeSteps:
         self.prefill_fn = self._resident_prefill
         self.decode_fn = self._resident_step
         self.prefill_chunk_fn = self._resident_step
+        # paged KV is a dense-residency feature (docs/KV_CACHE.md)
+        self.paged_decode_fn = self.paged_prefill_chunk_fn = None
 
     def _resident_prefill(self, weights, prompt):
         """Driver twin of the jitted whole-tree ``prefill``: full causal

@@ -1,0 +1,410 @@
+"""Paged KV block pool + prefix sharing for continuous batching.
+
+``BlockKVManager`` is the paged successor of
+:class:`~repro.serving.batching.slots.SlotBatchManager` (docs/KV_CACHE.md):
+instead of one contiguous ``max_len`` row per slot it owns a pool of
+fixed-size blocks — ``init_kv_pool(cfg, n_blocks, block_size, bits)`` — and
+a host-side ``(n_slots, max_blocks)`` int32 block table routing every slot's
+logical positions to pool blocks.  The jitted step functions
+(``paged_prefill_chunk`` / ``paged_decode_step``) scatter and gather through
+that table; everything else — free lists, refcounts, the prefix-chain map,
+LRU cold eviction — is plain host bookkeeping here.
+
+Layout invariants the step functions rely on:
+
+* **Block 0 is the trash block.**  It is never allocated; table rows handed
+  to the fused decode step for non-live lanes (free, or still prefilling)
+  are all-trash, so their per-step garbage write (position 0) lands in a
+  block nobody gathers unmasked.  Stale rows a live lane *does* gather
+  (trash entries past its allocation, a reused block's old tail) are killed
+  by ``kv_len`` masking — masked scores get exactly ``NEG_INF`` and
+  ``exp`` underflows to an exact 0.0 contribution.
+* **Shared blocks are immutable after publish.**  Only *full* prompt blocks
+  (``j < prompt_len // block_size``) are published to the prefix chain at
+  ``insert``; decode writes start at ``prompt_len`` which always lands in a
+  private block.  A prefix *hit* may still re-scatter the tail of the
+  shared region when the skip is chunk-aligned short of the hit boundary —
+  benign, because identical tokens after an identical prefix produce
+  bit-identical K/V rows (the same argument that makes dense paged mode
+  bit-identical to the slot pool).
+* **Refcount 0 ≠ free.**  A published block whose requests all released
+  stays resident on an LRU list; it is reclaimed only when admission needs
+  blocks, and — with a codec configured — entropy-coded to the host cold
+  tier (:mod:`repro.serving.kvcache.cold`) instead of dropped, so the next
+  hit pays a serial decode rather than a re-prefill.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from functools import partial
+from typing import TYPE_CHECKING, Any, Dict, Hashable, List, Optional, Tuple
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.spec import KVCompressionSpec
+from repro.models import api
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from .cold import ColdBlockStore
+
+if TYPE_CHECKING:                 # import cycle: batching.engine imports us
+    from ..batching.request import Request
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _zero_block(pool, blk):
+    def leaf(c):
+        blank = jnp.zeros((c.shape[0], 1) + c.shape[2:], c.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(c, blank, blk, axis=1)
+    return jax.tree.map(leaf, pool)
+
+
+@jax.jit
+def _read_block(pool, blk):
+    def leaf(c):
+        return jax.lax.dynamic_slice_in_dim(c, blk, 1, axis=1)[:, 0]
+    return jax.tree.map(leaf, pool)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _write_block(pool, blk, leaves):
+    def leaf(c, r):
+        return jax.lax.dynamic_update_slice_in_dim(c, r[:, None].astype(c.dtype),
+                                                   blk, axis=1)
+    return jax.tree.map(leaf, pool, leaves)
+
+
+@dataclasses.dataclass
+class _Plan:
+    """Admission plan for one request (see ``BlockKVManager._plan``)."""
+    nb: int                                    # blocks the request needs
+    res_hits: List[Tuple[int, Hashable, int]]  # (j, chain key, block id)
+    cold_hits: List[Tuple[int, Hashable]]      # (j, chain key)
+    n_skip: int                                # prefill tokens skipped
+    pending: List[Tuple[int, Hashable]]        # full blocks to publish later
+
+    @property
+    def n_new(self) -> int:                    # fresh blocks to claim
+        return self.nb - len(self.res_hits)
+
+
+class BlockKVManager:
+    """Block-table-backed KV cache + per-slot request bookkeeping.
+
+    Drop-in for ``SlotBatchManager`` on the paged engine path: same slot
+    lifecycle (``alloc`` → ``insert`` → ``release``), but ``alloc`` returns
+    ``(slot, n_skip)`` — the prefix-shared token count admission may skip —
+    and ``insert`` takes only the kv length (prefill wrote the pool blocks
+    in place through the table; there is no scratch cache to splice).
+    """
+
+    def __init__(self, cfg: ArchConfig, n_slots: int, max_len: int, *,
+                 spec: Optional[KVCompressionSpec] = None,
+                 n_blocks: Optional[int] = None, prefill_chunk: int = 1):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.cfg = cfg
+        self.spec = spec = spec or KVCompressionSpec()
+        spec.validate()
+        if prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        if spec.sharing and prefill_chunk % spec.block_size:
+            raise ValueError(
+                f"prefix sharing needs prefill_chunk % block_size == 0 "
+                f"(got chunk={prefill_chunk}, block={spec.block_size}): the "
+                f"skip boundary must be a chunk boundary")
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.block_size = spec.block_size
+        self.chunk = prefill_chunk
+        self.max_blocks = -(-max_len // spec.block_size)
+        # default capacity = trash + the slot pool's worth of blocks, so the
+        # dense default matches SlotBatchManager byte for byte modulo trash
+        self.n_blocks = (1 + n_slots * self.max_blocks
+                         if n_blocks is None else n_blocks)
+        if self.n_blocks < 1 + self.max_blocks:
+            raise ValueError(
+                f"n_blocks={self.n_blocks} cannot hold trash + one "
+                f"max-length request ({1 + self.max_blocks})")
+        self.pool = api.build(cfg).init_kv_pool(cfg, self.n_blocks,
+                                                spec.block_size, spec.bits)
+        self.tables = np.zeros((n_slots, self.max_blocks), np.int32)
+        self.kv_len = np.zeros((n_slots,), np.int32)
+        self.requests: List[Optional[Request]] = [None] * n_slots
+        self._live = [False] * n_slots
+        self._free_slots: List[int] = list(range(n_slots - 1, -1, -1))
+        self._free_blocks: List[int] = list(range(self.n_blocks - 1, 0, -1))
+        self._slot_shared: List[List[Tuple[int, Hashable]]] = \
+            [[] for _ in range(n_slots)]
+        self._slot_private: List[List[int]] = [[] for _ in range(n_slots)]
+        self._pending: List[List[Tuple[int, Hashable]]] = \
+            [[] for _ in range(n_slots)]
+        self._chain: Dict[Hashable, int] = {}    # resident prefix key -> block
+        self._refs: Dict[int, int] = {}          # shared block -> refcount
+        self._block_key: Dict[int, Hashable] = {}
+        self._lru: "OrderedDict[int, Hashable]" = OrderedDict()
+        self.cold = ColdBlockStore(spec.codec) if spec.codec else None
+        self.shared_hits = 0
+        self.shared_misses = 0
+        self.cold_evictions = 0
+        self.cold_restores = 0
+        self.dropped_evictions = 0
+        self._update_gauges()
+
+    # ------------------------------------------------------------- occupancy
+    @property
+    def n_free(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def active(self) -> List[int]:
+        return [s for s, r in enumerate(self.requests) if r is not None]
+
+    @property
+    def n_free_blocks(self) -> int:
+        return len(self._free_blocks)
+
+    @property
+    def pool_bytes(self) -> int:
+        return sum(int(leaf.nbytes) for leaf in jax.tree.leaves(self.pool))
+
+    @property
+    def cold_bytes(self) -> int:
+        return self.cold.nbytes if self.cold is not None else 0
+
+    def stats(self) -> Dict[str, Any]:
+        lookups = self.shared_hits + self.shared_misses
+        return {
+            "pool_bytes": self.pool_bytes,
+            "cold_bytes": self.cold_bytes,
+            "blocks_free": len(self._free_blocks),
+            "blocks_total": self.n_blocks,
+            "shared_hits": self.shared_hits,
+            "shared_misses": self.shared_misses,
+            "prefix_hit_rate": self.shared_hits / lookups if lookups else 0.0,
+            "cold_evictions": self.cold_evictions,
+            "cold_restores": self.cold_restores,
+            "dropped_evictions": self.dropped_evictions,
+        }
+
+    def _update_gauges(self) -> None:
+        obs_metrics.gauge("kv.resident_bytes").set(self.pool_bytes)
+        obs_metrics.gauge("kv.blocks_free").set(len(self._free_blocks))
+        obs_metrics.gauge("slots.occupied").set(
+            self.n_slots - len(self._free_slots))
+
+    # ------------------------------------------------------------ block table
+    def table_rows(self, slots: List[int]) -> np.ndarray:
+        """Raw table rows for ``slots`` — the prefill view (writes allowed)."""
+        return self.tables[np.asarray(slots, np.int32)]
+
+    def decode_tables(self) -> np.ndarray:
+        """The fused-decode view: non-live lanes' rows are all-trash so their
+        per-step garbage write cannot touch an allocated (or shared) block."""
+        out = self.tables.copy()
+        for s in range(self.n_slots):
+            if not self._live[s]:
+                out[s] = 0
+        return out
+
+    # ---------------------------------------------------------------- sharing
+    def _chain_keys(self, prompt: np.ndarray) -> List[Hashable]:
+        """Content-hash chain over the prompt's *full* blocks: each key folds
+        in its parent, so equal keys imply equal whole prefixes."""
+        BS = self.block_size
+        keys: List[Hashable] = []
+        parent: Hashable = None
+        for j in range(len(prompt) // BS):
+            parent = (parent, prompt[j * BS:(j + 1) * BS].tobytes())
+            keys.append(parent)
+        return keys
+
+    def _plan(self, req: Request) -> Optional[_Plan]:
+        P = req.prompt_len
+        padded = -(-P // self.chunk) * self.chunk
+        need = max(P + req.max_new_tokens, padded)
+        if need > self.max_len:
+            return None
+        nb = -(-need // self.block_size)
+        res_hits: List[Tuple[int, Hashable, int]] = []
+        cold_hits: List[Tuple[int, Hashable]] = []
+        keys = self._chain_keys(req.prompt) if self.spec.sharing else []
+        n_hit = 0
+        for j, key in enumerate(keys):
+            if key in self._chain:
+                res_hits.append((j, key, self._chain[key]))
+            elif self.cold is not None and key in self.cold:
+                cold_hits.append((j, key))
+            else:
+                break
+            n_hit = j + 1
+        # skip whole chunks covered by hits, but always leave the final
+        # chunk (the one holding position P-1) to run — its logits seed the
+        # first generated token
+        n_skip = min(n_hit * self.block_size // self.chunk * self.chunk,
+                     (P - 1) // self.chunk * self.chunk)
+        pending = [(j, key) for j, key in enumerate(keys) if j >= n_hit]
+        self.shared_hits += n_hit
+        self.shared_misses += len(keys) - n_hit
+        if n_hit:
+            obs_metrics.counter("kv.shared_hits").inc(n_hit)
+        if len(keys) - n_hit:
+            obs_metrics.counter("kv.shared_misses").inc(len(keys) - n_hit)
+        return _Plan(nb=nb, res_hits=res_hits, cold_hits=cold_hits,
+                     n_skip=n_skip, pending=pending)
+
+    # ------------------------------------------------------------- lifecycle
+    def can_admit(self, req: Request) -> bool:
+        """Admission probe — free slot + enough claimable blocks.  Counts
+        shared hits but does not consume them (``alloc`` re-plans)."""
+        if not self._free_slots:
+            return False
+        hits, misses = self.shared_hits, self.shared_misses
+        plan = self._plan(req)
+        self.shared_hits, self.shared_misses = hits, misses   # probe only
+        if plan is None:
+            return False
+        # planned hits sitting at refcount 0 are on the LRU but must not be
+        # counted as evictable — alloc pins them before evicting
+        pinned = sum(1 for _, _, blk in plan.res_hits if blk in self._lru)
+        return plan.n_new <= (len(self._free_blocks)
+                              + len(self._lru) - pinned)
+
+    def alloc(self, req: Request) -> Optional[Tuple[int, int]]:
+        """Claim a slot + blocks for ``req``; returns ``(slot, n_skip)`` —
+        admission may skip the first ``n_skip`` prompt tokens (prefix hits).
+        None when the batch or the pool is full."""
+        if not self._free_slots:
+            return None
+        with obs_trace.span("kv.admit", rid=req.rid, prompt=req.prompt_len):
+            plan = self._plan(req)
+            if plan is None:
+                return None
+            # pin resident hits FIRST (refcount up, off the LRU) — a hit at
+            # refcount 0 is an eviction candidate, and the eviction loop
+            # below must never reclaim a block this plan is about to reuse
+            for _, _, blk in plan.res_hits:
+                self._refs[blk] += 1
+                self._lru.pop(blk, None)
+            if plan.n_new > len(self._free_blocks) + len(self._lru):
+                for _, _, blk in plan.res_hits:      # unwind the pins
+                    self._refs[blk] -= 1
+                    if self._refs[blk] == 0:
+                        self._lru[blk] = self._block_key[blk]
+                return None
+            while len(self._free_blocks) < plan.n_new:
+                self._evict_one()
+            slot = self._free_slots.pop()
+            row = self.tables[slot]
+            row[:] = 0
+            shared = self._slot_shared[slot]
+            private = self._slot_private[slot]
+            for j, key, blk in plan.res_hits:
+                row[j] = blk
+                shared.append((j, key))
+            for j, key in plan.cold_hits:
+                blk = self._free_blocks.pop()
+                leaves = {name: jnp.asarray(arr) for name, arr
+                          in self.cold.pop(key).items()}
+                with obs_trace.span("kv.cold_decode", block=blk):
+                    self.pool = _write_block(self.pool, jnp.int32(blk), leaves)
+                self._chain[key] = blk
+                self._refs[blk] = 1
+                self._block_key[blk] = key
+                row[j] = blk
+                shared.append((j, key))
+                self.cold_restores += 1
+                obs_metrics.counter("kv.cold_restores").inc()
+            n_hit = len(plan.res_hits) + len(plan.cold_hits)
+            for j in range(n_hit, plan.nb):
+                blk = self._free_blocks.pop()
+                row[j] = blk
+                private.append(blk)
+            self._pending[slot] = plan.pending
+            self.requests[slot] = req
+            self.kv_len[slot] = 0
+            self._live[slot] = False
+            self._update_gauges()
+            return slot, plan.n_skip
+
+    def insert(self, slot: int, kv_len: int) -> None:
+        """Activate a prefilled slot at length ``kv_len`` and publish its
+        full prompt blocks to the prefix chain (sharing only)."""
+        assert self.requests[slot] is not None, f"insert into free slot {slot}"
+        assert not self._live[slot], f"double insert into slot {slot}"
+        assert kv_len <= self.max_len, (kv_len, self.max_len)
+        self.kv_len[slot] = kv_len
+        self._live[slot] = True
+        if self.spec.sharing:
+            private = self._slot_private[slot]
+            for j, key in self._pending[slot]:
+                if key in self._chain:       # racing identical prefix won;
+                    continue                 # keep ours private
+                blk = int(self.tables[slot, j])
+                private.remove(blk)
+                self._chain[key] = blk
+                self._refs[blk] = 1
+                self._block_key[blk] = key
+                self._slot_shared[slot].append((j, key))
+                if self.cold is not None:    # resident copy supersedes cold
+                    self.cold.drop(key)
+        self._pending[slot] = []
+        obs_metrics.counter("slots.inserts").inc()
+        self._update_gauges()
+
+    def release(self, slot: int, *, compact: bool = True) -> Request:
+        """Detach the slot's request.  Shared blocks drop a refcount (to the
+        LRU at zero); private blocks return to the free list, compacted
+        (zeroed) by default like the slot pool."""
+        req = self.requests[slot]
+        assert req is not None, f"release of free slot {slot}"
+        self.requests[slot] = None
+        self.kv_len[slot] = 0
+        self._live[slot] = False
+        for j, key in self._slot_shared[slot]:
+            blk = self._chain[key]
+            self._refs[blk] -= 1
+            if self._refs[blk] == 0:
+                self._lru[blk] = key
+        self._slot_shared[slot] = []
+        for blk in self._slot_private[slot]:
+            if compact:
+                self.pool = _zero_block(self.pool, jnp.int32(blk))
+            self._free_blocks.append(blk)
+        if compact and self._slot_private[slot]:
+            obs_metrics.counter("slots.compactions").inc()
+        self._slot_private[slot] = []
+        self._pending[slot] = []
+        self.tables[slot] = 0
+        self._free_slots.append(slot)
+        obs_metrics.counter("slots.releases").inc()
+        self._update_gauges()
+        return req
+
+    # --------------------------------------------------------------- eviction
+    def _evict_one(self) -> None:
+        """Reclaim the LRU-oldest refcount-0 shared block: entropy-code it to
+        the cold tier when a codec is configured, else drop it."""
+        if not self._lru:
+            raise RuntimeError("no evictable blocks (all referenced)")
+        blk, key = self._lru.popitem(last=False)
+        del self._chain[key]
+        del self._refs[blk]
+        del self._block_key[blk]
+        if self.cold is not None:
+            leaves = jax.tree.map(np.asarray,
+                                  _read_block(self.pool, jnp.int32(blk)))
+            with obs_trace.span("kv.cold_encode", block=blk):
+                self.cold.put(key, leaves)
+            self.cold_evictions += 1
+            obs_metrics.counter("kv.cold_evictions").inc()
+        else:
+            self.dropped_evictions += 1
+            obs_metrics.counter("kv.dropped_evictions").inc()
+        self.pool = _zero_block(self.pool, jnp.int32(blk))
+        self._free_blocks.append(blk)

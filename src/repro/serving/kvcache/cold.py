@@ -1,0 +1,122 @@
+"""Cold tier for evicted shared KV blocks: entropy-coded host bytes.
+
+When the block pool runs out and the LRU victim is a *shared* prefix block
+(refcount 0 — published but currently unreferenced), dropping it means the
+next request with that prefix pays a full re-prefill.  With a codec
+configured (``KVCompressionSpec.codec``) the block is instead entropy-coded
+to host memory and revived on the next prefix hit for the price of one
+serial decode — the same trade Huff-LLM makes for weights, applied to KV.
+
+The symbol alphabet is the quantized pool's uint8 leaves (k/v codes; 256
+symbols regardless of ``bits`` — 4-bit pools nibble-pack two codes per
+byte, which the histogram simply sees as a 256-symbol source).  Each leaf
+gets its own table built from its own histogram (mixed leaves cannot share
+one histogram — the container-v2 rule).  The bf16 scale/zero leaves are
+tiny and stored raw.  Decoding routes on the table's *kernel family*
+exactly like the weight path: ``prefix`` → ``bitstream.decode_serial``,
+``tans`` → ``bitstream.decode_serial_tans``.
+
+Cold storage is host-side bookkeeping — nothing here touches jax.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Hashable, Optional, Tuple
+
+import numpy as np
+
+from repro.core import bitstream, entropy
+from repro.core.codecs import CodeTable, get_codec
+
+NUM_SYMBOLS = 256   # uint8 pool leaves; nibble-packed at bits=4
+
+
+@dataclasses.dataclass
+class _ColdLeaf:
+    """One entropy-coded uint8 leaf of a cold block."""
+    stream: np.ndarray          # guard-padded byte stream
+    count: int                  # symbols encoded
+    shape: Tuple[int, ...]
+    table: CodeTable
+
+    @property
+    def nbytes(self) -> int:
+        # stream + the histogram needed to rebuild the table (int32 freqs),
+        # the same accounting a serialized container would pay
+        return int(self.stream.nbytes) + NUM_SYMBOLS * 4
+
+    def decode(self) -> np.ndarray:
+        arrs = self.table.decode_arrays()
+        if self.table.kernel == "prefix":
+            sym = bitstream.decode_serial(self.stream, self.count,
+                                          arrs["lut_sym"], arrs["lut_len"],
+                                          max_len=self.table.peek_bits)
+        else:
+            sym = bitstream.decode_serial_tans(self.stream, self.count,
+                                               arrs["tab_sym"],
+                                               arrs["tab_bits"],
+                                               arrs["tab_base"],
+                                               self.table.table_log)
+        return sym.astype(np.uint8).reshape(self.shape)
+
+
+class ColdBlockStore:
+    """Host-side store of evicted shared blocks, keyed by prefix-chain key.
+
+    ``put`` entropy-codes the uint8 code leaves (per-leaf tables) and keeps
+    the bf16 scale/zero leaves raw; ``pop`` decodes everything back to the
+    numpy leaves the block manager scatters into a fresh pool block.
+    """
+
+    def __init__(self, codec_name: str):
+        self.codec = get_codec(codec_name)   # loud on unknown names
+        self._entries: Dict[Hashable, Dict[str, object]] = {}
+        self.encoded_symbols = 0
+        self.payload_bits = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._entries
+
+    @property
+    def nbytes(self) -> int:
+        total = 0
+        for leaves in self._entries.values():
+            for leaf in leaves.values():
+                total += leaf.nbytes
+        return total
+
+    def put(self, key: Hashable, leaves: Dict[str, np.ndarray]) -> None:
+        """Store one block's per-layer leaves, e.g. k: (L, BS, KV, hs)."""
+        entry: Dict[str, object] = {}
+        for name, arr in leaves.items():
+            if arr.dtype == np.uint8:
+                flat = arr.reshape(-1)
+                freqs = entropy.symbol_frequencies(flat, NUM_SYMBOLS)
+                table = self.codec.build(freqs, 8)
+                stream, nbits = table.encode(flat)
+                entry[name] = _ColdLeaf(stream, flat.size, arr.shape, table)
+                self.encoded_symbols += flat.size
+                self.payload_bits += nbits
+            else:
+                entry[name] = arr.copy()     # bf16 scale/zero: raw
+        self._entries[key] = entry
+
+    def pop(self, key: Hashable) -> Dict[str, np.ndarray]:
+        entry = self._entries.pop(key)
+        out: Dict[str, np.ndarray] = {}
+        for name, leaf in entry.items():
+            out[name] = leaf.decode() if isinstance(leaf, _ColdLeaf) else leaf
+        return out
+
+    def drop(self, key: Hashable) -> None:
+        self._entries.pop(key, None)
+
+    @property
+    def effective_bits(self) -> Optional[float]:
+        """Mean coded bits per pool byte, across everything ever encoded."""
+        if not self.encoded_symbols:
+            return None
+        return self.payload_bits / self.encoded_symbols
