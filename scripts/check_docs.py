@@ -22,13 +22,26 @@ Two gates, no dependencies beyond the stdlib:
    * ``§IV`` / ``§III-C`` ...  -> roman numerals are PAPER sections, exempt
                                   (the paper is not a repo file).
 
-Run:  python scripts/check_docs.py        (exit 1 on any failure)
+Findings are reported through the shared static-analysis API
+(``repro.analysis.base``, stdlib-only): uniform ``file:line rule message``
+lines, ``--json`` for machines — the same surface as check_static.py and
+check_trace.py (docs/STATIC_ANALYSIS.md).
+
+Run:  python scripts/check_docs.py [--json]    (exit 1 on any failure)
 """
 from __future__ import annotations
 
+import argparse
+import os
 import re
 import sys
 from pathlib import Path
+from typing import List
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.analysis.base import Finding, render_json, render_text
 
 ROOT = Path(__file__).resolve().parent.parent
 
@@ -42,8 +55,10 @@ REQUIRED_LINKS = [
     ("README.md", "docs/SERVING.md"),
     ("README.md", "docs/OBSERVABILITY.md"),
     ("README.md", "docs/KV_CACHE.md"),
+    ("README.md", "docs/STATIC_ANALYSIS.md"),
     ("docs/SERVING.md", "OBSERVABILITY.md"),
     ("docs/SERVING.md", "KV_CACHE.md"),
+    ("docs/TESTING.md", "STATIC_ANALYSIS.md"),
 ]
 SECTION_DOCS = ["docs/ARCHITECTURE.md", "docs/SERVING.md", "DESIGN.md"]
 AUDIT_GLOBS = ["src/repro/serving/**/*.py", "src/repro/core/scheduler.py"]
@@ -66,42 +81,52 @@ def headings(path: Path) -> list[str]:
     return [m.group(2) for m in _HEADING.finditer(path.read_text())]
 
 
-def check_links() -> list[str]:
-    errors: list[str] = []
+def check_links() -> List[Finding]:
+    findings: List[Finding] = []
     docs = [ROOT / d for d in LINK_DOCS] + sorted((ROOT / "docs").glob("*.md"))
     for doc in docs:
         if not doc.exists():
             continue
-        for m in _LINK.finditer(doc.read_text()):
+        text = doc.read_text()
+        for m in _LINK.finditer(text):
             target = m.group(1)
             if target.startswith(("http://", "https://", "mailto:")):
                 continue
             path_part, _, frag = target.partition("#")
             dest = (doc.parent / path_part).resolve() if path_part \
                 else doc.resolve()
-            rel = doc.relative_to(ROOT)
+            rel = str(doc.relative_to(ROOT))
+            line = text.count("\n", 0, m.start()) + 1
             if not dest.exists():
-                errors.append(f"{rel}: broken link -> {target}")
+                findings.append(Finding(
+                    file=rel, line=line, rule="docs-link",
+                    message=f"broken link -> {target}"))
                 continue
             if frag and dest.suffix == ".md":
                 slugs = {github_slug(h) for h in headings(dest)}
                 if frag not in slugs:
-                    errors.append(f"{rel}: dead anchor -> {target}")
-    return errors
+                    findings.append(Finding(
+                        file=rel, line=line, rule="docs-link",
+                        message=f"dead anchor -> {target}"))
+    return findings
 
 
-def check_required_links() -> list[str]:
-    errors: list[str] = []
+def check_required_links() -> List[Finding]:
+    findings: List[Finding] = []
     for src, target in REQUIRED_LINKS:
         doc = ROOT / src
         if not doc.exists():
-            errors.append(f"{src}: required-link source missing")
+            findings.append(Finding(
+                file=src, line=1, rule="docs-required-link",
+                message="required-link source missing"))
             continue
         links = {m.group(1).partition("#")[0]
                  for m in _LINK.finditer(doc.read_text())}
         if target not in links:
-            errors.append(f"{src}: must link {target} (required link)")
-    return errors
+            findings.append(Finding(
+                file=src, line=1, rule="docs-required-link",
+                message=f"must link {target} (required link)"))
+    return findings
 
 
 def check_section_refs() -> list[str]:
@@ -113,12 +138,12 @@ def check_section_refs() -> list[str]:
     design_nums = {m.group(1) for m in
                    re.finditer(r"^##\s+§(\d+)", design.read_text(), re.M)}
 
-    errors: list[str] = []
+    findings: List[Finding] = []
     files: list[Path] = []
     for g in AUDIT_GLOBS:
         files.extend(sorted(ROOT.glob(g)))
     for f in files:
-        rel = f.relative_to(ROOT)
+        rel = str(f.relative_to(ROOT))
         lines = f.read_text().splitlines()
         for i, line in enumerate(lines, 1):
             if "§" not in line:
@@ -132,9 +157,10 @@ def check_section_refs() -> list[str]:
             for m in _QUOTED_REF.finditer(line):
                 title = m.group(1)
                 if not any(title in h for h in all_headings):
-                    errors.append(
-                        f"{rel}:{i}: §\"{title}\" matches no heading of "
-                        f"{', '.join(SECTION_DOCS)}")
+                    findings.append(Finding(
+                        file=rel, line=i, rule="docs-section-ref",
+                        message=f"§\"{title}\" matches no heading of "
+                                f"{', '.join(SECTION_DOCS)}"))
             stripped = _QUOTED_REF.sub("", line)
             if _ROMAN_REF.search(stripped):
                 stripped = _ROMAN_REF.sub("", stripped)   # paper sections
@@ -142,23 +168,31 @@ def check_section_refs() -> list[str]:
                 n = m.group(1)
                 if "ARCHITECTURE" in context:
                     if n not in arch_nums:
-                        errors.append(f"{rel}:{i}: ARCHITECTURE §{n} has no "
-                                      f"'## {n}.' section")
+                        findings.append(Finding(
+                            file=rel, line=i, rule="docs-section-ref",
+                            message=f"ARCHITECTURE §{n} has no "
+                                    f"'## {n}.' section"))
                 elif n not in design_nums:
-                    errors.append(f"{rel}:{i}: §{n} has no '## §{n}' note "
-                                  f"in DESIGN.md")
-    return errors
+                    findings.append(Finding(
+                        file=rel, line=i, rule="docs-section-ref",
+                        message=f"§{n} has no '## §{n}' note in DESIGN.md"))
+    return findings
 
 
-def main() -> int:
-    errors = check_links() + check_required_links() + check_section_refs()
-    for e in errors:
-        print(f"FAIL {e}")
-    if errors:
-        print(f"{len(errors)} docs-check failure(s)")
-        return 1
-    print("docs-check: links and §-references all resolve")
-    return 0
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="emit machine-readable JSON instead of text")
+    args = ap.parse_args(argv)
+    findings = check_links() + check_required_links() + check_section_refs()
+    if args.json:
+        print(render_json(findings))
+    elif findings:
+        print(render_text(findings))
+        print(f"{len(findings)} docs-check failure(s)", file=sys.stderr)
+    else:
+        print("docs-check: links and §-references all resolve")
+    return 1 if findings else 0
 
 
 if __name__ == "__main__":

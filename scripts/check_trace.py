@@ -16,9 +16,14 @@ Three checks, any failure exits 1:
    once.  A refactor that silently drops a call site passes every
    functional test; this is the guard that notices.
 
+Findings are reported through the shared static-analysis API
+(``repro.analysis.base``): uniform ``file:line rule message`` lines,
+``--json`` for machines — the same surface as check_static.py and
+check_docs.py (docs/STATIC_ANALYSIS.md).
+
 Usage:
   python scripts/check_trace.py --trace t.json --metrics m.jsonl \
-      --expect resident-fused-lockstep
+      --expect resident-fused-lockstep [--json]
 """
 from __future__ import annotations
 
@@ -26,95 +31,121 @@ import argparse
 import json
 import os
 import sys
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Tuple
 
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 
+from repro.analysis.base import Finding, render_json, render_text  # noqa: E402
 from repro.obs.points import EXPECTED_POINTS  # noqa: E402
 
 
-def check_trace_schema(path: str, errors: List[str]) -> List[Dict[str, Any]]:
+def check_trace_schema(path: str) -> Tuple[List[Dict[str, Any]],
+                                           List[Finding]]:
+    findings: List[Finding] = []
+
+    def bad(msg: str, line: int = 0) -> None:
+        findings.append(Finding(file=path, line=line, rule="trace-schema",
+                                message=msg))
+
     try:
         with open(path) as f:
             data = json.load(f)
     except (OSError, json.JSONDecodeError) as e:
-        errors.append(f"trace {path}: unreadable ({e})")
-        return []
+        bad(f"unreadable ({e})")
+        return [], findings
     events = data.get("traceEvents") if isinstance(data, dict) else data
     if not isinstance(events, list):
-        errors.append(f"trace {path}: no traceEvents list")
-        return []
+        bad("no traceEvents list")
+        return [], findings
     for i, e in enumerate(events):
-        ctx = f"trace event #{i} ({e.get('name', '?')!r})"
+        ctx = f"event #{i} ({e.get('name', '?')!r})"
         for field in ("name", "ph", "pid", "tid"):
             if field not in e:
-                errors.append(f"{ctx}: missing {field!r}")
+                bad(f"{ctx}: missing {field!r}")
         if e.get("ph") == "X":
             if "ts" not in e or "dur" not in e:
-                errors.append(f"{ctx}: complete event without ts/dur")
+                bad(f"{ctx}: complete event without ts/dur")
             elif e["dur"] < 0:
-                errors.append(f"{ctx}: negative duration {e['dur']}")
+                bad(f"{ctx}: negative duration {e['dur']}")
         elif e.get("ph") not in ("M", "i", "X"):
-            errors.append(f"{ctx}: unexpected phase {e.get('ph')!r}")
-    return events if isinstance(events, list) else []
+            bad(f"{ctx}: unexpected phase {e.get('ph')!r}")
+    return events, findings
 
 
-def check_metrics_schema(path: str, errors: List[str]) -> List[Dict[str, Any]]:
+def check_metrics_schema(path: str) -> Tuple[List[Dict[str, Any]],
+                                             List[Finding]]:
     rows: List[Dict[str, Any]] = []
+    findings: List[Finding] = []
+
+    def bad(msg: str, line: int = 0) -> None:
+        findings.append(Finding(file=path, line=line, rule="metrics-schema",
+                                message=msg))
+
     try:
         with open(path) as f:
             lines = f.readlines()
     except OSError as e:
-        errors.append(f"metrics {path}: unreadable ({e})")
-        return rows
+        bad(f"unreadable ({e})")
+        return rows, findings
     for i, line in enumerate(lines):
         if not line.strip():
             continue
         try:
             row = json.loads(line)
         except json.JSONDecodeError as e:
-            errors.append(f"metrics line {i + 1}: bad JSON ({e})")
+            bad(f"bad JSON ({e})", i + 1)
             continue
-        ctx = f"metrics line {i + 1} ({row.get('name', '?')!r})"
+        ctx = f"({row.get('name', '?')!r})"
         kind = row.get("kind")
         if "name" not in row or kind is None:
-            errors.append(f"{ctx}: missing name/kind")
+            bad(f"{ctx}: missing name/kind", i + 1)
             continue
         if kind in ("counter", "gauge") and "value" not in row:
-            errors.append(f"{ctx}: {kind} without value")
+            bad(f"{ctx}: {kind} without value", i + 1)
         elif kind == "histogram":
             for field in ("count", "sum"):
                 if field not in row:
-                    errors.append(f"{ctx}: histogram without {field!r}")
+                    bad(f"{ctx}: histogram without {field!r}", i + 1)
             if not any(k.startswith("p") and k[1:].replace(".", "").isdigit()
                        for k in row):
-                errors.append(f"{ctx}: histogram without quantile keys")
+                bad(f"{ctx}: histogram without quantile keys", i + 1)
         elif kind == "lifecycle":
             ev = row.get("events")
             if not isinstance(ev, list) or not ev:
-                errors.append(f"{ctx}: lifecycle without events chain")
+                bad(f"{ctx}: lifecycle without events chain", i + 1)
         rows.append(row)
-    return rows
+    return rows, findings
 
 
 def check_coverage(mode: str, events: List[Dict[str, Any]],
-                   rows: List[Dict[str, Any]], errors: List[str]) -> None:
+                   rows: List[Dict[str, Any]], trace_path: str,
+                   metrics_path: str) -> List[Finding]:
+    findings: List[Finding] = []
     expected = EXPECTED_POINTS.get(mode)
     if expected is None:
-        errors.append(f"unknown --expect mode {mode!r}; catalog has: "
-                      f"{sorted(EXPECTED_POINTS)}")
-        return
+        return [Finding(
+            file="src/repro/obs/points.py", line=1, rule="obs-coverage",
+            message=f"unknown --expect mode {mode!r}; catalog has: "
+                    f"{sorted(EXPECTED_POINTS)}")]
     seen_spans = {e.get("name") for e in events if e.get("ph") in ("X", "i")}
     for name in expected["spans"]:
         if name not in seen_spans:
-            errors.append(f"[{mode}] required span {name!r} emitted ZERO "
-                          f"events — instrumentation point lost?")
+            findings.append(Finding(
+                file=trace_path or "<trace>", line=0, rule="obs-coverage",
+                message=f"[{mode}] required span {name!r} emitted ZERO "
+                        f"events — instrumentation point lost?",
+                symbol=name))
     seen_metrics = {r.get("name") for r in rows}
     for name in expected["metrics"]:
         if name not in seen_metrics:
-            errors.append(f"[{mode}] required metric {name!r} has no "
-                          f"snapshot row — instrumentation point lost?")
+            findings.append(Finding(
+                file=metrics_path or "<metrics>", line=0,
+                rule="obs-coverage",
+                message=f"[{mode}] required metric {name!r} has no "
+                        f"snapshot row — instrumentation point lost?",
+                symbol=name))
+    return findings
 
 
 def main(argv=None) -> int:
@@ -126,30 +157,43 @@ def main(argv=None) -> int:
     ap.add_argument("--expect", default=None, metavar="MODE",
                     help=f"validate coverage for one serving mode: "
                          f"{sorted(EXPECTED_POINTS)}")
+    ap.add_argument("--json", action="store_true",
+                    help="emit machine-readable JSON instead of text")
     args = ap.parse_args(argv)
     if not args.trace and not args.metrics:
         ap.error("nothing to check: pass --trace and/or --metrics")
 
-    errors: List[str] = []
+    findings: List[Finding] = []
     events: List[Dict[str, Any]] = []
     rows: List[Dict[str, Any]] = []
+    summary: Dict[str, Any] = {}
     if args.trace:
-        events = check_trace_schema(args.trace, errors)
+        events, got = check_trace_schema(args.trace)
+        findings.extend(got)
         spans = sum(1 for e in events if e.get("ph") == "X")
-        print(f"trace {args.trace}: {len(events)} events ({spans} spans)")
+        summary["trace"] = {"events": len(events), "spans": spans}
+        if not args.json:
+            print(f"trace {args.trace}: {len(events)} events "
+                  f"({spans} spans)")
     if args.metrics:
-        rows = check_metrics_schema(args.metrics, errors)
+        rows, got = check_metrics_schema(args.metrics)
+        findings.extend(got)
         kinds: Dict[str, int] = {}
         for r in rows:
             kinds[r.get("kind", "?")] = kinds.get(r.get("kind", "?"), 0) + 1
-        print(f"metrics {args.metrics}: {len(rows)} rows {kinds}")
+        summary["metrics"] = {"rows": len(rows), "kinds": kinds}
+        if not args.json:
+            print(f"metrics {args.metrics}: {len(rows)} rows {kinds}")
     if args.expect:
-        check_coverage(args.expect, events, rows, errors)
+        findings.extend(check_coverage(args.expect, events, rows,
+                                       args.trace, args.metrics))
 
-    if errors:
-        for e in errors:
-            print(f"FAIL: {e}", file=sys.stderr)
-        print(f"{len(errors)} problem(s)", file=sys.stderr)
+    if args.json:
+        print(render_json(findings, extra=summary))
+        return 1 if findings else 0
+    if findings:
+        print(render_text(findings), file=sys.stderr)
+        print(f"{len(findings)} problem(s)", file=sys.stderr)
         return 1
     print("OK: schema valid"
           + (f", all {args.expect!r} instrumentation points emitted"

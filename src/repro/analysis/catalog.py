@@ -1,0 +1,154 @@
+"""catalog-sync: obs point catalog <-> emit sites, and registry closure.
+
+Two drift directions, both previously invisible to tests:
+
+* **dead catalog entry** — a span/metric listed in ``obs/points.py`` with
+  no remaining emit site anywhere in ``src/repro`` (a rename or refactor
+  dropped the call; ``check_trace.py --expect`` would fail only for the
+  modes that exercise it, and only when that mode's smoke runs).
+* **uncataloged emit** — an ``obs_trace.span``/``instant`` or
+  ``obs_metrics.counter``/``gauge``/``histogram`` call whose literal name
+  appears in neither ``EXPECTED_POINTS`` nor ``INFORMATIONAL_POINTS``.
+  Every point must be classified: contract (some mode requires it) or
+  informational (documented as best-effort).  The two sets must be
+  disjoint.
+
+Only literal first arguments are collected; a non-literal name (dynamic
+span naming) is itself a finding — the catalog cannot audit what it
+cannot read.
+
+The registry half checks closure of the two extension registries:
+
+* every decoder backend provides both decode families (``prefix``,
+  ``tans``) and any fused families are a subset of those;
+* every entropy codec's table class implements the container round-trip
+  surface (``from_container``) that ``table_from_container`` dispatches on.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Set, Tuple
+
+from .base import Finding, iter_py_files, rel
+
+TARGET_GLOBS = ["src/repro/**/*.py"]
+
+SPAN_CALLS = {"span", "instant"}          # obs_trace.<call>("name", ...)
+METRIC_CALLS = {"counter", "gauge", "histogram"}   # obs_metrics.<call>("name")
+REQUIRED_FAMILIES = frozenset({"prefix", "tans"})
+
+EmitSites = Dict[Tuple[str, str], List[Tuple[str, int]]]
+
+
+def collect_emits(root: Path) -> Tuple[EmitSites, List[Finding]]:
+    """Map (kind, name) -> [(file, line)] for every literal obs emit."""
+    sites: EmitSites = {}
+    findings: List[Finding] = []
+    for path in iter_py_files(root, TARGET_GLOBS):
+        if "analysis" in path.parts:
+            continue
+        file = rel(path, root)
+        for node in ast.walk(ast.parse(path.read_text())):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and isinstance(node.func.value, ast.Name)):
+                continue
+            mod, call = node.func.value.id, node.func.attr
+            if mod == "obs_trace" and call in SPAN_CALLS:
+                kind = "spans"
+            elif mod == "obs_metrics" and call in METRIC_CALLS:
+                kind = "metrics"
+            else:
+                continue
+            if not node.args:
+                continue
+            arg = node.args[0]
+            if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+                sites.setdefault((kind, arg.value), []).append(
+                    (file, node.lineno))
+            else:
+                findings.append(Finding(
+                    file=file, line=node.lineno, rule="catalog-sync",
+                    message=f"non-literal name in {mod}.{call}(...) — "
+                            f"dynamic point names cannot be audited against "
+                            f"the catalog"))
+    return sites, findings
+
+
+def check_points(root: Path) -> List[Finding]:
+    from repro.obs.points import EXPECTED_POINTS, INFORMATIONAL_POINTS
+    sites, findings = collect_emits(root)
+    points_file = "src/repro/obs/points.py"
+
+    expected: Dict[str, Set[str]] = {"spans": set(), "metrics": set()}
+    for mode in EXPECTED_POINTS.values():
+        for kind in expected:
+            expected[kind].update(mode.get(kind, []))
+    informational = {kind: set(INFORMATIONAL_POINTS.get(kind, []))
+                     for kind in expected}
+
+    for kind in expected:
+        for name in sorted(expected[kind] & informational[kind]):
+            findings.append(Finding(
+                file=points_file, line=1, rule="catalog-sync",
+                message=f"{kind[:-1]} {name!r} is both EXPECTED and "
+                        f"INFORMATIONAL — pick one", symbol=name))
+        for name in sorted(expected[kind] | informational[kind]):
+            if (kind, name) not in sites:
+                findings.append(Finding(
+                    file=points_file, line=1, rule="catalog-sync",
+                    message=f"dead catalog entry: {kind[:-1]} {name!r} has "
+                            f"no emit site under src/repro", symbol=name))
+    for (kind, name), locs in sorted(sites.items()):
+        if name not in expected[kind] and name not in informational[kind]:
+            file, line = locs[0]
+            findings.append(Finding(
+                file=file, line=line, rule="catalog-sync",
+                message=f"uncataloged {kind[:-1]} {name!r} — add it to "
+                        f"EXPECTED_POINTS (contract) or "
+                        f"INFORMATIONAL_POINTS (best-effort) in obs/points",
+                symbol=name))
+    return findings
+
+
+def check_registries(root: Path) -> List[Finding]:
+    findings: List[Finding] = []
+    from repro.core import codecs
+    from repro.core import decode_backends as db
+
+    reg_file = "src/repro/core/decode_backends.py"
+    for name in db.backend_names():
+        # registry is audited structurally, availability-independent: the
+        # pallas backend must still declare both families on a CPU host
+        be = db._REGISTRY[name]
+        missing = REQUIRED_FAMILIES - set(be.fns)
+        if missing:
+            findings.append(Finding(
+                file=reg_file, line=1, rule="catalog-sync",
+                message=f"decoder backend {name!r} missing decode "
+                        f"families {sorted(missing)}", symbol=name))
+        extra_fused = set(be.fused_fns or {}) - set(be.fns)
+        if extra_fused:
+            findings.append(Finding(
+                file=reg_file, line=1, rule="catalog-sync",
+                message=f"decoder backend {name!r} fuses families "
+                        f"{sorted(extra_fused)} it cannot decode unfused",
+                symbol=name))
+
+    codec_file = "src/repro/core/codecs/__init__.py"
+    for name in codecs.codec_names():
+        codec = codecs.get_codec(name)
+        if codec.table_cls is not None and \
+                not hasattr(codec.table_cls, "from_container"):
+            findings.append(Finding(
+                file=codec_file, line=1, rule="catalog-sync",
+                message=f"codec {name!r} table class "
+                        f"{codec.table_cls.__name__} lacks from_container — "
+                        f"containers with this codec cannot be reloaded",
+                symbol=name))
+    return findings
+
+
+def check(root: Path) -> List[Finding]:
+    return check_points(root) + check_registries(root)

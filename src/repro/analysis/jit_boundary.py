@@ -1,0 +1,199 @@
+"""jit-host-boundary: no Python side effects inside staged computations.
+
+Obs spans and metrics are host-side: a ``obs_trace.span`` inside a jitted
+closure fires once at trace time and then never again (or worse, at every
+retrace), silently recording garbage — the reason ``obs/points.py``
+documents the fully-fused carve-out (no per-layer decode points when the
+layer loop lives inside jit).  The same goes for ``print``, ``time.*``,
+``.item()``/``.tolist()`` host syncs, file I/O, and threading calls.
+
+The pass finds *jit roots* in each module:
+
+* functions decorated ``@jax.jit`` / ``@(functools.)partial(jax.jit, …)``
+* local defs passed to ``jax.jit(fn)`` / assigned ``x = jax.jit(fn)``
+* kernel functions handed to ``pl.pallas_call`` (directly or via partial)
+* bodies handed to ``lax.scan`` / ``while_loop`` / ``fori_loop`` /
+  ``cond`` / ``jax.checkpoint`` / ``jax.remat`` / ``jax.vmap`` /
+  ``jax.grad`` / ``jax.value_and_grad``
+
+then walks the module-local call graph from those roots (a worklist over
+same-module function names) and flags host-side calls anywhere in the
+traced set.  ``jax.debug.print`` / ``jax.debug.callback`` are exempt —
+they are the sanctioned staged escape hatches.
+
+numpy calls are only flagged for a small mutating/extracting subset
+(``np.save``, ``np.asarray`` on traced values is legitimate constant
+folding and stays allowed — flagging all of ``np.*`` would drown real
+findings in trace-time constant math).
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Set
+
+from .base import Finding, iter_py_files, rel
+
+TARGET_GLOBS = ["src/repro/**/*.py"]
+
+# staging entry points whose first function-valued argument becomes traced
+STAGERS = {"scan", "while_loop", "fori_loop", "cond", "checkpoint", "remat",
+           "vmap", "grad", "value_and_grad", "pallas_call", "jit"}
+
+HOST_CALL_NAMES = {"print", "open", "input", "breakpoint"}
+HOST_ATTR_CALLS = {"item", "tolist", "block_until_ready"}
+HOST_MODULES = {"time", "threading", "os", "sys", "logging"}
+OBS_MODULES = {"obs_trace", "obs_metrics"}
+NP_HOST_FNS = {"save", "load", "savez", "fromfile", "tofile"}
+
+
+def _func_name(node: ast.AST) -> str:
+    """Dotted name of a call target ('jax.lax.scan', 'obs_trace.span')."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """jax.jit(...) / partial(jax.jit, ...) / functools.partial(jax.jit,…)."""
+    if not isinstance(node, ast.Call):
+        return False
+    name = _func_name(node.func)
+    if name.endswith("jit"):
+        return True
+    if name.split(".")[-1] == "partial" and node.args:
+        return _is_jit_expr(ast.Call(func=node.args[0], args=[],
+                                     keywords=[])) or \
+            _func_name(node.args[0]).endswith("jit")
+    return False
+
+
+def _fn_args_of(call: ast.Call) -> List[str]:
+    """Names of function-valued args passed into a staging call."""
+    out: List[str] = []
+    for a in call.args:
+        if isinstance(a, ast.Name):
+            out.append(a.id)
+        elif isinstance(a, ast.Call) and \
+                _func_name(a.func).split(".")[-1] == "partial" and a.args \
+                and isinstance(a.args[0], ast.Name):
+            out.append(a.args[0].id)
+    return out
+
+
+class _ModuleScan:
+    """Collect defs, jit roots, and per-def host calls for one module."""
+
+    def __init__(self, tree: ast.Module, file: str):
+        self.file = file
+        self.defs: Dict[str, ast.FunctionDef] = {}
+        self.roots: Set[str] = set()
+        self.aliases: Dict[str, Set[str]] = {}
+        self._collect(tree)
+
+    def _collect(self, tree: ast.Module) -> None:
+        for node in ast.walk(tree):
+            # alias tracking: `kernel = functools.partial(_kern, ...)` /
+            # `step = body` — so `pallas_call(kernel)` resolves to _kern
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                tgt = node.targets[0].id
+                v = node.value
+                if isinstance(v, ast.Name):
+                    self.aliases.setdefault(tgt, set()).add(v.id)
+                elif isinstance(v, ast.Call) and \
+                        _func_name(v.func).split(".")[-1] == "partial" \
+                        and v.args and isinstance(v.args[0], ast.Name):
+                    self.aliases.setdefault(tgt, set()).add(v.args[0].id)
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # last definition wins; nested defs recorded too (the call
+                # graph is name-based within the module)
+                self.defs[node.name] = node
+                for dec in node.decorator_list:
+                    if _is_jit_expr(dec) or _func_name(dec).endswith("jit"):
+                        self.roots.add(node.name)
+            if isinstance(node, ast.Call):
+                name = _func_name(node.func)
+                tail = name.split(".")[-1]
+                if tail in STAGERS:
+                    self.roots.update(_fn_args_of(node))
+                if tail == "jit" or (tail == "partial" and node.args and
+                                     _func_name(node.args[0]).endswith("jit")):
+                    self.roots.update(_fn_args_of(node))
+
+    def traced_set(self) -> Set[str]:
+        """Worklist closure of jit roots over module-local calls."""
+        seen: Set[str] = set()
+        resolved: Set[str] = set()
+        for r in self.roots:
+            if r in self.defs:
+                resolved.add(r)
+            else:
+                resolved.update(self.aliases.get(r, set()))
+        work = [r for r in resolved if r in self.defs]
+        while work:
+            name = work.pop()
+            if name in seen:
+                continue
+            seen.add(name)
+            for node in ast.walk(self.defs[name]):
+                if isinstance(node, ast.Call):
+                    callee = _func_name(node.func)
+                    if callee in self.defs and callee not in seen:
+                        work.append(callee)
+        return seen
+
+    def host_calls(self, fn: ast.FunctionDef) -> List[ast.Call]:
+        bad: List[ast.Call] = []
+        # nested defs inside fn that are themselves traced are visited on
+        # their own worklist turn; host calls inside them still lexically
+        # sit inside fn, so visiting the whole subtree is conservative but
+        # correct (a host call is a finding wherever it sits in the set)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _func_name(node.func)
+            head, _, _tail = name.partition(".")
+            last = name.split(".")[-1]
+            if name.startswith("jax.debug") or head == "debug":
+                continue
+            if head in OBS_MODULES:
+                bad.append(node)
+            elif name in HOST_CALL_NAMES:
+                bad.append(node)
+            elif last in HOST_ATTR_CALLS and "." in name:
+                bad.append(node)
+            elif head in HOST_MODULES and "." in name:
+                bad.append(node)
+            elif head == "np" and last in NP_HOST_FNS:
+                bad.append(node)
+        return bad
+
+
+def check_source(src: str, file: str) -> List[Finding]:
+    tree = ast.parse(src)
+    scan = _ModuleScan(tree, file)
+    findings: List[Finding] = []
+    for name in sorted(scan.traced_set()):
+        fn = scan.defs[name]
+        for call in scan.host_calls(fn):
+            findings.append(Finding(
+                file=file, line=call.lineno, rule="jit-host-boundary",
+                message=f"host-side call {_func_name(call.func)!r} "
+                        f"reachable inside staged function {name!r} — "
+                        f"runs at trace time, not per step",
+                symbol=name))
+    return findings
+
+
+def check(root: Path) -> List[Finding]:
+    findings: List[Finding] = []
+    for path in iter_py_files(root, TARGET_GLOBS):
+        if "analysis" in path.parts:
+            continue
+        findings.extend(check_source(path.read_text(), rel(path, root)))
+    return findings

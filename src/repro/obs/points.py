@@ -8,7 +8,10 @@ events — the CI ``obs-smoke`` guard against instrumentation silently rotting
 every functional test).
 
 Add new instrumentation here when it is a *contract* (the overlap report or
-a dashboard depends on it); purely informational spans can stay uncatalogued.
+a dashboard depends on it); everything else must be registered in
+``INFORMATIONAL_POINTS`` below — the ``catalog-sync`` checker
+(``scripts/check_static.py``) fails on any emit site whose name appears in
+neither set, and on any cataloged name with no remaining emit site.
 Names must match docs/OBSERVABILITY.md's catalog — ``tests/test_obs.py``
 cross-checks that every point listed here appears in the doc.
 """
@@ -119,4 +122,36 @@ EXPECTED_POINTS: Dict[str, Dict[str, List[str]]] = {
             "kv.shared_hits",
         ],
     },
+}
+
+# Best-effort instrumentation: emitted by some code path but required by no
+# serving mode (mode-dependent, probe-only, or benchmark-oriented).  The
+# catalog-sync checker keeps this bidirectional with the emit sites: every
+# name here has at least one emit site, every emit site is in exactly one
+# of EXPECTED_POINTS / INFORMATIONAL_POINTS.
+INFORMATIONAL_POINTS: Dict[str, List[str]] = {
+    "spans": [
+        "kv.cold_decode",           # only with a cold-tier codec configured
+        "kv.cold_encode",
+        "resident.prefetch_issue",
+    ],
+    "metrics": [
+        "decode.calls",             # scheduler chunking detail
+        "kv.cold_evictions",        # cold tier / eviction pressure only
+        "kv.cold_restores",
+        "kv.dropped_evictions",
+        "kv.shared_misses",         # zero on non-sharing traffic
+        "load.decodes",
+        "queue.shed",               # only under overload
+        "requests.finished",
+        "resident.fused_fallback",  # zero when every tensor fuses
+        "resident.prefetch_hit",    # hit/wait split of consume_wait
+        "resident.prefetch_wait",
+        "serve.prefill_s",          # lockstep wall-clock breakdown
+        "serve.decode_s",
+        "serve.ttft_s",
+        "serve.tokens",
+        "slots.compactions",        # only when fragmentation triggers
+        "slots.releases",
+    ],
 }

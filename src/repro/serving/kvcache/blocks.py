@@ -35,6 +35,7 @@ Layout invariants the step functions rely on:
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from functools import partial
 from typing import TYPE_CHECKING, Any, Dict, Hashable, List, Optional, Tuple
@@ -149,6 +150,10 @@ class BlockKVManager:
         self._block_key: Dict[int, Hashable] = {}
         self._lru: "OrderedDict[int, Hashable]" = OrderedDict()
         self.cold = ColdBlockStore(spec.codec) if spec.codec else None
+        # stats counters are read by stats()/monitoring threads while the
+        # engine loop mutates them (lock-discipline policy in
+        # repro.analysis.locks); everything else is engine-thread-only
+        self._stats_lock = threading.Lock()
         self.shared_hits = 0
         self.shared_misses = 0
         self.cold_evictions = 0
@@ -178,18 +183,22 @@ class BlockKVManager:
         return self.cold.nbytes if self.cold is not None else 0
 
     def stats(self) -> Dict[str, Any]:
-        lookups = self.shared_hits + self.shared_misses
+        with self._stats_lock:
+            hits, misses = self.shared_hits, self.shared_misses
+            evic, rest, drop = (self.cold_evictions, self.cold_restores,
+                                self.dropped_evictions)
+        lookups = hits + misses
         return {
             "pool_bytes": self.pool_bytes,
             "cold_bytes": self.cold_bytes,
             "blocks_free": len(self._free_blocks),
             "blocks_total": self.n_blocks,
-            "shared_hits": self.shared_hits,
-            "shared_misses": self.shared_misses,
-            "prefix_hit_rate": self.shared_hits / lookups if lookups else 0.0,
-            "cold_evictions": self.cold_evictions,
-            "cold_restores": self.cold_restores,
-            "dropped_evictions": self.dropped_evictions,
+            "shared_hits": hits,
+            "shared_misses": misses,
+            "prefix_hit_rate": hits / lookups if lookups else 0.0,
+            "cold_evictions": evic,
+            "cold_restores": rest,
+            "dropped_evictions": drop,
         }
 
     def _update_gauges(self) -> None:
@@ -224,7 +233,7 @@ class BlockKVManager:
             keys.append(parent)
         return keys
 
-    def _plan(self, req: Request) -> Optional[_Plan]:
+    def _plan(self, req: Request, count: bool = True) -> Optional[_Plan]:
         P = req.prompt_len
         padded = -(-P // self.chunk) * self.chunk
         need = max(P + req.max_new_tokens, padded)
@@ -249,24 +258,26 @@ class BlockKVManager:
         n_skip = min(n_hit * self.block_size // self.chunk * self.chunk,
                      (P - 1) // self.chunk * self.chunk)
         pending = [(j, key) for j, key in enumerate(keys) if j >= n_hit]
-        self.shared_hits += n_hit
-        self.shared_misses += len(keys) - n_hit
-        if n_hit:
-            obs_metrics.counter("kv.shared_hits").inc(n_hit)
-        if len(keys) - n_hit:
-            obs_metrics.counter("kv.shared_misses").inc(len(keys) - n_hit)
+        if count:
+            with self._stats_lock:
+                self.shared_hits += n_hit
+                self.shared_misses += len(keys) - n_hit
+            if n_hit:
+                obs_metrics.counter("kv.shared_hits").inc(n_hit)
+            if len(keys) - n_hit:
+                obs_metrics.counter("kv.shared_misses").inc(len(keys) - n_hit)
         return _Plan(nb=nb, res_hits=res_hits, cold_hits=cold_hits,
                      n_skip=n_skip, pending=pending)
 
     # ------------------------------------------------------------- lifecycle
     def can_admit(self, req: Request) -> bool:
-        """Admission probe — free slot + enough claimable blocks.  Counts
-        shared hits but does not consume them (``alloc`` re-plans)."""
+        """Admission probe — free slot + enough claimable blocks.  Does not
+        touch the hit/miss stats (``alloc`` re-plans and counts); before the
+        ``count=`` flag this rolled the attrs back by hand but still emitted
+        the obs counters, so probes double-counted kv.shared_* metrics."""
         if not self._free_slots:
             return False
-        hits, misses = self.shared_hits, self.shared_misses
-        plan = self._plan(req)
-        self.shared_hits, self.shared_misses = hits, misses   # probe only
+        plan = self._plan(req, count=False)
         if plan is None:
             return False
         # planned hits sitting at refcount 0 are on the LRU but must not be
@@ -318,7 +329,8 @@ class BlockKVManager:
                 self._block_key[blk] = key
                 row[j] = blk
                 shared.append((j, key))
-                self.cold_restores += 1
+                with self._stats_lock:
+                    self.cold_restores += 1
                 obs_metrics.counter("kv.cold_restores").inc()
             n_hit = len(plan.res_hits) + len(plan.cold_hits)
             for j in range(n_hit, plan.nb):
@@ -401,10 +413,12 @@ class BlockKVManager:
                                   _read_block(self.pool, jnp.int32(blk)))
             with obs_trace.span("kv.cold_encode", block=blk):
                 self.cold.put(key, leaves)
-            self.cold_evictions += 1
+            with self._stats_lock:
+                self.cold_evictions += 1
             obs_metrics.counter("kv.cold_evictions").inc()
         else:
-            self.dropped_evictions += 1
+            with self._stats_lock:
+                self.dropped_evictions += 1
             obs_metrics.counter("kv.dropped_evictions").inc()
         self.pool = _zero_block(self.pool, jnp.int32(blk))
         self._free_blocks.append(blk)

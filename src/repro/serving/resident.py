@@ -40,6 +40,7 @@ dense-resident engine bit for bit.
 """
 from __future__ import annotations
 
+import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict, List, Optional
@@ -161,6 +162,10 @@ class CompressedResidentWeights:
                                thread_name_prefix="resident-decode")
             if prefetch else None)
         self._pending: Dict[int, Future] = {}
+        # guards _pending: prefetch() may be called from a driver thread
+        # while get() consumes from the engine loop (lock-discipline policy
+        # in repro.analysis.locks)
+        self._lock = threading.Lock()
         # fused dispatch accounting: which tensors the fused kernel hosts vs
         # which fall back per-tensor, with the fallback REASON as the label
         # (docs/OBSERVABILITY.md "Fused dispatch")
@@ -288,11 +293,14 @@ class CompressedResidentWeights:
     def prefetch(self, l: int) -> None:
         """Start decoding layer ``l`` on the worker thread (no-op when
         already in flight or prefetch is disabled)."""
-        if self._exec is None or l in self._pending:
+        if self._exec is None:
             return
+        with self._lock:
+            if l in self._pending:
+                return
+            self._pending[l] = self._exec.submit(self._decode_layer, l)
         obs_trace.instant("resident.prefetch_issue", cat="resident", layer=l)
         obs_metrics.counter("resident.prefetch_issued").inc()
-        self._pending[l] = self._exec.submit(self._decode_layer, l)
 
     def get(self, l: int) -> Dict[str, Any]:
         """Layer ``l``'s weight-slot dict (waits on its prefetch if one is
@@ -303,12 +311,15 @@ class CompressedResidentWeights:
         duration is the time the serving loop actually blocked on weight
         decode (≈0 on a prefetch hit).  ``benchmarks/overlap_report.py``
         sums these against the worker's ``resident.decode`` spans."""
-        fut = self._pending.pop(l, None)
+        with self._lock:
+            fut = self._pending.pop(l, None)
         if fut is not None:
             hit = fut.done()
-            obs_metrics.counter(
-                "resident.prefetch_hit" if hit else "resident.prefetch_wait"
-            ).inc()
+            # literal names per branch: catalog-sync audits emit sites
+            if hit:
+                obs_metrics.counter("resident.prefetch_hit").inc()
+            else:
+                obs_metrics.counter("resident.prefetch_wait").inc()
             with obs_trace.span("resident.consume_wait", cat="resident",
                                 layer=l, hit=hit):
                 return fut.result()
