@@ -1,0 +1,196 @@
+"""Fleet serving: aggregate throughput scaling across DP engine replicas.
+
+One compressed container is decoded ONCE (``FleetDriver.from_container``,
+``weights="share"``) and served by fleets of 1..N ``ContinuousEngine``
+replicas behind the request router, each replica pinned to its own forced
+XLA host device and stepped by its own worker thread
+(``replay_fleet(threaded=True)`` — docs/FLEET.md §"Drive modes").  The same
+seeded Poisson trace replays against every fleet size plus a single-engine
+reference, and every request's greedy tokens are asserted **bit-identical**
+across all of them — scaling must change only *when* tokens appear, never
+*what* they are.
+
+Reported per fleet size: aggregate tok/s, per-replica token split, TTFT
+p50/p99, end-to-end latency p50/p99, shed count.  The headline is the
+scaling ratio (N-replica tok/s over 1-replica tok/s) and the efficiency
+(ratio / N).  ``--check-scaling X`` gates the N-replica ratio (CI passes
+1.7 for N=2 on multi-core runners; a single-core host serializes replica
+compute, so the gate is opt-in, not default).
+
+``--trace-out``/``--metrics-out`` export the observability artifacts;
+``scripts/check_trace.py --expect fleet-continuous`` validates them against
+the instrumentation-point catalog (the CI ``fleet-smoke`` job does).
+
+Usage:  PYTHONPATH=src python -m benchmarks.fleet_serving [--quick]
+        (or `python -m benchmarks.run fleet`)
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def _force_host_devices(n: int) -> None:
+    """Set the forced device count BEFORE jax initializes its backend —
+    replica pinning needs >= n host devices to exist."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = \
+            (flags + f" --xla_force_host_platform_device_count={n}").strip()
+
+
+def run(arch: str = "qwen3-1.7b", *, bits: int = 8, n_requests: int = 12,
+        replica_counts=(1, 2), slots: int = 2, policy: str = "least-loaded",
+        rate_per_s: float = 200.0, prompt_max: int = 16, gen_max: int = 10,
+        prefill_chunk: int = 4, check_scaling=None, seed: int = 0,
+        verbose: bool = True) -> dict:
+    import jax
+    import numpy as np
+    from repro.configs import registry
+    from repro.core.quant import Granularity
+    from repro.core.spec import spec_from_legacy
+    from repro.core.store import CompressedModel
+    from repro.models import api
+    from repro.obs.metrics import percentile
+    from repro.serving import engine as serving_engine
+    from repro.serving.batching import (ContinuousEngine, poisson_trace,
+                                        replay_fleet)
+    from repro.serving.fleet import FleetDriver
+
+    cfg = registry.reduced(registry.get(arch))
+    mod = api.build(cfg)
+    params0 = mod.init(cfg, jax.random.PRNGKey(0))
+    host = {k: np.asarray(v, np.float32) for k, v in params0.items()}
+    cm = CompressedModel.compress(host, spec=spec_from_legacy(
+        bits, Granularity.PER_CHANNEL, codec="rans"))
+
+    sc = serving_engine.ServeConfig(max_len=prompt_max + gen_max
+                                    + prefill_chunk)
+    trace = poisson_trace(n_requests, rate_per_s=rate_per_s,
+                          prompt_max=prompt_max, gen_max=gen_max,
+                          vocab=cfg.vocab, seed=seed)
+    n_max = max(replica_counts)
+    devices = jax.devices()[:n_max]
+
+    # single-engine reference: the bit-identity baseline AND the shape
+    # warm-up (fleets share these jitted steps, so no fleet run compiles)
+    ref = ContinuousEngine(cfg,
+                           serving_engine.load_params_from_compressed(cm),
+                           sc, n_slots=slots, max_queue=n_requests,
+                           prefill_chunk=prefill_chunk)
+    ref_reqs = [ref.submit(p, g) for _, p, g in trace]
+    ref.run()
+    refs = [r.output for r in ref_reqs]
+    assert all(r.finish_reason == "length" for r in ref_reqs)
+
+    if verbose:
+        print(f"{cfg.name}: {n_requests} Poisson arrivals @ {rate_per_s}/s, "
+              f"prompts ≤{prompt_max}, gen ≤{gen_max}, {slots} slots per "
+              f"replica, router {policy}, {len(devices)} forced host "
+              f"device(s)")
+    tps: dict = {}
+    results: dict = {}
+    for n in replica_counts:
+        fd = FleetDriver.from_container(
+            cm, cfg, sc, n_replicas=n, weights="share", policy=policy,
+            n_slots=slots, max_queue=n_requests, max_intake=n_requests,
+            prefill_chunk=prefill_chunk, devices=devices[:n],
+            steps=ref.steps)
+        t0 = time.monotonic()
+        reqs, shed, _ = replay_fleet(fd, trace, threaded=True)
+        span = time.monotonic() - t0
+        assert shed == 0 and all(r is not None for r in reqs)
+        outs = [r.output for r in reqs]
+        assert outs == refs, \
+            (f"{n}-replica fleet changed greedy tokens vs the single "
+             f"engine — the bit-identity contract is broken")
+        toks = sum(len(o) for o in outs)
+        ttft = [r.ttft_s for r in reqs]
+        lat = [r.latency_s for r in reqs]
+        tps[n] = toks / max(span, 1e-9)
+        wb = fd.weight_bytes()
+        per = "/".join(str(sum(len(r.output) for r in h.engine.finished))
+                       for h in fd.replicas)
+        results[n] = dict(tok_per_s=tps[n],
+                          ttft_p99_s=percentile(ttft, 99),
+                          latency_p99_s=percentile(lat, 99),
+                          weight_copies=wb["copies"],
+                          weight_bytes=wb["total_bytes"])
+        if verbose:
+            print(f"  {n} replica{'s' if n > 1 else ' '} "
+                  f"[{wb['copies']} weight cop"
+                  f"{'y' if wb['copies'] == 1 else 'ies'}, "
+                  f"{wb['total_bytes']/2**20:.2f} MiB]: {toks} tok in "
+                  f"{span:5.2f}s = {tps[n]:6.1f} tok/s ({per} per replica) "
+                  f"| ttft p50 {percentile(ttft, 50)*1e3:5.0f}ms "
+                  f"p99 {percentile(ttft, 99)*1e3:5.0f}ms | latency p99 "
+                  f"{percentile(lat, 99)*1e3:5.0f}ms | bit-identical")
+    base = min(replica_counts)
+    top = max(replica_counts)
+    scaling = tps[top] / max(tps[base], 1e-9)
+    if verbose and top > base:
+        print(f"  scaling: {scaling:.2f}x aggregate tok/s at {top} replicas "
+              f"(efficiency {scaling/ (top/base):.0%} of linear)")
+    if check_scaling is not None:
+        assert scaling >= check_scaling, \
+            (f"{top}-replica fleet scaled {scaling:.2f}x over {base} "
+             f"replica(s); required {check_scaling}x")
+    return dict(scaling=scaling, per_fleet=results)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default="qwen3-1.7b")
+    p.add_argument("--bits", type=int, default=8)
+    p.add_argument("--requests", type=int, default=12)
+    p.add_argument("--replicas", type=int, default=2,
+                   help="largest fleet size (the benchmark runs fleet sizes "
+                        "1 and N over the same trace)")
+    p.add_argument("--slots", type=int, default=2)
+    p.add_argument("--router", default="least-loaded",
+                   choices=("round-robin", "least-loaded"))
+    p.add_argument("--rate", type=float, default=200.0)
+    p.add_argument("--prompt-max", type=int, default=16)
+    p.add_argument("--gen-max", type=int, default=10)
+    p.add_argument("--prefill-chunk", type=int, default=4)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--check-scaling", type=float, default=None, metavar="X",
+                   help="fail unless the largest fleet reaches >= X times "
+                        "the 1-replica aggregate tok/s (needs real cores; "
+                        "CI's multi-core fleet-smoke job passes 1.7)")
+    p.add_argument("--quick", action="store_true",
+                   help="small CI configuration (fewer, shorter requests)")
+    p.add_argument("--trace-out", default=None, metavar="FILE")
+    p.add_argument("--metrics-out", default=None, metavar="FILE")
+    args = p.parse_args(argv)
+
+    _force_host_devices(max(args.replicas, 2))
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
+    if args.trace_out:
+        obs_trace.enable()
+    kw = dict(bits=args.bits, replica_counts=(1, args.replicas),
+              slots=args.slots, policy=args.router,
+              check_scaling=args.check_scaling, seed=args.seed)
+    if args.quick:
+        run(args.arch, n_requests=8, rate_per_s=500.0, prompt_max=10,
+            gen_max=6, prefill_chunk=4, **kw)
+    else:
+        run(args.arch, n_requests=args.requests, rate_per_s=args.rate,
+            prompt_max=args.prompt_max, gen_max=args.gen_max,
+            prefill_chunk=args.prefill_chunk, **kw)
+    if args.trace_out:
+        tracer = obs_trace.disable()
+        if tracer is not None:
+            n = tracer.save(args.trace_out)
+            print(f"trace: {n} events -> {args.trace_out}")
+    if args.metrics_out:
+        n = obs_metrics.default_registry().write_jsonl(args.metrics_out)
+        print(f"metrics: {n} rows -> {args.metrics_out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

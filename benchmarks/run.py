@@ -6,6 +6,8 @@
   streaming — monolithic vs streamed weight decode (load-path of Table II)
   traffic — continuous batching vs lockstep under Poisson arrivals
   sharded — multi-device sharded residency vs single-device (bit-identity)
+  fleet   — DP replica fleet vs single engine: aggregate tok/s scaling
+            behind the request router (bit-identity asserted)
   resident — compressed-resident vs dense-resident serving (Table II's
              bandwidth-vs-compute tradeoff: resident bytes vs tok/s)
   fused    — fused decode→dequant→matmul vs the prefetch-overlap per-layer
@@ -26,8 +28,8 @@ import sys
 def main(argv=None) -> int:
     which = (argv or sys.argv[1:]) or ["table1", "table2", "decode",
                                        "streaming", "traffic", "sharded",
-                                       "resident", "fused", "overlap",
-                                       "roofline"]
+                                       "fleet", "resident", "fused",
+                                       "overlap", "roofline"]
     from . import (decode_streaming, decode_throughput, table1_storage,
                    table2_latency)
 
@@ -64,6 +66,14 @@ def main(argv=None) -> int:
             print(f"(skip sharded: {e} — run it standalone: "
                   f"XLA_FLAGS=--xla_force_host_platform_device_count=8 "
                   f"python -m benchmarks.sharded_serving)")
+        print()
+    if "fleet" in which:
+        print("== DP replica fleet vs single engine (router, bit-identity) ==")
+        # replicas wrap onto the available devices, so this runs even when
+        # an earlier harness already initialized jax with one host device
+        from . import fleet_serving
+        fleet_serving.run(n_requests=8, rate_per_s=500.0, prompt_max=10,
+                          gen_max=6)
         print()
     if "resident" in which:
         print("== Compressed-resident vs dense-resident serving ==")

@@ -55,12 +55,15 @@ REQUIRED_LINKS = [
     ("README.md", "docs/SERVING.md"),
     ("README.md", "docs/OBSERVABILITY.md"),
     ("README.md", "docs/KV_CACHE.md"),
+    ("README.md", "docs/FLEET.md"),
     ("README.md", "docs/STATIC_ANALYSIS.md"),
     ("docs/SERVING.md", "OBSERVABILITY.md"),
     ("docs/SERVING.md", "KV_CACHE.md"),
+    ("docs/SERVING.md", "FLEET.md"),
     ("docs/TESTING.md", "STATIC_ANALYSIS.md"),
 ]
-SECTION_DOCS = ["docs/ARCHITECTURE.md", "docs/SERVING.md", "DESIGN.md"]
+SECTION_DOCS = ["docs/ARCHITECTURE.md", "docs/SERVING.md", "docs/FLEET.md",
+                "DESIGN.md"]
 AUDIT_GLOBS = ["src/repro/serving/**/*.py", "src/repro/core/scheduler.py"]
 
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
@@ -130,9 +133,10 @@ def check_required_links() -> List[Finding]:
 
 
 def check_section_refs() -> list[str]:
-    arch, serving, design = (ROOT / p for p in SECTION_DOCS)
-    all_headings = [h for p in (arch, serving, design) if p.exists()
-                    for h in headings(p)]
+    arch = ROOT / "docs/ARCHITECTURE.md"
+    design = ROOT / "DESIGN.md"
+    all_headings = [h for p in (ROOT / d for d in SECTION_DOCS)
+                    if p.exists() for h in headings(p)]
     arch_nums = {m.group(1) for m in
                  re.finditer(r"^##\s+(\d+)\.", arch.read_text(), re.M)}
     design_nums = {m.group(1) for m in

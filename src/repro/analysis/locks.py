@@ -88,6 +88,23 @@ POLICIES: Dict[tuple, LockPolicy] = {
         },
         init_methods=frozenset({"__init__", "_build_fused_slots"}),
     ),
+    ("src/repro/serving/fleet/router.py", "Router"): LockPolicy(
+        lock="_lock",
+        guarded=frozenset({"shed", "n_dispatched", "_rr"}),
+        locked_methods=frozenset({"_shed_locked"}),
+    ),
+    ("src/repro/serving/fleet/driver.py", "FleetDriver"): LockPolicy(
+        lock="_lock",
+        guarded=frozenset({"_threads", "_stop_flag"}),
+        single_writer={
+            "n_steps": "lockstep driver thread only (step/run are never "
+                       "called while workers are running)",
+            "n_submitted": "submitting thread only (one submit entry point "
+                           "by contract — replay_fleet / the launcher)",
+            "handoff": "assigned in __init__ only after the decode handles "
+                       "exist; never reassigned",
+        },
+    ),
     ("src/repro/serving/kvcache/blocks.py", "BlockKVManager"): LockPolicy(
         lock="_stats_lock",
         guarded=frozenset({"shared_hits", "shared_misses", "cold_evictions",

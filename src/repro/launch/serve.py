@@ -109,6 +109,20 @@ def main(argv=None):
                         "requests (copy-on-write publish of full prompt "
                         "blocks; implies --kv-spec when given alone, and "
                         "makes --traffic replay shared system prompts)")
+    p.add_argument("--replicas", type=int, default=0, metavar="N",
+                   help="with --batch-slots: serve through a fleet of N "
+                        "data-parallel continuous-batching replicas behind "
+                        "a request router (one shared weight tree, lockstep "
+                        "drive; docs/FLEET.md)")
+    p.add_argument("--router", default="round-robin",
+                   choices=("round-robin", "least-loaded"),
+                   help="fleet placement policy for --replicas "
+                        "(docs/FLEET.md)")
+    p.add_argument("--disaggregate", default=None, metavar="P:D",
+                   help="with --replicas: split the fleet into P prefill "
+                        "replicas + D decode replicas (P+D = N); finished "
+                        "prompt KV ships prefill->decode as entropy-coded "
+                        "block payloads, so requires --kv-spec")
     p.add_argument("--mesh", default=None, metavar="DxM",
                    help="serve on a (data, model) device mesh, e.g. 2x4: "
                         "weights tensor-parallel over model (QT q/scale/zero "
@@ -193,6 +207,42 @@ def main(argv=None):
                     f"the KV block size (chunk {args.prefill_chunk}, block "
                     f"{kv_spec.block_size}): the prefix-skip boundary must "
                     f"be a chunk boundary")
+
+    # fleet flags: same upfront-validation contract (docs/FLEET.md); the
+    # parsed P:D split rides on args so _serve_fleet sees a tuple, not text
+    args.disaggregate_split = None
+    if args.disaggregate and args.replicas <= 0:
+        p.error("--disaggregate requires --replicas")
+    if args.replicas:
+        if args.replicas < 1:
+            p.error(f"--replicas must be >= 1, got {args.replicas}")
+        if args.batch_slots <= 0:
+            p.error("--replicas requires --batch-slots (fleet replicas are "
+                    "continuous-batching engines; docs/FLEET.md)")
+        if args.mesh:
+            p.error("--replicas is data parallelism over single-device "
+                    "engines; the mesh layer shards ONE engine — drop "
+                    "--mesh or serve a single replica")
+        if args.resident != "dense":
+            p.error("--replicas needs --resident dense: the per-layer "
+                    "compressed-resident drivers are single-engine today")
+        if args.disaggregate:
+            try:
+                n_pre, n_dec = (int(x) for x in args.disaggregate.split(":"))
+            except ValueError:
+                p.error(f"bad --disaggregate {args.disaggregate!r}: "
+                        f"want P:D, e.g. 1:1")
+            if n_pre < 1 or n_dec < 1:
+                p.error("--disaggregate needs at least one prefill and one "
+                        "decode replica")
+            if n_pre + n_dec != args.replicas:
+                p.error(f"--disaggregate {args.disaggregate} must sum to "
+                        f"--replicas ({args.replicas})")
+            if kv_spec is None:
+                p.error("--disaggregate requires --kv-spec: the prefill->"
+                        "decode handoff ships paged KV blocks entropy-coded "
+                        "on the wire (docs/FLEET.md)")
+            args.disaggregate_split = (n_pre, n_dec)
 
     # validate the backend against the registry BEFORE any expensive work, so
     # a typo fails with the list of choices, not a deep KeyError mid-load
@@ -432,6 +482,10 @@ def _serve_continuous(cfg, serve_params, sc, args, rng, load_metrics,
     from repro.serving.batching import (ContinuousEngine, QueueFullError,
                                         poisson_trace, replay)
 
+    if args.replicas > 0:
+        return _serve_fleet(cfg, serve_params, sc, args, load_metrics,
+                            kv_spec=kv_spec, kv_prefix_len=kv_prefix_len)
+
     ce = ContinuousEngine(cfg, serve_params, sc, n_slots=args.batch_slots,
                           max_queue=args.max_queue,
                           prefill_chunk=args.prefill_chunk,
@@ -497,6 +551,70 @@ def _serve_continuous(cfg, serve_params, sc, args, rng, load_metrics,
               f"tier {st['cold_bytes']/2**10:.1f} KiB "
               f"({st['cold_evictions']} evictions, {st['cold_restores']} "
               f"restores, {st['dropped_evictions']} dropped)")
+    return 0
+
+
+def _serve_fleet(cfg, serve_params, sc, args, load_metrics,
+                 kv_spec=None, kv_prefix_len=0):
+    """--replicas path: DP fleet of continuous engines behind the router.
+
+    Lockstep drive (docs/FLEET.md §"Drive modes") — deterministic and
+    per-request bit-identical to a single engine; the threaded mode is the
+    fleet benchmark's job, not the launcher's.
+    """
+    from repro.obs.metrics import percentile
+    from repro.serving.batching import poisson_trace, replay_fleet
+    from repro.serving.fleet import FleetDriver
+
+    split = args.disaggregate_split
+    fd = FleetDriver(cfg, serve_params, sc, n_replicas=args.replicas,
+                     policy=args.router, n_slots=args.batch_slots,
+                     max_queue=args.max_queue,
+                     prefill_chunk=args.prefill_chunk,
+                     kv_spec=kv_spec, disaggregate=split)
+    wb = fd.weight_bytes()
+    topo = (f"{split[0]} prefill + {split[1]} decode, disaggregated"
+            if split else f"{args.replicas}x data-parallel")
+    print(f"fleet [{topo}; router {args.router}]: "
+          f"{wb['copies']} weight cop{'y' if wb['copies'] == 1 else 'ies'} "
+          f"resident ({wb['total_bytes']/2**20:.2f} MiB, "
+          f"mode {wb['mode']})")
+    n = args.traffic if args.traffic > 0 else args.batch
+    prefix_kw = {}
+    if kv_spec is not None and kv_spec.sharing:
+        prefix_kw = dict(prefix_pool=2, prefix_len=kv_prefix_len)
+    trace = poisson_trace(n, rate_per_s=100.0, prompt_max=args.prompt_len,
+                          gen_max=args.gen, vocab=cfg.vocab, seed=0,
+                          **prefix_kw)
+    t0 = time.monotonic()
+    _, shed, _ = replay_fleet(fd, trace, shed_on_full=True)
+    span = time.monotonic() - t0
+    fin = fd.finished
+    n_shed = len(fd.shed)
+    if not fin:
+        print(f"fleet: no requests completed ({n_shed} shed)")
+        return 1
+    toks = sum(len(r.output) for r in fin)
+    ttft = [r.ttft_s for r in fin]
+    lat = [r.latency_s for r in fin]
+    per_replica = ", ".join(
+        f"r{h.idx}[{h.state.name.lower()}] "
+        f"{sum(len(r.output) for r in h.engine.finished)} tok"
+        for h in fd.replicas)
+    print(f"fleet serve: {len(fin)}/{n} requests"
+          + (f" ({n_shed} shed)" if n_shed else "")
+          + f", {toks} tok in {span:.2f}s = "
+          f"{toks/max(span, 1e-9):.1f} tok/s aggregate")
+    print(f"  per replica: {per_replica}")
+    print(f"  ttft p50 {percentile(ttft, 50)*1e3:.0f}ms "
+          f"p99 {percentile(ttft, 99)*1e3:.0f}ms "
+          f"(+{load_metrics['decode_load_s']:.2f}s weight load) | "
+          f"latency p50 {percentile(lat, 50)*1e3:.0f}ms "
+          f"p99 {percentile(lat, 99)*1e3:.0f}ms | {fd.n_steps} fleet steps")
+    if fd.handoff is not None:
+        print(f"  handoff: {fd.handoff.n_handoffs} prefill->decode "
+              f"payloads, {fd.handoff.bytes_on_wire/2**10:.1f} KiB "
+              f"entropy-coded on the wire")
     return 0
 
 

@@ -97,6 +97,33 @@ EXPECTED_POINTS: Dict[str, Dict[str, List[str]]] = {
             "request.latency_s",
         ],
     },
+    # FleetDriver (--replicas N): the fleet boundary plus every replica's
+    # continuous-engine points.  fleet.pump only spans when the intake has
+    # requests to place and fleet.dispatch only on a routing decision, so
+    # any fleet serve that moves traffic must emit both — a router refactor
+    # that silently stops routing (or stops recording it) goes dark here.
+    "fleet-continuous": {
+        "spans": [
+            "fleet.pump",
+            "fleet.dispatch",
+            "serve.step",
+            "serve.admit_chunk",
+            "serve.decode_batch",
+        ],
+        "metrics": [
+            "fleet.submitted",
+            "fleet.dispatched",
+            "fleet.replicas_up",
+            "fleet.queue_depth",
+            "queue.depth",
+            "queue.submitted",
+            "queue.wait_s",
+            "slots.occupied",
+            "slots.inserts",
+            "request.ttft_s",
+            "request.latency_s",
+        ],
+    },
     # ContinuousEngine with the paged KV cache (--batch-slots --kv-spec).
     # kv.shared_hits only fires on a prefix hit, so this mode's smoke
     # traffic MUST replay shared system prompts (--prefix-sharing traffic
@@ -131,12 +158,19 @@ EXPECTED_POINTS: Dict[str, Dict[str, List[str]]] = {
 # of EXPECTED_POINTS / INFORMATIONAL_POINTS.
 INFORMATIONAL_POINTS: Dict[str, List[str]] = {
     "spans": [
+        "fleet.handoff_adopt",      # disaggregated fleets only
+        "fleet.handoff_encode",
         "kv.cold_decode",           # only with a cold-tier codec configured
         "kv.cold_encode",
         "resident.prefetch_issue",
     ],
     "metrics": [
         "decode.calls",             # scheduler chunking detail
+        "fleet.admission_rejects",  # admission-gate vetoes (chaos/test seam)
+        "fleet.handoff_bytes",      # disaggregated fleets only
+        "fleet.handoffs",
+        "fleet.redrives",           # only after a replica failure
+        "fleet.shed",               # only under overload / failures
         "kv.cold_evictions",        # cold tier / eviction pressure only
         "kv.cold_restores",
         "kv.dropped_evictions",

@@ -1,1 +1,1 @@
-from . import batching, engine, resident
+from . import batching, engine, fleet, resident

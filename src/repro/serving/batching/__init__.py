@@ -9,10 +9,10 @@ from .engine import ContinuousEngine
 from .queue import QueueFullError, RequestQueue
 from .request import Request, RequestState, SamplingParams
 from .slots import SlotBatchManager
-from .traffic import poisson_trace, replay
+from .traffic import poisson_trace, replay, replay_fleet
 
 __all__ = [
     "ContinuousEngine", "QueueFullError", "Request", "RequestQueue",
     "RequestState", "SamplingParams", "SlotBatchManager", "poisson_trace",
-    "replay",
+    "replay", "replay_fleet",
 ]

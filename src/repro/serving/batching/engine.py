@@ -100,7 +100,8 @@ class ContinuousEngine:
                  steps: Optional[ServeSteps] = None,
                  resident: str = "dense",
                  kv_spec: Optional[KVCompressionSpec] = None,
-                 kv_blocks: Optional[int] = None):
+                 kv_blocks: Optional[int] = None,
+                 handoff_sink=None):
         if not api.supports_continuous_batching(cfg):
             raise NotImplementedError(
                 f"family {cfg.family!r} does not implement the slot-batch "
@@ -126,9 +127,18 @@ class ContinuousEngine:
                 f"so outputs may depend on batch packing (raise "
                 f"capacity_factor to >= num_experts/top_k for bit-identical "
                 f"serving)", stacklevel=2)
+        if handoff_sink is not None and kv_spec is None:
+            raise ValueError(
+                "handoff_sink needs the paged KV cache (kv_spec): the "
+                "disaggregated handoff ships block payloads, and only "
+                "BlockKVManager implements export_blocks (docs/FLEET.md)")
         self.cfg = cfg
         self.params = params
         self.sc = sc
+        # disaggregated prefill replicas: called as sink(engine, slot, req)
+        # right after a request's prefill completes and its first token is
+        # sampled; the sink must export_request() the slot (docs/FLEET.md)
+        self.handoff_sink = handoff_sink
         self.steps = steps if steps is not None else \
             ServeSteps(cfg, sc, mesh=mesh, rules=rules, resident=resident)
         self.paged = kv_spec is not None
@@ -180,13 +190,23 @@ class ContinuousEngine:
         """Queue one request (raises ``QueueFullError`` under backpressure)."""
         req = Request(prompt=np.asarray(prompt), max_new_tokens=max_new_tokens,
                       sampling=sampling, eos_id=eos_id, deadline_s=deadline_s)
+        return self.submit_request(req)
+
+    def submit_request(self, req: Request) -> Request:
+        """External-admission hook: queue a pre-built :class:`Request`.
+
+        The fleet router (``serving/fleet/router.py``) builds one Request at
+        the fleet boundary and dispatches it to a replica through this seam,
+        so rid / timestamps / sampling state stay with the same object across
+        redrives.  Raises ``QueueFullError`` under backpressure and
+        ``ValueError`` when the request cannot fit ``max_len`` on any step."""
         P = req.prompt_len
         chunks = -(-P // self.prefill_chunk) * self.prefill_chunk
-        need = max(P + max_new_tokens, chunks)
+        need = max(P + req.max_new_tokens, chunks)
         if need > self.sc.max_len:
             raise ValueError(
                 f"request {req.rid} needs {need} cache rows (prompt {P} + "
-                f"{max_new_tokens} new, prefill padded to {chunks}) but "
+                f"{req.max_new_tokens} new, prefill padded to {chunks}) but "
                 f"max_len is {self.sc.max_len}")
         return self.queue.submit(req)
 
@@ -257,6 +277,11 @@ class ContinuousEngine:
         self._temps[slot] = req.sampling.temperature
         if self._hit_stop(req, tok):
             self._detach(slot, req, tok)
+        elif self.handoff_sink is not None:
+            # disaggregated prefill replica: the request never decodes here —
+            # the sink exports the slot's KV blocks + sampling lane and the
+            # decode side continues from the exact same state
+            self.handoff_sink(self, slot, req)
 
     def _decoding(self) -> List[int]:
         return [s for s, r in enumerate(self.slots.requests)
@@ -336,6 +361,81 @@ class ContinuousEngine:
     def has_work(self) -> bool:
         return bool(len(self.queue)) or self._prefilling is not None \
             or bool(self.slots.active)
+
+    # ------------------------------------------------- fleet seams (export)
+    def export_request(self, slot: int):
+        """Detach ``slot``'s request mid-flight for a KV handoff.
+
+        Returns ``(req, kv_len, blocks, lane)``: the request object, its
+        committed KV length, the raw per-block pool leaves
+        (``BlockKVManager.export_blocks``), and the sampling lane state
+        ``(token, key, temp)`` a peer engine needs to continue decode from
+        the exact device state this engine would have used.  The slot is
+        released.  Paged engines only."""
+        assert self.paged, "export_request needs the paged KV cache"
+        req = self.slots.requests[slot]
+        assert req is not None, f"export of free slot {slot}"
+        kv_len = int(self.slots.kv_len[slot])
+        blocks = self.slots.export_blocks(slot)
+        lane = (int(self._tokens[slot]),
+                np.array(self._keys[slot]),
+                float(self._temps[slot]))
+        self.slots.release(slot)
+        self._tokens[slot] = 0
+        self._keys[slot] = 0
+        self._temps[slot] = 0.0
+        return req, kv_len, blocks, lane
+
+    def can_adopt(self, req: Request, kv_len: int, n_blocks: int) -> bool:
+        """Probe for ``adopt_request`` (peek-then-adopt, like can_admit)."""
+        assert self.paged, "can_adopt needs the paged KV cache"
+        return self.slots.can_import(req, kv_len, n_blocks)
+
+    def adopt_request(self, req: Request, kv_len: int, blocks, lane) -> bool:
+        """Admit an externally prefilled request: install its KV blocks and
+        sampling lane, then decode it like any local request.  Returns False
+        (nothing changed) when no slot or not enough pool blocks are free —
+        the handoff coordinator retries on a later pump.  Paged engines
+        only."""
+        assert self.paged, "adopt_request needs the paged KV cache"
+        slot = self.slots.import_blocks(req, kv_len, blocks)
+        if slot is None:
+            return False
+        tok, key, temp = lane
+        req.state = RequestState.DECODING
+        self._tokens[slot] = tok
+        self._keys[slot] = np.asarray(key, np.uint32)
+        self._temps[slot] = temp
+        return True
+
+    def evacuate(self) -> List[Request]:
+        """Strip every unfinished request off the engine, oldest first.
+
+        The failed-replica redrive path: the fleet driver marks a replica
+        FAILED, evacuates it, resets each request (``Request.requeue``) and
+        re-enqueues them at the fleet intake — nothing is lost, nothing is
+        duplicated.  Queued, mid-prefill, and decoding requests are all
+        harvested; the engine is left empty but serviceable."""
+        out: List[Request] = []
+        while True:
+            r = self.queue.pop()    # lazy-expires overdue heads in passing
+            if r is None:
+                break
+            out.append(r)
+        # a mid-prefill request already occupies its reserved slot
+        # (alloc registered it in slots.requests), so the slot sweep below
+        # harvests it; only the pipeline state needs clearing here
+        self._prefilling = None
+        for s, r in enumerate(list(self.slots.requests)):
+            if r is not None:
+                self.slots.release(s)
+                self._tokens[s] = 0
+                self._keys[s] = 0
+                self._temps[s] = 0.0
+                out.append(r)
+        out.sort(key=lambda r: (r.t_arrival if r.t_arrival is not None
+                                else float("inf"), r.rid))
+        return out
 
     # -------------------------------------------------------------- private
     @staticmethod

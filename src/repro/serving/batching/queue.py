@@ -52,6 +52,19 @@ class RequestQueue:
         obs_metrics.gauge("queue.depth").set(len(self._q))
         return req
 
+    def requeue(self, req: Request) -> Request:
+        """Return ``req`` to the *front* of the line (fleet redrive path).
+
+        Bypasses the ``max_queue`` bound on purpose: a redriven request was
+        already admitted once, and dropping it here would violate the
+        router's no-loss contract — transient over-bound depth is the cost
+        of a replica failure, and ``submit`` backpressure shrinks it again.
+        ``t_arrival`` is NOT restamped (deadlines keep counting)."""
+        req.state = RequestState.QUEUED
+        self._q.appendleft(req)
+        obs_metrics.gauge("queue.depth").set(len(self._q))
+        return req
+
     def peek(self, now: Optional[float] = None) -> Optional[Request]:
         """The request ``pop`` would return, without removing it.  Overdue
         heads are expired in passing (same lazy semantics as ``pop``), so a

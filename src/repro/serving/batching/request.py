@@ -53,7 +53,8 @@ class Request:
 
     state: RequestState = RequestState.QUEUED
     output: List[int] = dataclasses.field(default_factory=list)
-    finish_reason: Optional[str] = None      # "eos" | "length" | "deadline" | "queue_full"
+    finish_reason: Optional[str] = None      # "eos" | "length" | "deadline" | "queue_full" | "no_replica"
+    redrives: int = 0                        # times re-enqueued after a replica failure
 
     t_arrival: Optional[float] = None
     t_admitted: Optional[float] = None
@@ -95,6 +96,22 @@ class Request:
         if self.t_finished is None or self.t_arrival is None:
             return None
         return self.t_finished - self.t_arrival
+
+    def requeue(self) -> None:
+        """Reset for a redrive after a replica failure (fleet router).
+
+        Generated tokens are discarded and the request decodes again from
+        its prompt — greedy decode is deterministic and sampling re-derives
+        the same per-request PRNG stream from ``sampling.seed``, so the
+        rerun reproduces the lost tokens bit-identically.  ``t_arrival`` is
+        kept: the deadline covers total time in the system, redrives
+        included."""
+        self.state = RequestState.QUEUED
+        self.output = []
+        self.finish_reason = None
+        self.t_admitted = None
+        self.t_first_token = None
+        self.redrives += 1
 
     def expired(self, now: Optional[float] = None) -> bool:
         if self.deadline_s is None or self.t_arrival is None:

@@ -33,10 +33,23 @@ def poisson_trace(n_requests: int, *, rate_per_s: float, prompt_max: int,
     request opens with one of them (uniformly chosen) followed by a ragged
     unique suffix of at least one token — the workload prefix sharing in the
     paged KV cache (docs/KV_CACHE.md) is built to exploit.
+
+    **Determinism contract (fleet serving).**  Request *content* is drawn
+    from a per-request derived stream: entry ``i``'s (prompt, gen) depends
+    only on ``(seed, i)``, the length bounds, and the prefix pool — never on
+    ``n_requests``, ``rate_per_s``, or anything drawn for other entries.
+    Arrival pacing and the prefix pool each have their own derived stream.
+    A trace is therefore *prefix-stable*: ``poisson_trace(n, ...)[:k] ==
+    poisson_trace(k, ...)`` (same kwargs) for every ``k <= n``, so the fleet
+    benchmark can scale trace length with replica count without any
+    request's content changing.  The pre-fleet version drew everything from
+    ONE stream, where the block of ``n`` arrival gaps shifted every
+    subsequent draw — two traces differing only in length disagreed on
+    every prompt (regression: ``tests/fleet/test_router.py``).
     """
-    rng = np.random.default_rng(seed)
-    gaps = rng.exponential(1.0 / rate_per_s, n_requests)
-    arrivals = np.cumsum(gaps) - gaps[0]            # first request at t=0
+    arrivals_rng = np.random.default_rng([seed, 0])
+    gaps = arrivals_rng.exponential(1.0 / rate_per_s, n_requests)
+    arrivals = np.cumsum(gaps) - (gaps[0] if n_requests else 0.0)
     pmin = min(prompt_min, prompt_max)
     gmin = min(gen_min, gen_max)
     prefixes = []
@@ -44,10 +57,13 @@ def poisson_trace(n_requests: int, *, rate_per_s: float, prompt_max: int,
         if prefix_len < 1:
             raise ValueError(f"prefix_pool={prefix_pool} needs "
                              f"prefix_len >= 1, got {prefix_len}")
-        prefixes = [rng.integers(0, vocab, (prefix_len,)).astype(np.int32)
+        prefix_rng = np.random.default_rng([seed, 1])
+        prefixes = [prefix_rng.integers(0, vocab,
+                                        (prefix_len,)).astype(np.int32)
                     for _ in range(prefix_pool)]
     trace: Trace = []
     for i in range(n_requests):
+        rng = np.random.default_rng([seed, 2, i])   # request-private stream
         G = int(rng.integers(gmin, gen_max + 1))
         if prefixes:
             smax = max(prompt_max - prefix_len, 1)  # suffix keeps >= 1 token
@@ -90,4 +106,49 @@ def replay(ce: ContinuousEngine, trace: Trace, *, shed_on_full: bool = False
         if not ce.step() and pending:
             time.sleep(max(0.0, min(pending[0][0] - (time.monotonic() - t0),
                                     1e-3)))
+    return requests, shed, time.monotonic() - t0
+
+
+def replay_fleet(driver, trace: Trace, *, shed_on_full: bool = False,
+                 threaded: bool = False
+                 ) -> Tuple[List[Optional[Request]], int, float]:
+    """Feed ``trace`` through a :class:`~repro.serving.fleet.FleetDriver`.
+
+    Same submit-when-due pacing and return shape as :func:`replay`, but
+    arrivals land at the fleet intake and the router spreads them over the
+    replicas.  ``threaded=True`` runs one worker thread per replica
+    (``driver.start_workers``) with the submit loop pumping dispatch from
+    this thread; the default steps the whole fleet in deterministic lockstep
+    (``driver.step``) — the mode every fleet test uses (docs/FLEET.md
+    §"Drive modes").
+    """
+    t0 = time.monotonic()
+    pending = list(trace)
+    requests: List[Optional[Request]] = []
+    shed = 0
+    if threaded:
+        driver.start_workers()
+    try:
+        while pending or driver.has_work:
+            now = time.monotonic() - t0
+            while pending and pending[0][0] <= now:
+                _, prompt, max_new = pending[0]
+                try:
+                    requests.append(driver.submit(prompt, max_new))
+                except QueueFullError:
+                    if not shed_on_full:
+                        raise
+                    shed += 1
+                    requests.append(None)
+                pending.pop(0)
+            if threaded:
+                driver.pump()
+                time.sleep(2e-4)
+            elif not driver.step() and pending:
+                time.sleep(max(0.0,
+                               min(pending[0][0] - (time.monotonic() - t0),
+                                   1e-3)))
+    finally:
+        if threaded:
+            driver.stop_workers()
     return requests, shed, time.monotonic() - t0

@@ -1,0 +1,21 @@
+"""Fleet serving: data-parallel engine replicas behind a request router,
+with an optional disaggregated prefill/decode split (docs/FLEET.md).
+
+The mesh layer (``launch/mesh.py``) scales one engine *across devices*;
+this package scales *engines* — N :class:`~repro.serving.batching.engine.
+ContinuousEngine` replicas from one compressed container, a
+:class:`Router` with pluggable placement policies, health states, and
+deadline-aware shedding, and a :class:`HandoffCoordinator` shipping
+prefilled KV between replicas as entropy-coded block payloads (the cold
+tier's codec round-trip as wire format).  The whole fleet stays
+per-request greedy bit-identical to a single engine
+(``tests/fleet/test_fleet_identity.py``).
+"""
+from .driver import FleetDriver
+from .handoff import HandoffCoordinator, HandoffPayload
+from .router import POLICIES, ReplicaHandle, ReplicaState, Router
+
+__all__ = [
+    "FleetDriver", "HandoffCoordinator", "HandoffPayload", "POLICIES",
+    "ReplicaHandle", "ReplicaState", "Router",
+]

@@ -1,0 +1,415 @@
+"""Data-parallel fleet of ContinuousEngine replicas (docs/FLEET.md).
+
+Topology: one bounded **intake** queue at the fleet boundary, a
+:class:`~repro.serving.fleet.router.Router` spreading intake over N replica
+queues, and optionally a disaggregated split where the first P replicas run
+prefill-only (their ``handoff_sink`` exports finished prompt KV) and the
+remaining D replicas decode-only, bridged by a
+:class:`~repro.serving.fleet.handoff.HandoffCoordinator`.
+
+Weights: all replicas serve from ONE compressed container.
+``from_container`` decodes it once and shares the tree
+(``weights="share"``) or decodes one copy per replica
+(``weights="per-replica"`` — the multi-host stand-in); ``weight_bytes()``
+accounts both honestly, counting device broadcast copies when replicas are
+pinned to distinct (forced host) devices.  Every replica shares one
+:class:`~repro.serving.engine.ServeSteps`, so all replicas run the SAME
+jitted step functions — the compile cache is paid once and numerical
+identity across replicas is by construction, which is what makes the fleet
+bit-identity contract (any request's greedy tokens == a single engine's,
+regardless of replica count, policy, or failures) hold.
+
+Drive modes:
+
+* ``step()`` / ``run()`` — deterministic lockstep: pump dispatch, step every
+  live replica once, pump the handoff.  Single-threaded; what the fault
+  and identity tests (and ``launch/serve.py --replicas``) use.
+* ``start_workers()`` / ``stop_workers()`` — one thread per replica stepping
+  its own engine, with dispatch pumped from the submitting thread
+  (``traffic.replay_fleet(threaded=True)``).  Real wall-clock parallelism
+  when replicas sit on distinct forced host devices (the fleet benchmark);
+  plain DP only — disaggregation is lockstep-only because adopting into a
+  stepping engine would race its block pool.
+
+Failure semantics: ``kill_replica`` marks the handle FAILED (its worker, if
+any, exits and is joined), evacuates every queued / mid-prefill / decoding
+request off the engine, resets each (``Request.requeue`` — generated tokens
+discarded; determinism regenerates them bit-identically) and re-enqueues
+them at the *front* of the intake in arrival order.  Nothing is lost,
+nothing runs twice to completion.  ``drain_replica`` stops new placements
+but lets in-flight work finish.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.core.spec import KVCompressionSpec
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from ..engine import ServeConfig, ServeSteps
+from ..batching.engine import ContinuousEngine
+from ..batching.queue import QueueFullError, RequestQueue
+from ..batching.request import Request, SamplingParams
+from .handoff import HandoffCoordinator
+from .router import ReplicaHandle, ReplicaState, Router
+
+
+def _tree_bytes(tree) -> int:
+    return sum(int(leaf.nbytes) for leaf in jax.tree.leaves(tree))
+
+
+class FleetDriver:
+    """N data-parallel engine replicas behind one router (docs/FLEET.md)."""
+
+    def __init__(self, cfg: ArchConfig, params: Any, sc: ServeConfig, *,
+                 n_replicas: int = 2,
+                 policy: str = "round-robin",
+                 n_slots: int = 4,
+                 max_queue: int = 16,
+                 prefill_chunk: int = 8,
+                 admit_chunks_per_step: int = 4,
+                 kv_spec: Optional[KVCompressionSpec] = None,
+                 kv_blocks: Optional[int] = None,
+                 max_intake: int = 256,
+                 disaggregate: Optional[Tuple[int, int]] = None,
+                 handoff_codec: str = "rans",
+                 handoff_transport=None,
+                 devices: Optional[List[Any]] = None,
+                 steps: Optional[ServeSteps] = None,
+                 admission_gate=None,
+                 replica_params: Optional[List[Any]] = None):
+        if n_replicas < 1:
+            raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+        if disaggregate is not None:
+            P, D = disaggregate
+            if P < 1 or D < 1:
+                raise ValueError(f"disaggregate needs >= 1 prefill and >= 1 "
+                                 f"decode replica, got {disaggregate}")
+            if P + D != n_replicas:
+                raise ValueError(f"disaggregate {P}:{D} must sum to "
+                                 f"n_replicas={n_replicas}")
+            if kv_spec is None:
+                raise ValueError(
+                    "disaggregated mode needs the paged KV cache (kv_spec): "
+                    "the handoff ships entropy-coded block payloads")
+        self.cfg = cfg
+        self.sc = sc
+        self.prefill_chunk = prefill_chunk
+        self.disaggregate = disaggregate
+        # one ServeSteps for the whole fleet: one compile cache, and
+        # replica-count-independent numerics by construction
+        self.steps = steps if steps is not None else ServeSteps(cfg, sc)
+
+        # ---- weight placement: share one tree or hold one per replica ----
+        if replica_params is not None:
+            if len(replica_params) != n_replicas:
+                raise ValueError(f"replica_params has {len(replica_params)} "
+                                 f"trees for {n_replicas} replicas")
+            self.weight_mode = "per-replica"
+            trees = list(replica_params)
+        else:
+            self.weight_mode = "share"
+            trees = [params] * n_replicas
+        if devices is not None:
+            if not devices:
+                raise ValueError("devices list is empty")
+            placed: Dict[tuple, Any] = {}
+            pinned = []
+            for i, tree in enumerate(trees):
+                dev = devices[i % len(devices)]
+                key = (id(tree), getattr(dev, "id", repr(dev)))
+                if key not in placed:
+                    # sharing across distinct devices = one broadcast copy
+                    # per device; weight_bytes() counts each copy
+                    placed[key] = jax.device_put(tree, dev)
+                pinned.append(placed[key])
+            trees = pinned
+        self._replica_trees = trees
+
+        # ---- replicas -----------------------------------------------------
+        n_prefill = disaggregate[0] if disaggregate else n_replicas
+        self.replicas: List[ReplicaHandle] = []
+        for i in range(n_replicas):
+            is_prefill = i < n_prefill
+            eng = ContinuousEngine(
+                cfg, trees[i], sc, n_slots=n_slots, max_queue=max_queue,
+                prefill_chunk=prefill_chunk,
+                admit_chunks_per_step=admit_chunks_per_step,
+                steps=self.steps, kv_spec=kv_spec, kv_blocks=kv_blocks,
+                # the sink is wired after the coordinator exists (below);
+                # construction order: decode handles -> coordinator -> sinks
+                handoff_sink=None)
+            dev = devices[i % len(devices)] if devices else None
+            if dev is not None:
+                if eng.paged:
+                    eng.slots.pool = jax.device_put(eng.slots.pool, dev)
+                else:
+                    eng.slots.cache = jax.device_put(eng.slots.cache, dev)
+            self.replicas.append(ReplicaHandle(i, eng, device=dev))
+        self.prefill_replicas = self.replicas[:n_prefill]
+        self.decode_replicas = self.replicas[n_prefill:]
+
+        self.handoff: Optional[HandoffCoordinator] = None
+        if disaggregate is not None:
+            self.handoff = HandoffCoordinator(
+                self.decode_replicas, codec=handoff_codec,
+                transport=handoff_transport)
+            for h in self.prefill_replicas:
+                h.engine.handoff_sink = self.handoff.sink
+
+        # router targets: replicas that ADMIT new requests (prefill side
+        # under disaggregation; everyone otherwise)
+        self.router = Router(self.prefill_replicas, policy=policy,
+                             admission_gate=admission_gate)
+        self.intake = RequestQueue(max_intake)
+        self.n_steps = 0
+        self.n_submitted = 0
+        self._threads: Dict[int, threading.Thread] = {}
+        self._stop_flag = False
+        self._lock = threading.Lock()
+        self._update_gauges()
+
+    # ------------------------------------------------------------ factories
+    @classmethod
+    def from_container(cls, cm, cfg: ArchConfig, sc: ServeConfig, *,
+                       n_replicas: int = 2, weights: str = "share",
+                       backend: Optional[str] = None, **kw) -> "FleetDriver":
+        """Build a fleet from one compressed container.
+
+        ``weights="share"`` decodes the container ONCE and every replica
+        serves the same resident tree (decode-once-then-share — the
+        single-host fleet).  ``weights="per-replica"`` decodes one copy per
+        replica (the multi-host stand-in: each host pays its own decode and
+        holds its own bytes).  Both are accounted by ``weight_bytes()``.
+        """
+        from ..engine import load_params_from_compressed
+        if weights not in ("share", "per-replica"):
+            raise ValueError(f"weights must be 'share' or 'per-replica', "
+                             f"got {weights!r}")
+        if weights == "share":
+            params = load_params_from_compressed(cm, backend=backend)
+            return cls(cfg, params, sc, n_replicas=n_replicas, **kw)
+        replica_params = [load_params_from_compressed(cm, backend=backend)
+                          for _ in range(n_replicas)]
+        return cls(cfg, None, sc, n_replicas=n_replicas,
+                   replica_params=replica_params, **kw)
+
+    # ------------------------------------------------------------ accounting
+    def weight_bytes(self) -> Dict[str, Any]:
+        """Resident weight bytes across the fleet, honestly counted: one
+        entry per distinct in-memory tree (sharing collapses to one copy;
+        per-replica or per-device placement counts each copy)."""
+        unique: Dict[int, Any] = {}
+        for tree in self._replica_trees:
+            unique[id(tree)] = tree
+        per_copy = [_tree_bytes(t) for t in unique.values()]
+        return {"mode": self.weight_mode, "copies": len(per_copy),
+                "bytes_per_copy": per_copy[0] if per_copy else 0,
+                "total_bytes": sum(per_copy)}
+
+    # ---------------------------------------------------------------- submit
+    def submit(self, prompt, max_new_tokens: int, *,
+               sampling: SamplingParams = SamplingParams(),
+               eos_id: Optional[int] = None,
+               deadline_s: Optional[float] = None) -> Request:
+        """Queue one request at the fleet intake (raises ``QueueFullError``
+        under intake backpressure, with the shed recorded)."""
+        req = Request(prompt=prompt, max_new_tokens=max_new_tokens,
+                      sampling=sampling, eos_id=eos_id, deadline_s=deadline_s)
+        P = req.prompt_len
+        chunks = -(-P // self.prefill_chunk) * self.prefill_chunk
+        need = max(P + max_new_tokens, chunks)
+        if need > self.sc.max_len:
+            raise ValueError(
+                f"request {req.rid} needs {need} cache rows but max_len is "
+                f"{self.sc.max_len}")
+        try:
+            self.intake.submit(req)
+        except QueueFullError:
+            self.router.shed_request(req, "queue_full")
+            raise
+        self.n_submitted += 1
+        obs_metrics.counter("fleet.submitted").inc()
+        return req
+
+    # ------------------------------------------------------------- dispatch
+    def pump(self) -> int:
+        """Move intake requests onto replica queues through the router.
+
+        Pops in FIFO order; a request the router defers (pure backpressure)
+        goes back to the *front* of the intake and the pump stops — FIFO
+        order is part of the determinism contract.  Intake requests whose
+        deadline lapsed expire in passing (``RequestQueue`` lazy expiry)
+        and are mirrored to ``fleet.shed{deadline}``.
+        """
+        if not len(self.intake):
+            self._update_gauges()
+            return 0
+        with obs_trace.span("fleet.pump", depth=len(self.intake)):
+            n_exp0 = len(self.intake.expired)
+            dispatched = 0
+            while True:
+                req = self.intake.pop()
+                if req is None:
+                    break
+                h = self.router.dispatch(req)
+                if h is not None:
+                    dispatched += 1
+                    continue
+                if req.done:
+                    continue          # shed terminally by the router
+                self.intake.requeue(req)
+                break                 # backpressure: retry next pump
+            for _ in range(len(self.intake.expired) - n_exp0):
+                obs_metrics.counter("fleet.shed").inc(reason="deadline")
+            self._update_gauges()
+            return dispatched
+
+    # -------------------------------------------------------------- stepping
+    def step(self) -> bool:
+        """One lockstep fleet iteration: dispatch, step every live replica,
+        pump the handoff.  Returns False when nothing moved — with no
+        external intervention (fault plans), a False step means the fleet is
+        drained or permanently stuck, so ``run()`` stops."""
+        self.n_steps += 1
+        moved = self.pump() > 0
+        for h in self.replicas:
+            if h.state is ReplicaState.FAILED:
+                continue
+            if h.engine.has_work:
+                moved |= h.engine.step()
+        if self.handoff is not None:
+            delivered, ticked = self.handoff.pump(
+                shed=self.router.shed_request)
+            moved |= delivered > 0 or ticked > 0
+        self._update_gauges()
+        return moved
+
+    def run(self, max_steps: Optional[int] = None) -> List[Request]:
+        """Lockstep to completion (or ``max_steps``); returns finished."""
+        steps = 0
+        while self.has_work:
+            if not self.step():
+                break                 # drained or stuck — state inspectable
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return self.finished
+
+    @property
+    def has_work(self) -> bool:
+        if len(self.intake):
+            return True
+        if self.handoff is not None and self.handoff.pending:
+            return True
+        return any(h.state is not ReplicaState.FAILED and h.engine.has_work
+                   for h in self.replicas)
+
+    # ------------------------------------------------------------ harvesting
+    @property
+    def finished(self) -> List[Request]:
+        """Finished requests across all replicas, by rid (deterministic)."""
+        out: List[Request] = []
+        for h in self.replicas:
+            out.extend(h.engine.finished)
+        return sorted(out, key=lambda r: r.rid)
+
+    @property
+    def shed(self) -> List[Request]:
+        """Every terminally shed request: fleet-boundary sheds (router),
+        intake deadline expiries, and replica-queue deadline expiries."""
+        out = list(self.router.shed) + list(self.intake.expired)
+        for h in self.replicas:
+            out.extend(h.engine.queue.expired)
+        return out
+
+    # ---------------------------------------------------------------- health
+    def kill_replica(self, idx: int) -> List[Request]:
+        """Fail replica ``idx`` and redrive its requests through the intake.
+
+        Returns the evacuated requests (already reset and re-enqueued,
+        oldest first).  Idempotent: a second kill returns []."""
+        h = self.replicas[idx]
+        if h.state is ReplicaState.FAILED:
+            return []
+        h.state = ReplicaState.FAILED
+        t = self._threads.get(h.idx)
+        if t is not None:
+            t.join(timeout=60.0)      # worker sees FAILED and exits
+            if t.is_alive():
+                raise RuntimeError(f"replica {idx} worker failed to stop")
+        victims = h.engine.evacuate()
+        for r in victims:
+            r.requeue()
+        if victims:
+            obs_metrics.counter("fleet.redrives").inc(len(victims))
+        for r in reversed(victims):   # front-insert keeps arrival order
+            self.intake.requeue(r)
+        self._update_gauges()
+        return victims
+
+    def drain_replica(self, idx: int) -> ReplicaHandle:
+        """Stop routing new work to replica ``idx``; in-flight work (queued
+        included) finishes normally."""
+        h = self.replicas[idx]
+        if h.state is ReplicaState.UP:
+            h.state = ReplicaState.DRAINING
+        return h
+
+    # --------------------------------------------------------------- threads
+    def start_workers(self) -> None:
+        """One stepping thread per live replica (plain-DP fleets only).
+
+        Dispatch stays on the submitting thread (``pump()``), which is the
+        single writer of the intake; replica queues cross threads only
+        through ``RequestQueue``'s append/popleft pairs."""
+        if self._threads:
+            raise RuntimeError("fleet workers already running")
+        if self.handoff is not None:
+            raise NotImplementedError(
+                "threaded fleets are plain DP today: adopting a handoff "
+                "into a stepping engine would race its block pool "
+                "(docs/FLEET.md)")
+        with self._lock:
+            self._stop_flag = False
+        for h in self.replicas:
+            if h.state is ReplicaState.FAILED:
+                continue
+            t = threading.Thread(target=self._worker, args=(h,),
+                                 name=f"fleet-replica-{h.idx}", daemon=True)
+            with self._lock:
+                self._threads[h.idx] = t
+            t.start()
+
+    def _worker(self, h: ReplicaHandle) -> None:
+        while True:
+            with self._lock:
+                stop = self._stop_flag
+            if stop or h.state is ReplicaState.FAILED:
+                return
+            if h.engine.has_work:
+                h.engine.step()
+            else:
+                time.sleep(5e-4)
+
+    def stop_workers(self) -> None:
+        with self._lock:
+            self._stop_flag = True
+        for t in list(self._threads.values()):
+            t.join(timeout=60.0)
+            if t.is_alive():
+                raise RuntimeError("fleet worker failed to stop")
+        with self._lock:
+            self._threads.clear()
+            self._stop_flag = False
+
+    # ----------------------------------------------------------------- gauges
+    def _update_gauges(self) -> None:
+        obs_metrics.gauge("fleet.replicas_up").set(
+            sum(1 for h in self.replicas if h.state is ReplicaState.UP))
+        obs_metrics.gauge("fleet.queue_depth").set(len(self.intake))

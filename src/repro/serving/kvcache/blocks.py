@@ -398,6 +398,73 @@ class BlockKVManager:
         self._update_gauges()
         return req
 
+    # ---------------------------------------------------------- export/import
+    def export_blocks(self, slot: int) -> List[Dict[str, np.ndarray]]:
+        """Raw pool leaves of the slot's first ``ceil(kv_len / block_size)``
+        blocks, in logical order — the KV export API behind the fleet's
+        disaggregated prefill→decode handoff (``serving/fleet/handoff.py``
+        entropy-codes each block with the cold tier's wire format).  Rows
+        past ``kv_len`` inside the last block are pool garbage; the decode
+        side's ``kv_len`` masking makes them unreachable, same invariant as
+        block reuse."""
+        req = self.requests[slot]
+        assert req is not None, f"export of free slot {slot}"
+        n = -(-int(self.kv_len[slot]) // self.block_size)
+        out: List[Dict[str, np.ndarray]] = []
+        for j in range(n):
+            blk = int(self.tables[slot, j])
+            leaves = jax.tree.map(np.asarray,
+                                  _read_block(self.pool, jnp.int32(blk)))
+            out.append(dict(leaves))
+        return out
+
+    def can_import(self, req: Request, kv_len: int, n_blocks: int) -> bool:
+        """Probe for ``import_blocks`` — free slot + claimable blocks for
+        the imported prefix AND the request's remaining generation."""
+        if not self._free_slots:
+            return False
+        need = kv_len + req.max_new_tokens
+        if need > self.max_len:
+            return False
+        nb = max(-(-need // self.block_size), n_blocks)
+        return nb <= len(self._free_blocks) + len(self._lru)
+
+    def import_blocks(self, req: Request,
+                      kv_len: int,
+                      blocks: List[Dict[str, np.ndarray]]) -> Optional[int]:
+        """Claim a slot + private blocks and install externally produced
+        block leaves (the decode half of the disaggregated handoff).
+
+        The imported blocks stay *private* — publishing another replica's
+        prefix blocks to this pool's chain would need the chain keys, and
+        prefix reuse across replicas is the router's job, not the pool's.
+        Returns the slot, or None when the batch or the pool cannot take the
+        request right now (the caller retries)."""
+        if not self.can_import(req, kv_len, len(blocks)):
+            return None
+        need = kv_len + req.max_new_tokens
+        nb = max(-(-need // self.block_size), len(blocks))
+        while len(self._free_blocks) < nb:
+            self._evict_one()
+        slot = self._free_slots.pop()
+        row = self.tables[slot]
+        row[:] = 0
+        private = self._slot_private[slot]
+        for j in range(nb):
+            blk = self._free_blocks.pop()
+            row[j] = blk
+            private.append(blk)
+            if j < len(blocks):
+                leaves = {name: jnp.asarray(arr)
+                          for name, arr in blocks[j].items()}
+                self.pool = _write_block(self.pool, jnp.int32(blk), leaves)
+        self.requests[slot] = req
+        self._pending[slot] = []
+        self.kv_len[slot] = 0
+        self._live[slot] = False
+        self.insert(slot, kv_len)
+        return slot
+
     # --------------------------------------------------------------- eviction
     def _evict_one(self) -> None:
         """Reclaim the LRU-oldest refcount-0 shared block: entropy-code it to

@@ -60,6 +60,45 @@ class _ColdLeaf:
         return sym.astype(np.uint8).reshape(self.shape)
 
 
+def encode_block_leaves(codec, leaves: Dict[str, np.ndarray]
+                        ) -> Tuple[Dict[str, object], int, int]:
+    """Entropy-code one block's leaves with ``codec``: uint8 code leaves get
+    per-leaf tables (the container-v2 rule — mixed leaves cannot share one
+    histogram), everything else is kept raw.  Returns ``(entry,
+    encoded_symbols, payload_bits)``.
+
+    This is the cold tier's storage format AND the fleet handoff's wire
+    format (``serving/fleet/handoff.py``): one codec round-trip, two
+    consumers, zero drift between what eviction persists and what a decode
+    replica receives."""
+    entry: Dict[str, object] = {}
+    nsym = 0
+    nbits = 0
+    for name, arr in leaves.items():
+        if arr.dtype == np.uint8:
+            flat = arr.reshape(-1)
+            freqs = entropy.symbol_frequencies(flat, NUM_SYMBOLS)
+            table = codec.build(freqs, 8)
+            stream, bits = table.encode(flat)
+            entry[name] = _ColdLeaf(stream, flat.size, arr.shape, table)
+            nsym += flat.size
+            nbits += bits
+        else:
+            entry[name] = arr.copy()     # bf16 scale/zero: raw
+    return entry, nsym, nbits
+
+
+def decode_block_leaves(entry: Dict[str, object]) -> Dict[str, np.ndarray]:
+    """Invert :func:`encode_block_leaves` back to numpy pool leaves."""
+    return {name: leaf.decode() if isinstance(leaf, _ColdLeaf) else leaf
+            for name, leaf in entry.items()}
+
+
+def entry_nbytes(entry: Dict[str, object]) -> int:
+    """Host bytes one encoded entry occupies (streams + tables + raw)."""
+    return sum(int(leaf.nbytes) for leaf in entry.values())
+
+
 class ColdBlockStore:
     """Host-side store of evicted shared blocks, keyed by prefix-chain key.
 
@@ -82,34 +121,17 @@ class ColdBlockStore:
 
     @property
     def nbytes(self) -> int:
-        total = 0
-        for leaves in self._entries.values():
-            for leaf in leaves.values():
-                total += leaf.nbytes
-        return total
+        return sum(entry_nbytes(entry) for entry in self._entries.values())
 
     def put(self, key: Hashable, leaves: Dict[str, np.ndarray]) -> None:
         """Store one block's per-layer leaves, e.g. k: (L, BS, KV, hs)."""
-        entry: Dict[str, object] = {}
-        for name, arr in leaves.items():
-            if arr.dtype == np.uint8:
-                flat = arr.reshape(-1)
-                freqs = entropy.symbol_frequencies(flat, NUM_SYMBOLS)
-                table = self.codec.build(freqs, 8)
-                stream, nbits = table.encode(flat)
-                entry[name] = _ColdLeaf(stream, flat.size, arr.shape, table)
-                self.encoded_symbols += flat.size
-                self.payload_bits += nbits
-            else:
-                entry[name] = arr.copy()     # bf16 scale/zero: raw
+        entry, nsym, nbits = encode_block_leaves(self.codec, leaves)
+        self.encoded_symbols += nsym
+        self.payload_bits += nbits
         self._entries[key] = entry
 
     def pop(self, key: Hashable) -> Dict[str, np.ndarray]:
-        entry = self._entries.pop(key)
-        out: Dict[str, np.ndarray] = {}
-        for name, leaf in entry.items():
-            out[name] = leaf.decode() if isinstance(leaf, _ColdLeaf) else leaf
-        return out
+        return decode_block_leaves(self._entries.pop(key))
 
     def drop(self, key: Hashable) -> None:
         self._entries.pop(key, None)

@@ -1,0 +1,8 @@
+"""Fleet serving suite: DP replicas, router, disaggregated handoff.
+
+Package so the fault-injection harness (:mod:`.faults`) is shared by the
+test modules via a relative import (pytest imports these as ``fleet.*``;
+tests/ itself is not a package — same pattern as ``tests/differential``).
+The harness is deliberately importable by downstream chaos tooling too:
+``from fleet.faults import FaultPlan, FaultHarness``.
+"""

@@ -1,0 +1,137 @@
+"""Deterministic fault injection for fleet serving (docs/FLEET.md).
+
+A :class:`FaultPlan` is a *schedule*, not a dice roll at runtime: every
+fault it describes is derived once from a seed (``FaultPlan.from_seed``)
+and then replayed against a **lockstep** :class:`~repro.serving.fleet.
+FleetDriver`, so a failing seed reproduces exactly — same kill step, same
+handoff delays, same admission vetoes.  Three fault classes:
+
+* ``kills[idx] = K`` — fail replica ``idx`` once *its engine* has taken
+  ``K`` fused decode steps (``ContinuousEngine.n_decode_steps``), i.e. mid
+  decode with real tokens already generated.  The driver evacuates and
+  redrives the victims; the no-loss/no-duplicate contract is what
+  ``test_fleet_faults.py`` pins.
+* ``handoff_delays[j] = d`` — the ``j``-th prefill→decode payload sits on
+  the wire for ``d`` extra pumps (installed as the coordinator's
+  ``transport``).
+* ``admission_rejects = M`` — the router's ``admission_gate`` vetoes the
+  first ``M`` (replica, request) placement attempts, forcing the
+  defer-requeue-retry path without any queue actually being full.
+
+:class:`FaultHarness` installs a plan on a driver and drives it to drain
+with a bounded-step, stuck-detection loop: if a step moves nothing AND the
+whole observable fleet state (intake, gate budget, handoff backlog, decode
+progress, finish/shed counts) is unchanged, it raises ``TimeoutError``
+instead of spinning — a regression that wedges the fleet fails fast with
+the state snapshot in the message.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Set
+
+import numpy as np
+
+from repro.serving.batching.request import Request
+from repro.serving.fleet import FleetDriver
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Seed-derived fault schedule (see module docstring for semantics)."""
+    kills: Dict[int, int] = dataclasses.field(default_factory=dict)
+    handoff_delays: Dict[int, int] = dataclasses.field(default_factory=dict)
+    admission_rejects: int = 0
+
+    @classmethod
+    def from_seed(cls, seed: int, *, n_replicas: int,
+                  kill: bool = True, kill_after: int = 5,
+                  n_delayed: int = 0, max_delay: int = 3,
+                  max_rejects: int = 0) -> "FaultPlan":
+        """Derive a plan from ``seed`` (stable across runs and platforms).
+
+        ``kill`` picks ONE victim replica (a plan never kills the whole
+        fleet — total loss of capacity is the ``no_replica`` shed test's
+        job, not a redrive scenario)."""
+        rng = np.random.default_rng([int(seed), 0xFA])
+        kills: Dict[int, int] = {}
+        if kill and n_replicas > 1:
+            kills[int(rng.integers(n_replicas))] = \
+                int(rng.integers(1, kill_after + 1))
+        delays = {j: int(rng.integers(1, max_delay + 1))
+                  for j in range(n_delayed)}
+        rejects = int(rng.integers(1, max_rejects + 1)) if max_rejects else 0
+        return cls(kills=kills, handoff_delays=delays,
+                   admission_rejects=rejects)
+
+
+class FaultHarness:
+    """Install a :class:`FaultPlan` on a lockstep driver and run it dry."""
+
+    def __init__(self, driver: FleetDriver, plan: FaultPlan):
+        self.driver = driver
+        self.plan = plan
+        self.rejects_left = plan.admission_rejects
+        self.n_rejected = 0               # vetoes actually exercised
+        self.n_handoffs = 0               # payloads seen by the transport
+        self.victims: List[Request] = []  # evacuated by triggered kills
+        self.n_steps = 0
+        self._killed: Set[int] = set()
+        if plan.admission_rejects:
+            driver.router.admission_gate = self._gate
+        if plan.handoff_delays:
+            if driver.handoff is None:
+                raise ValueError("plan delays handoffs but the driver is "
+                                 "not disaggregated")
+            driver.handoff.transport = self._transport
+
+    # ------------------------------------------------------------ fault hooks
+    def _gate(self, handle, req) -> bool:
+        if self.rejects_left > 0:
+            self.rejects_left -= 1
+            self.n_rejected += 1
+            return False
+        return True
+
+    def _transport(self, payload) -> int:
+        d = self.plan.handoff_delays.get(self.n_handoffs, 0)
+        self.n_handoffs += 1
+        return d
+
+    def _maybe_kill(self) -> None:
+        for idx, after in self.plan.kills.items():
+            if idx in self._killed:
+                continue
+            if self.driver.replicas[idx].engine.n_decode_steps >= after:
+                self._killed.add(idx)
+                self.victims.extend(self.driver.kill_replica(idx))
+
+    # ------------------------------------------------------------------ drive
+    def _fingerprint(self) -> tuple:
+        d = self.driver
+        return (len(d.intake), self.rejects_left,
+                d.handoff.pending if d.handoff is not None else 0,
+                tuple(h.engine.n_decode_steps for h in d.replicas),
+                len(d.finished), len(d.shed), tuple(sorted(self._killed)))
+
+    def run(self, max_steps: int = 5000) -> List[Request]:
+        """Lockstep the fleet to drain, firing plan kills between steps.
+
+        Raises ``TimeoutError`` on the step bound or on a no-progress step
+        that also left the fleet state fingerprint unchanged (stuck, not
+        merely quiet — e.g. an admission veto changes the gate budget, so
+        a deferred-but-retrying request never trips this)."""
+        prev = None
+        while self.driver.has_work:
+            moved = self.driver.step()
+            self._maybe_kill()
+            self.n_steps += 1
+            if self.n_steps >= max_steps:
+                raise TimeoutError(
+                    f"fleet not drained after {max_steps} steps: "
+                    f"{self._fingerprint()}")
+            fp = self._fingerprint()
+            if not moved and fp == prev and self.driver.has_work:
+                raise TimeoutError(f"fleet stuck (no progress): {fp}")
+            prev = fp
+        return self.driver.finished

@@ -1,0 +1,231 @@
+"""Fault-injection suite: the fleet's no-loss / no-duplicate contract.
+
+Every scenario drives a seed-derived :class:`~fleet.faults.FaultPlan`
+through a lockstep fleet and asserts the three invariants that make
+failures invisible to callers:
+
+* **no drop** — every submitted request finishes (or sheds for a *declared*
+  reason with the matching ``fleet.shed{reason}`` count);
+* **no duplicate** — each rid finishes exactly once, fleet-wide;
+* **bit-identity** — outputs equal the single-engine reference even when
+  the tokens were generated twice (kill mid-decode, redrive elsewhere).
+
+``rng_seed`` fans the plans out under ``--rng-repeats N`` (CI runs 3), so
+the kill step, delay pattern, and veto budget all vary per repeat while
+each repeat stays individually deterministic.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core.spec import KVCompressionSpec
+from repro.models import api
+from repro.obs import metrics as obs_metrics
+from repro.serving import engine as serving_engine
+from repro.serving.batching import ContinuousEngine, QueueFullError
+from repro.serving.fleet import FleetDriver
+
+from .faults import FaultHarness, FaultPlan
+
+MAX_LEN = 48
+
+
+@pytest.fixture(scope="module")
+def harness(rng_seed):
+    cfg = registry.reduced(registry.get("qwen3-1.7b"))
+    params = api.build(cfg).init(cfg, jax.random.PRNGKey(0))
+    sc = serving_engine.ServeConfig(max_len=MAX_LEN)
+    eng = serving_engine.Engine(cfg, params, sc)
+    return cfg, params, sc, eng, rng_seed
+
+
+def _jobs(cfg, seed, n=6, gen_min=6, gen_max=9):
+    rng = np.random.default_rng([seed, 7])
+    return [(rng.integers(0, cfg.vocab,
+                          (int(rng.integers(5, 21)),)).astype(np.int32),
+             int(rng.integers(gen_min, gen_max + 1)))
+            for _ in range(n)]
+
+
+def _refs(eng, jobs):
+    return [np.asarray(eng.generate(np.asarray(p)[None], g))[0].tolist()
+            for p, g in jobs]
+
+
+def _driver(cfg, params, sc, eng, **kw):
+    kw.setdefault("n_replicas", 3)
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("prefill_chunk", 4)
+    return FleetDriver(cfg, params, sc, steps=eng.steps, **kw)
+
+
+# ------------------------------------------------------------------- kills
+
+def test_kill_replica_mid_decode_no_loss_no_duplicate(harness):
+    cfg, params, sc, eng, seed = harness
+    jobs = _jobs(cfg, seed)
+    refs = _refs(eng, jobs)
+    plan = FaultPlan.from_seed(seed, n_replicas=3, kill=True, kill_after=5)
+    fd = _driver(cfg, params, sc, eng, policy="round-robin")
+    h = FaultHarness(fd, plan)
+    redrives0 = obs_metrics.counter("fleet.redrives").total()
+    rids = [fd.submit(p, g).rid for p, g in jobs]
+    fin = {r.rid: r for r in h.run()}
+
+    # gens >= 6 and a kill threshold <= 5 guarantee the victim replica was
+    # still decoding when it died — the kill really fired mid-stream
+    assert h.victims, f"plan {plan} never triggered"
+    assert sorted(fin) == sorted(rids)               # no drop, no duplicate
+    assert len(fd.finished) == len(jobs)
+    assert fd.shed == []
+    assert [fin[r].output for r in rids] == refs     # bit-identity across kill
+    for v in h.victims:
+        assert v.redrives == 1
+        assert fin[v.rid] is v                       # same object, re-finished
+    assert obs_metrics.counter("fleet.redrives").total() - redrives0 \
+        == len(h.victims)
+    # no victim re-finished on the dead replica (redrive went elsewhere)
+    dead = next(iter(plan.kills))
+    assert not ({v.rid for v in h.victims}
+                & {r.rid for r in fd.replicas[dead].engine.finished})
+
+
+# -------------------------------------------------------- admission rejects
+
+def test_admission_rejects_requeue_without_loss(harness):
+    cfg, params, sc, eng, seed = harness
+    jobs = _jobs(cfg, seed, n=5)
+    refs = _refs(eng, jobs)
+    plan = FaultPlan.from_seed(seed, n_replicas=3, kill=False, max_rejects=5)
+    assert plan.admission_rejects >= 1
+    fd = _driver(cfg, params, sc, eng, policy="least-loaded")
+    h = FaultHarness(fd, plan)
+    rejects0 = obs_metrics.counter("fleet.admission_rejects").total()
+    rids = [fd.submit(p, g).rid for p, g in jobs]
+    fin = {r.rid: r for r in h.run()}
+
+    assert h.n_rejected == plan.admission_rejects    # whole budget exercised
+    assert obs_metrics.counter("fleet.admission_rejects").total() - rejects0 \
+        == plan.admission_rejects
+    assert sorted(fin) == sorted(rids)
+    assert fd.shed == []                             # vetoes defer, never drop
+    assert [fin[r].output for r in rids] == refs
+
+
+# ----------------------------------------------------------- handoff delays
+
+def test_delayed_handoff_delivers_bit_identical(harness):
+    cfg, params, sc, eng, seed = harness
+    kv_spec = KVCompressionSpec.parse("bits=16,block=8")
+    jobs = _jobs(cfg, seed, n=4)
+    ref_ce = ContinuousEngine(cfg, params, sc, n_slots=2, prefill_chunk=4,
+                              steps=eng.steps, kv_spec=kv_spec)
+    ref_rids = [ref_ce.submit(p, g).rid for p, g in jobs]
+    ref_fin = {r.rid: r for r in ref_ce.run()}
+    refs = [ref_fin[r].output for r in ref_rids]
+
+    plan = FaultPlan.from_seed(seed, n_replicas=2, kill=False,
+                               n_delayed=3, max_delay=4)
+    fd = _driver(cfg, params, sc, eng, n_replicas=2, disaggregate=(1, 1),
+                 kv_spec=kv_spec)
+    h = FaultHarness(fd, plan)
+    rids = [fd.submit(p, g).rid for p, g in jobs]
+    fin = {r.rid: r for r in h.run()}
+
+    assert h.n_handoffs == len(jobs)                 # transport saw each one
+    assert fd.handoff.n_delivered == len(jobs)
+    assert fd.handoff.pending == 0
+    assert sorted(fin) == sorted(rids)
+    assert [fin[r].output for r in rids] == refs
+    # prefill replicas never decode; decode replica did all the tokens
+    assert fd.replicas[0].engine.n_decode_steps == 0
+    assert sum(len(r.output) for r in fd.replicas[1].engine.finished) \
+        == sum(len(o) for o in refs)
+
+
+# ------------------------------------------------------- shed{reason} counts
+
+def test_shed_deadline_metric_exact(harness):
+    cfg, params, sc, eng, seed = harness
+    fd = _driver(cfg, params, sc, eng, n_replicas=1)
+    before = obs_metrics.counter("fleet.shed").value(reason="deadline")
+    req = fd.submit(np.ones(6, np.int32), 4, deadline_s=1e-6)
+    time.sleep(0.01)
+    fd.run()
+    assert req.finish_reason == "deadline"
+    assert req in fd.shed
+    assert fd.finished == []
+    assert obs_metrics.counter("fleet.shed").value(reason="deadline") \
+        - before == 1
+
+
+def test_shed_queue_full_metric_exact(harness):
+    cfg, params, sc, eng, seed = harness
+    fd = _driver(cfg, params, sc, eng, n_replicas=1, max_intake=2)
+    before = obs_metrics.counter("fleet.shed").value(reason="queue_full")
+    fd.submit(np.ones(6, np.int32), 3)
+    fd.submit(np.ones(6, np.int32), 3)
+    with pytest.raises(QueueFullError):
+        fd.submit(np.ones(6, np.int32), 3)
+    assert obs_metrics.counter("fleet.shed").value(reason="queue_full") \
+        - before == 1
+    assert len(fd.shed) == 1 and fd.shed[0].finish_reason == "queue_full"
+    assert len(fd.run()) == 2                        # survivors still finish
+
+
+def test_shed_no_replica_metric_exact(harness):
+    cfg, params, sc, eng, seed = harness
+    fd = _driver(cfg, params, sc, eng, n_replicas=2)
+    fd.kill_replica(0)
+    fd.kill_replica(1)
+    before = obs_metrics.counter("fleet.shed").value(reason="no_replica")
+    req = fd.submit(np.ones(6, np.int32), 4)
+    fd.run()
+    assert req.finish_reason == "no_replica"
+    assert req in fd.shed
+    assert obs_metrics.counter("fleet.shed").value(reason="no_replica") \
+        - before == 1
+
+
+# ---------------------------------------------------------------- draining
+
+def test_draining_finishes_in_flight_but_accepts_nothing(harness):
+    cfg, params, sc, eng, seed = harness
+    jobs = _jobs(cfg, seed, n=6, gen_min=3, gen_max=5)
+    fd = _driver(cfg, params, sc, eng, policy="round-robin")
+    first = [fd.submit(p, g) for p, g in jobs[:3]]
+    fd.pump()                                        # place on all 3 replicas
+    drained = fd.drain_replica(0)
+    # nothing has stepped yet, so replica 0's share is still in its queue
+    in_flight_on_0 = {r.rid for r in fd.replicas[0].engine.queue._q}
+    assert in_flight_on_0                            # round-robin gave it work
+    late = [fd.submit(p, g) for p, g in jobs[3:]]
+    fin = {r.rid: r for r in fd.run()}
+    assert sorted(fin) == sorted(r.rid for r in first + late)  # nobody lost
+    done_on_0 = {r.rid for r in fd.replicas[0].engine.finished}
+    assert in_flight_on_0 <= done_on_0               # drained work finished
+    assert not done_on_0 & {r.rid for r in late}     # nothing new accepted
+    assert drained.accepting is False
+
+
+# ------------------------------------------------------------ plan derivation
+
+def test_fault_plan_seed_deterministic():
+    mk = lambda s: FaultPlan.from_seed(s, n_replicas=3, n_delayed=2,
+                                       max_rejects=5)
+    assert mk(3) == mk(3)
+    assert any(mk(a) != mk(b) for a, b in [(0, 1), (1, 2), (2, 3)])
+
+
+def test_harness_raises_on_stuck_fleet(harness):
+    cfg, params, sc, eng, seed = harness
+    fd = _driver(cfg, params, sc, eng, n_replicas=1)
+    # a gate that vetoes forever wedges dispatch; the harness must detect
+    # the unchanged fingerprint and raise instead of spinning to max_steps
+    fd.router.admission_gate = lambda h, r: False
+    fd.submit(np.ones(6, np.int32), 3)
+    with pytest.raises(TimeoutError, match="stuck"):
+        FaultHarness(fd, FaultPlan()).run(max_steps=50)

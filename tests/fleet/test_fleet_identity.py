@@ -1,0 +1,199 @@
+"""Fleet bit-identity: N replicas == 1 engine, token for token.
+
+The contract (docs/FLEET.md): a request's greedy output is a function of
+its prompt alone — never of replica count, router policy, which replica it
+landed on, or whether its KV crossed the prefill→decode wire.  Holds by
+construction (one shared ``ServeSteps`` ⇒ same jitted functions ⇒ same
+numerics; per-slot ``kv_len`` masking ⇒ lane independence), pinned here by
+property tests over (replica count, policy, trace seed) for both
+attention-cache families, plus the disaggregated path with a byte-level
+check of the handoff wire format.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core.spec import KVCompressionSpec
+from repro.models import api
+from repro.serving import engine as serving_engine
+from repro.serving.batching import ContinuousEngine, poisson_trace
+from repro.serving.fleet import POLICIES, FleetDriver
+from repro.serving.kvcache.cold import (decode_block_leaves,
+                                        encode_block_leaves)
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # dev extra absent: the fixed grid below runs
+    given = None
+
+MAX_LEN = 48
+
+
+def _cfg(family):
+    if family == "dense":
+        return registry.reduced(registry.get("qwen3-1.7b"))
+    cfg = registry.reduced(registry.get("qwen2-moe-a2.7b"))
+    # generous capacity keeps GShard token-dropping packing-independent
+    # (same knob as tests/test_continuous_batching.py)
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+
+
+@pytest.fixture(scope="module", params=["dense", "moe"])
+def harness(request):
+    cfg = _cfg(request.param)
+    params = api.build(cfg).init(cfg, jax.random.PRNGKey(0))
+    sc = serving_engine.ServeConfig(max_len=MAX_LEN)
+    eng = serving_engine.Engine(cfg, params, sc)
+    return cfg, params, sc, eng
+
+
+def _trace_jobs(cfg, seed, n, prefix=False):
+    """(prompt, gen) pairs off a Poisson trace (arrival times dropped —
+    identity is about content, the fault suite covers pacing)."""
+    kw = dict(prefix_pool=2, prefix_len=8) if prefix else {}
+    trace = poisson_trace(n, rate_per_s=1e9, prompt_max=16, gen_max=6,
+                          vocab=cfg.vocab, seed=seed, **kw)
+    return [(p, g) for _, p, g in trace]
+
+
+def _solo_refs(eng, jobs):
+    return [np.asarray(eng.generate(np.asarray(p)[None], g))[0].tolist()
+            for p, g in jobs]
+
+
+def _run_fleet(cfg, params, sc, eng, jobs, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("prefill_chunk", 4)
+    fd = FleetDriver(cfg, params, sc, steps=eng.steps, **kw)
+    rids = [fd.submit(p, g).rid for p, g in jobs]
+    fin = {r.rid: r for r in fd.run()}
+    assert sorted(fin) == sorted(rids)
+    return fd, [fin[r].output for r in rids]
+
+
+# --------------------------------------------------------------- DP fleets
+
+def _check_fleet_matches_single_engine(harness, n_replicas, policy, seed):
+    cfg, params, sc, eng = harness
+    jobs = _trace_jobs(cfg, seed, n=5)
+    refs = _solo_refs(eng, jobs)
+    _, outs = _run_fleet(cfg, params, sc, eng, jobs,
+                         n_replicas=n_replicas, policy=policy)
+    assert outs == refs
+
+
+if given is not None:
+    # property form: hypothesis explores (replica count, policy, trace seed)
+    # under the deterministic profile (tests/conftest.py)
+    @settings(max_examples=6)
+    @given(n_replicas=st.integers(1, 3), policy=st.sampled_from(POLICIES),
+           seed=st.integers(0, 3))
+    def test_fleet_matches_single_engine(harness, n_replicas, policy, seed):
+        _check_fleet_matches_single_engine(harness, n_replicas, policy, seed)
+else:
+    # no dev extra: same bounds as the strategies, fixed grid
+    @pytest.mark.parametrize("n_replicas,policy,seed", [
+        (1, "round-robin", 0), (1, "least-loaded", 1),
+        (2, "round-robin", 1), (2, "least-loaded", 2),
+        (3, "round-robin", 3), (3, "least-loaded", 0)])
+    def test_fleet_matches_single_engine(harness, n_replicas, policy, seed):
+        _check_fleet_matches_single_engine(harness, n_replicas, policy, seed)
+
+
+def test_fleet_identity_survives_prefix_shared_paged_traffic(harness):
+    """2-replica paged fleet with prefix sharing == 1 paged engine, on a
+    trace of shared system prompts (the sharing fast path must not leak
+    across replicas or requests)."""
+    cfg, params, sc, eng = harness
+    kv_spec = KVCompressionSpec.parse("bits=16,block=4,sharing")
+    jobs = _trace_jobs(cfg, seed=1, n=5, prefix=True)
+    ref = ContinuousEngine(cfg, params, sc, n_slots=2, prefill_chunk=4,
+                           steps=eng.steps, kv_spec=kv_spec)
+    ref_rids = [ref.submit(p, g).rid for p, g in jobs]
+    ref_fin = {r.rid: r for r in ref.run()}
+    refs = [ref_fin[r].output for r in ref_rids]
+    _, outs = _run_fleet(cfg, params, sc, eng, jobs, n_replicas=2,
+                         policy="least-loaded", kv_spec=kv_spec)
+    assert outs == refs
+
+
+# ------------------------------------------------------- disaggregated path
+
+@pytest.mark.parametrize("split,spec", [
+    ((1, 1), "bits=16,block=8"),
+    ((1, 2), "bits=8,codec=rans,block=8"),
+])
+def test_disaggregated_fleet_matches_single_paged_engine(harness, split,
+                                                         spec):
+    cfg, params, sc, eng = harness
+    kv_spec = KVCompressionSpec.parse(spec)
+    jobs = _trace_jobs(cfg, seed=2, n=4)
+    ref = ContinuousEngine(cfg, params, sc, n_slots=2, prefill_chunk=4,
+                           steps=eng.steps, kv_spec=kv_spec)
+    ref_rids = [ref.submit(p, g).rid for p, g in jobs]
+    ref_fin = {r.rid: r for r in ref.run()}
+    refs = [ref_fin[r].output for r in ref_rids]
+
+    fd, outs = _run_fleet(cfg, params, sc, eng, jobs,
+                          n_replicas=sum(split), disaggregate=split,
+                          kv_spec=kv_spec)
+    assert outs == refs
+    assert fd.handoff.n_delivered == len(jobs)       # every KV crossed the wire
+    assert fd.handoff.bytes_on_wire > 0
+
+
+def test_handoff_wire_format_round_trips_byte_equal(harness):
+    """decode(encode(blocks)) is byte-equal and dtype-preserving — the
+    cold-tier codec round-trip really is lossless as a wire format."""
+    cfg, params, sc, eng = harness
+    kv_spec = KVCompressionSpec.parse("bits=8,codec=rans,block=8")
+    captured = []
+    fd = FleetDriver(cfg, params, sc, steps=eng.steps, n_replicas=2,
+                     n_slots=2, prefill_chunk=4, disaggregate=(1, 1),
+                     kv_spec=kv_spec,
+                     handoff_transport=lambda p: captured.append(p) or 0)
+    for p, g in _trace_jobs(cfg, seed=3, n=3):
+        fd.submit(p, g)
+    fd.run()
+    assert captured
+    for payload in captured:
+        leaves = payload.decode_blocks()
+        assert len(leaves) == -(-payload.kv_len // kv_spec.block_size)
+        for block in leaves:
+            entry, _, _ = encode_block_leaves(fd.handoff.codec, block)
+            again = decode_block_leaves(entry)
+            assert set(again) == set(block)
+            for name in block:
+                assert again[name].dtype == block[name].dtype
+                np.testing.assert_array_equal(
+                    np.asarray(again[name]).view(np.uint8),
+                    np.asarray(block[name]).view(np.uint8))
+
+
+# -------------------------------------------------------- weight accounting
+
+def test_weight_bytes_accounts_share_vs_per_replica(harness):
+    cfg, params, sc, eng = harness
+    shared = FleetDriver(cfg, params, sc, steps=eng.steps, n_replicas=3,
+                         n_slots=1)
+    wb = shared.weight_bytes()
+    assert wb["mode"] == "share" and wb["copies"] == 1
+    assert wb["total_bytes"] == wb["bytes_per_copy"] > 0
+
+    copies = [jax.tree.map(lambda x: x + 0, params) for _ in range(2)]
+    per = FleetDriver(cfg, None, sc, steps=eng.steps, n_replicas=2,
+                      n_slots=1, replica_params=copies)
+    wb2 = per.weight_bytes()
+    assert wb2["mode"] == "per-replica" and wb2["copies"] == 2
+    assert wb2["total_bytes"] == 2 * wb["bytes_per_copy"]
+
+    # per-replica trees still serve bit-identically (same values, same steps)
+    jobs = _trace_jobs(cfg, seed=0, n=2)
+    refs = _solo_refs(eng, jobs)
+    rids = [per.submit(p, g).rid for p, g in jobs]
+    fin = {r.rid: r for r in per.run()}
+    assert [fin[r].output for r in rids] == refs
